@@ -1,0 +1,56 @@
+"""Paper Fig. 1/2: rank-1 update runtime — FAST vs FMM (vs direct, kernel).
+
+The paper times the first rank-1 update (Eq. A.6 / 31) for n = 2..35 and
+extrapolates. We time the same computation (one symmetric eigen-update of
+U D U^T + rho a a^T, singular-vector rotation included) for FAST, FMM,
+dense-direct and the Pallas kernel path, across a larger n range. CSV:
+  fig1_2/<method>/n=<n>,us,<notes>
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn, time_host_fn
+from repro.core.eigh_update import apply_update, make_plan
+from repro.core.fast import fast_cauchy_matmul
+
+SIZES = [8, 16, 32, 64, 128, 256, 512, 1024]
+FAST_MAX = 64  # beyond this FAST output is numerically meaningless (see tests)
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    for n in SIZES:
+        d = np.sort(rng.uniform(1, 9, n))
+        z = rng.normal(size=n)
+        rho = 1.3
+        u = np.linalg.qr(rng.normal(size=(n, n)))[0]
+        dj, zj, uj = jnp.asarray(d), jnp.asarray(z), jnp.asarray(u)
+        rhoj = jnp.asarray(rho)
+
+        for method, build_fmm in [("direct", False), ("fmm", True), ("kernel", False)]:
+            plan = make_plan(dj, zj, rhoj, rho_positive=True, build_fmm=build_fmm)
+            fn = jax.jit(lambda w, p=plan, m=method: apply_update(p, w, method=m))
+            us = time_fn(fn, uj)
+            emit(f"fig1_2/{method}/n={n}", us, "apply-only")
+
+            # full update including plan construction (secular solve etc.)
+            def full(dd, zz, w, m=method, bf=build_fmm):
+                p = make_plan(dd, zz, rhoj, rho_positive=True, build_fmm=bf)
+                return apply_update(p, w, method=m)
+
+            us_full = time_fn(jax.jit(full), dj, zj, uj)
+            emit(f"fig1_2/{method}_full/n={n}", us_full, "plan+apply")
+
+        if n <= FAST_MAX:
+            mu = np.sort(d + rng.uniform(1e-4, 1e-2, n))  # stand-in targets
+            us = time_host_fn(fast_cauchy_matmul, u, d, mu)
+            emit(f"fig1_2/fast/n={n}", us, "numpy-host; unstable-beyond-24 (documented)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Paper Fig. 3: update error (Eq. 32) vs Chebyshev order p, n = 25 fixed.
+
+Paper setup: 25x25 matrices, values U[0,1], error = Eq. 32. Deviation: our
+TPU-native FMM only engages above the dense crossover (n >= 96; below it the
+dispatcher uses the exact dense path and the error is p-independent at the
+fp64 floor), so the sweep runs at n = 256 where the multipole expansions are
+real. The paper's curve flattens near p = 20 at ~5e-2; ours floors at
+~1.5e-7 — NOT FMM truncation (which is below the floor for p >= 12; at
+p <= 8 the box capacity overflows on this sqrt-clustered spectrum and the
+exact dense fallback engages) but the intrinsic A A^T *squaring floor* of
+this algorithm family: eigen-gaps between clustered small squared singular
+values are ~1e-5 of ||D||, so eigenvectors keep ~eps*||D||/gap ~ 1e-7
+accuracy. Still >= 5 orders better than the paper's reported error.
+CSV: fig3/p=<p>,us,<error>
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.svd_update import svd_update
+
+N = 256
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    a_mat = rng.uniform(0, 1, size=(N, N))  # paper: values in [0,1] for Fig. 3
+    a = rng.normal(size=N)
+    b = rng.normal(size=N)
+    u, s, vt = np.linalg.svd(a_mat)
+    a_hat = a_mat + np.outer(a, b)
+    smax = np.linalg.svd(a_hat, compute_uv=False)[0]
+
+    args = (jnp.asarray(u), jnp.asarray(s), jnp.asarray(vt.T),
+            jnp.asarray(a), jnp.asarray(b))
+    for p in [4, 8, 12, 16, 20, 24, 28]:
+        res = svd_update(*args, method="fmm", fmm_p=p)
+        recon = np.asarray(res.u) @ np.diag(np.asarray(res.s)) @ np.asarray(res.v)[:, :N].T
+        err = np.max(np.abs(a_hat - recon)) / smax
+        us = time_fn(lambda *xs, pp=p: svd_update(*xs, method="fmm", fmm_p=pp), *args)
+        emit(f"fig3/p={p}", us, f"eq32_error={err:.3e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Framework-level benches: streaming-SVD optimizer primitives + compressed
+DP payloads + per-arch smoke step times (CPU; TPU numbers come from the
+dry-run roofline, EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro import configs
+from repro.core.svd_update import TruncatedSvd, svd_update_truncated
+from repro.models.registry import build_model
+from repro.optim.compression import compression_init, compress_decompress, wire_bytes
+from repro.optim.spectral import spectral_init, spectral_update_basis
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+
+    # streaming truncated SVD update (the optimizer-state primitive)
+    for (m, n, r) in [(1024, 1024, 16), (4096, 1024, 32), (8192, 8192, 64)]:
+        u0 = jnp.asarray(np.linalg.qr(rng.normal(size=(m, r)))[0])
+        v0 = jnp.asarray(np.linalg.qr(rng.normal(size=(n, r)))[0])
+        t = TruncatedSvd(u0, jnp.asarray(rng.uniform(1, 2, r)), v0)
+        a = jnp.asarray(rng.normal(size=m))
+        b = jnp.asarray(rng.normal(size=n))
+        us = time_fn(jax.jit(svd_update_truncated), t, a, b)
+        emit(f"framework/truncated_update/m={m}_n={n}_r={r}", us,
+             "Brand + Algorithm 6.1 inner solve")
+
+    # spectral basis maintenance per step
+    st = spectral_init(jax.random.PRNGKey(0), 2048, 2048, 32)
+    g = jnp.asarray(rng.normal(size=(2048, 2048)), jnp.float32)
+    us = time_fn(spectral_update_basis, st, g)
+    emit("framework/spectral_update/2048x2048_r32", us, "power-iter + rank-1 SVD update")
+
+    # compression payloads
+    for (m, n, r) in [(5120, 5120, 32), (8192, 29568, 64)]:
+        wb = wire_bytes(m, n, r)
+        cs = compression_init(jax.random.PRNGKey(0), m, n, r)
+        g = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+        us = time_fn(jax.jit(lambda s, gg: compress_decompress(s, gg)[0]), cs, g)
+        emit(f"framework/compress/m={m}_n={n}_r={r}", us,
+             f"wire_ratio={wb['ratio']:.1f}x")
+
+    # per-arch smoke train step (CPU wall time; correctness-level signal only)
+    from repro.configs.base import ShapeConfig
+
+    shape = ShapeConfig("bench", 32, 2, "train")
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_smoke(arch)
+        api = build_model(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        batch = {
+            k: jnp.asarray(rng.integers(0, cfg.vocab_size, v.shape), jnp.int32)
+            if v.dtype == jnp.int32
+            else jnp.asarray(rng.normal(size=v.shape) * 0.02, v.dtype)
+            for k, v in api.input_specs(shape)["batch"].items()
+        }
+        fn = jax.jit(jax.value_and_grad(api.train_loss))
+        us = time_fn(lambda p, bb: fn(p, bb)[0], params, batch)
+        emit(f"framework/smoke_step/{arch}", us, "reduced config, CPU")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Paper Table 1: per-phase complexity of the rank-1 SVD update.
+
+Times the three phases separately across n and fits the growth exponent:
+  phase A  O(n^2): reduction products (A b, A^T a, projections)
+  phase B  O(n^2): secular solve (all updated eigenvalues)
+  phase C  O(n^2 log 1/eps) total / O(n p) per Trummer instance:
+           singular-vector rotation U @ C via batched FMM
+CSV: table1/<phase>/n=<n>,us,<fit info on the largest size>
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.eigh_update import apply_update, make_plan
+from repro.core.secular import deflate, secular_solve
+
+SIZES = [128, 256, 512, 1024, 2048]
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    results = {"secular": [], "apply_fmm": [], "apply_direct": []}
+    for n in SIZES:
+        d = np.sort(rng.uniform(1, 9, n))
+        z = rng.normal(size=n)
+        rho = jnp.asarray(1.1)
+        dj, zj = jnp.asarray(d), jnp.asarray(z)
+        u = jnp.asarray(np.linalg.qr(rng.normal(size=(n, n)))[0])
+
+        @jax.jit
+        def secular_phase(dd, zz):
+            defl = deflate(dd, zz, rho)
+            dc = dd[defl.compact]
+            zc = defl.z[defl.compact]
+            return secular_solve(dc, zc, rho, defl.n_keep).mu
+
+        us = time_fn(secular_phase, dj, zj)
+        results["secular"].append(us)
+        emit(f"table1/secular/n={n}", us, "O(n^2) phase")
+
+        plan_f = make_plan(dj, zj, rho, rho_positive=True, build_fmm=True)
+        plan_d = make_plan(dj, zj, rho, rho_positive=True, build_fmm=False)
+        us_f = time_fn(jax.jit(lambda w: apply_update(plan_f, w, method="fmm")), u)
+        us_d = time_fn(jax.jit(lambda w: apply_update(plan_d, w, method="direct")), u)
+        results["apply_fmm"].append(us_f)
+        results["apply_direct"].append(us_d)
+        emit(f"table1/apply_fmm/n={n}", us_f, "O(n^2 p) total")
+        emit(f"table1/apply_direct/n={n}", us_d, "O(n^3) total")
+
+    # growth exponents over the last three points
+    ln = np.log(np.asarray(SIZES[-3:], float))
+    for phase, us_list in results.items():
+        ly = np.log(np.asarray(us_list[-3:]))
+        slope = np.polyfit(ln, ly, 1)[0]
+        emit(f"table1/exponent/{phase}", us_list[-1], f"n^{slope:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,101 @@
+"""Compressed data-parallel training on 8 (emulated) devices.
+
+Distributed-optimization demo of the paper-powered compressor: a small MLP
+regression trained with shard_map data parallelism where 2-D gradients cross
+the DP axis as rank-r factors (PowerSGD step + streaming-SVD long-horizon
+basis from core.svd_update), with per-worker error feedback. Compares loss
+against dense-psum DP and prints the wire-byte savings.
+
+NOTE: sets XLA_FLAGS *before* importing jax — run as a script, standalone.
+Run:  python examples/compressed_dp.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.svd_update import TruncatedSvd
+from repro.optim.compression import (
+    CompressionState,
+    compression_init,
+    compress_decompress,
+    wire_bytes,
+)
+
+M_IN, M_HID, RANK, STEPS, LR = 64, 128, 8, 300, 2.0
+
+
+def main():
+    mesh = jax.make_mesh((8,), ("data",))
+    rng = np.random.default_rng(0)
+    # low-rank target: the regime gradient compression exploits (real LM
+    # gradients are spectrally concentrated — see the spectral optimizer)
+    w_true = rng.normal(size=(M_IN, 4)) @ rng.normal(size=(4, M_HID))
+    x_all = jnp.asarray(rng.normal(size=(8, 64, M_IN)))          # per-shard batches
+    y_all = jnp.einsum("dbi,ih->dbh", x_all, jnp.asarray(w_true))
+
+    def loss_fn(w, x, y):
+        return jnp.mean((x @ w - y) ** 2)
+
+    params0 = jnp.zeros((M_IN, M_HID))
+    comp0 = compression_init(jax.random.PRNGKey(0), M_IN, M_HID, RANK)
+
+    # ---- dense DP baseline
+    def dense_step(w, x, y):
+        g = jax.grad(loss_fn)(w, x[0], y[0])
+        g = jax.lax.pmean(g, "data")
+        return (w - LR * g)[None]
+
+    dense_fn = jax.jit(shard_map(
+        dense_step, mesh=mesh, in_specs=(P(), P("data"), P("data")),
+        out_specs=P(None)))
+
+    # ---- compressed DP
+    def comp_step(w, comp, x, y):
+        g = jax.grad(loss_fn)(w, x[0], y[0])
+        comp = comp._replace(error=comp.error[0])  # unwrap per-shard leading axis
+        g_hat, comp2 = compress_decompress(comp, g, axis_name="data")
+        w2 = w - LR * g_hat
+        return w2[None], comp2._replace(error=comp2.error[None])
+
+    comp_specs = CompressionState(v_basis=P(), error=P("data"),
+                                  tracker=TruncatedSvd(P(), P(), P()))
+    comp_fn = jax.jit(shard_map(
+        comp_step, mesh=mesh,
+        in_specs=(P(), comp_specs._replace(error=P("data")), P("data"), P("data")),
+        out_specs=(P(None), comp_specs)))
+
+    w_d = params0
+    w_c = params0
+    comp = comp0._replace(error=jnp.zeros((8, M_IN, M_HID)))
+    for step in range(STEPS):
+        w_d = dense_fn(w_d, x_all, y_all)[0]
+        w2, comp = comp_fn(w_c, comp, x_all, y_all)
+        w_c = w2[0]
+
+    ld = float(jnp.mean((x_all @ w_d - y_all) ** 2))
+    lc = float(jnp.mean((x_all @ w_c - y_all) ** 2))
+    wb = wire_bytes(M_IN, M_HID, RANK)
+    print(f"devices               : {jax.device_count()}")
+    print(f"dense-DP final loss   : {ld:.5f}")
+    print(f"compressed final loss : {lc:.5f}")
+    print(f"wire bytes/layer/step : {wb['dense']:,} -> {wb['compressed']:,} "
+          f"({wb['ratio']:.1f}x smaller)")
+    assert lc < 0.05 * float(jnp.mean(y_all ** 2)), "compressed DP failed to converge"
+    assert lc < 2.0 * ld + 1e-6, "compressed DP much worse than dense DP"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

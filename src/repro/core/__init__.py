@@ -1,0 +1,59 @@
+"""Core numerics: the paper's contribution (fast rank-1 SVD update).
+
+Layers (bottom-up):
+  cheb         — Chebyshev nodes / Lagrange operators (paper App. D.1)
+  secular      — secular equation solver + deflation + Loewner weights (§3.1)
+  cauchy       — direct (stable) Cauchy products (§3.2.1, Trummer's problem)
+  fmm          — TPU-native batched Chebyshev FMM (§5, App. D)
+  fast         — Gerasoulis FAST baseline (§4, App. C)
+  eigh_update  — symmetric diag+rank-1 eigen-update (Algorithm 6.2)
+  svd_update   — full rank-1 SVD update (Algorithm 6.1) + streaming truncated
+"""
+
+from repro.core.cauchy import (
+    cauchy_matmul,
+    cauchy_matmul_stable,
+    cauchy_matrix,
+    cauchy_matvec,
+)
+from repro.core.eigh_update import (
+    EighUpdatePlan,
+    apply_update,
+    eigenvalues,
+    eigh_update,
+    make_plan,
+    materialize_q,
+)
+from repro.core.fmm import FmmPlan, build_plan, fmm_apply, fmm_error_bound, fmm_matvec
+from repro.core.secular import deflate, loewner_zhat, secular_solve
+from repro.core.svd_update import (
+    SvdUpdateResult,
+    TruncatedSvd,
+    svd_update,
+    svd_update_truncated,
+)
+
+__all__ = [
+    "cauchy_matmul",
+    "cauchy_matmul_stable",
+    "cauchy_matrix",
+    "cauchy_matvec",
+    "EighUpdatePlan",
+    "apply_update",
+    "eigenvalues",
+    "eigh_update",
+    "make_plan",
+    "materialize_q",
+    "FmmPlan",
+    "build_plan",
+    "fmm_apply",
+    "fmm_error_bound",
+    "fmm_matvec",
+    "deflate",
+    "loewner_zhat",
+    "secular_solve",
+    "SvdUpdateResult",
+    "TruncatedSvd",
+    "svd_update",
+    "svd_update_truncated",
+]

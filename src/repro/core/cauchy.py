@@ -1,0 +1,148 @@
+"""Direct Cauchy-matrix products (Trummer's problem, paper §3.2.1).
+
+The Cauchy matrix of the paper (Eq. 18) is ``C[j, i] = 1 / (lambda_j - mu_i)``
+with sources ``lambda`` (old eigenvalues) and targets ``mu`` (updated
+eigenvalues). Updating singular vectors is ``U2 = U1 @ C`` — n Trummer
+instances sharing one geometry.
+
+Two evaluation paths:
+
+* ``cauchy_matmul``     — raw coordinates; fine when sources and targets are
+  well separated relative to eps.
+* ``cauchy_matmul_stable`` — anchored representation of targets
+  (mu_i = src[anchor_i] + tau_i) so denominators near poles are computed
+  without cancellation. This is the path the SVD updater uses.
+
+Both are O(R * N * M) and memory-chunked over targets so big problems do not
+materialize an (N, M) matrix more than a chunk at a time.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "cauchy_matrix",
+    "cauchy_matvec",
+    "cauchy_matmul",
+    "cauchy_matmul_stable",
+    "cauchy_colnorms_stable",
+]
+
+
+def cauchy_matrix(src: jax.Array, tgt: jax.Array) -> jax.Array:
+    """C[j, i] = 1 / (src_j - tgt_i)."""
+    return 1.0 / (src[:, None] - tgt[None, :])
+
+
+def cauchy_matvec(weights: jax.Array, src: jax.Array, tgt: jax.Array) -> jax.Array:
+    """f(tgt_i) = sum_j weights_j / (src_j - tgt_i)."""
+    return cauchy_matmul(weights[None, :], src, tgt)[0]
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def cauchy_matmul(w: jax.Array, src: jax.Array, tgt: jax.Array, *, chunk: int = 2048) -> jax.Array:
+    """out[r, i] = sum_j w[r, j] / (src_j - tgt_i).   w: (R, N) -> (R, M)."""
+    r_dim, n = w.shape
+    m = tgt.shape[0]
+    if m <= chunk:
+        c = 1.0 / (src[:, None] - tgt[None, :])
+        return w @ c
+
+    pad = (-m) % chunk
+    tgt_p = jnp.pad(tgt, (0, pad), constant_values=1.0)
+    n_chunks = (m + pad) // chunk
+    tgt_c = tgt_p.reshape(n_chunks, chunk)
+
+    def body(carry, tgt_blk):
+        c = 1.0 / (src[:, None] - tgt_blk[None, :])
+        return carry, w @ c
+
+    _, out = lax.scan(body, 0, tgt_c)
+    out = jnp.moveaxis(out, 0, 1).reshape(r_dim, n_chunks * chunk)
+    return out[:, :m]
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def cauchy_matmul_stable(
+    w: jax.Array,
+    src: jax.Array,
+    anchor: jax.Array,
+    tau: jax.Array,
+    *,
+    src_valid: jax.Array | None = None,
+    tgt_valid: jax.Array | None = None,
+    chunk: int = 2048,
+) -> jax.Array:
+    """out[r, i] = sum_j w[r, j] / (src_j - mu_i),  mu_i = src[anchor_i] + tau_i.
+
+    Denominator computed as (src_j - src[anchor_i]) - tau_i: exact pole
+    differences plus a small offset — no cancellation when mu_i hugs a pole.
+    Invalid sources/targets (deflation padding) are masked out / zeroed.
+    """
+    r_dim, n = w.shape
+    m = anchor.shape[0]
+    if src_valid is None:
+        src_valid = jnp.ones((n,), bool)
+    if tgt_valid is None:
+        tgt_valid = jnp.ones((m,), bool)
+    w = jnp.where(src_valid[None, :], w, 0.0)
+    anchor_vals = src[anchor]
+
+    def block(anchor_vals_b, tau_b, tgt_valid_b):
+        delta = (src[:, None] - anchor_vals_b[None, :]) - tau_b[None, :]
+        safe = jnp.where(delta == 0.0, 1.0, delta)
+        c = jnp.where(src_valid[:, None] & tgt_valid_b[None, :] & (delta != 0.0), 1.0 / safe, 0.0)
+        return w @ c
+
+    if m <= chunk:
+        return block(anchor_vals, tau, tgt_valid)
+
+    pad = (-m) % chunk
+    av = jnp.pad(anchor_vals, (0, pad))
+    tv = jnp.pad(tau, (0, pad))
+    vv = jnp.pad(tgt_valid, (0, pad), constant_values=False)
+    n_chunks = (m + pad) // chunk
+
+    def body(carry, xs):
+        a_b, t_b, v_b = xs
+        return carry, block(a_b, t_b, v_b)
+
+    _, out = lax.scan(
+        body, 0, (av.reshape(n_chunks, chunk), tv.reshape(n_chunks, chunk), vv.reshape(n_chunks, chunk))
+    )
+    out = jnp.moveaxis(out, 0, 1).reshape(r_dim, n_chunks * chunk)
+    return out[:, :m]
+
+
+def cauchy_colnorms_stable(
+    zhat: jax.Array,
+    src: jax.Array,
+    anchor: jax.Array,
+    tau: jax.Array,
+    *,
+    src_valid: jax.Array | None = None,
+    tgt_valid: jax.Array | None = None,
+) -> jax.Array:
+    """Euclidean norms of the scaled Cauchy columns (paper Eq. 18 scaling).
+
+    ||c_i||^2 = sum_j zhat_j^2 / (src_j - mu_i)^2, stable denominators.
+    Invalid targets get norm 1 (their columns are identity passthroughs).
+    """
+    n = src.shape[0]
+    m = anchor.shape[0]
+    if src_valid is None:
+        src_valid = jnp.ones((n,), bool)
+    if tgt_valid is None:
+        tgt_valid = jnp.ones((m,), bool)
+    anchor_vals = src[anchor]
+    delta = (src[:, None] - anchor_vals[None, :]) - tau[None, :]
+    safe = jnp.where(delta == 0.0, 1.0, delta)
+    inv2 = jnp.where(src_valid[:, None] & (delta != 0.0), 1.0 / (safe * safe), 0.0)
+    nrm2 = jnp.sum((zhat * zhat)[:, None] * inv2, axis=0)
+    nrm = jnp.sqrt(nrm2)
+    return jnp.where(tgt_valid, nrm, 1.0)

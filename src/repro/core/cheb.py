@@ -1,0 +1,45 @@
+"""Chebyshev nodes and Lagrange interpolation operators (paper App. D.1).
+
+Shared by the FMM (core/fmm.py) and its tests. Nodes follow the paper's
+Eq. (D.1):  t_i = cos((2i-1)/p * pi/2), i = 1..p  (first-kind Chebyshev
+nodes on [-1, 1]).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["cheb_nodes", "lagrange_eval", "lagrange_matrix"]
+
+
+def cheb_nodes(p: int, dtype=jnp.float64) -> jax.Array:
+    """First-kind Chebyshev nodes, paper Eq. (D.1), ascending."""
+    i = jnp.arange(1, p + 1, dtype=dtype)
+    t = jnp.cos((2.0 * i - 1.0) / (2.0 * p) * jnp.pi)
+    return t[::-1]  # ascending
+
+
+def lagrange_eval(t: jax.Array, x: jax.Array) -> jax.Array:
+    """L[q, k] = u_q(x_k): Lagrange basis at nodes ``t`` evaluated at ``x``.
+
+    Paper Eq. (D.2). Direct product form — stable for p <= ~40 in f64.
+    x may be any shape; output is (p, *x.shape).
+    """
+    p = t.shape[0]
+    xf = x.reshape(-1)
+    # num[q, k] = prod_{j != q} (x_k - t_j); den[q] = prod_{j != q} (t_q - t_j)
+    diff_x = xf[None, :] - t[:, None]  # (p=j, K)
+    eye = jnp.eye(p, dtype=bool)
+    # for each q: product over j != q of diff_x[j, k]
+    diff_x_b = jnp.broadcast_to(diff_x[None, :, :], (p, p, xf.shape[0]))
+    num = jnp.prod(jnp.where(eye[:, :, None], 1.0, diff_x_b), axis=1)  # (p=q, K)
+    diff_t = t[:, None] - t[None, :]
+    den = jnp.prod(jnp.where(eye, 1.0, diff_t), axis=1)  # (p,)
+    out = num / den[:, None]
+    return out.reshape((p,) + x.shape)
+
+
+def lagrange_matrix(t: jax.Array, x: jax.Array) -> jax.Array:
+    """Interpolation matrix P[k, q] = u_q(x_k): f(x) ≈ P @ f(t)."""
+    return jnp.moveaxis(lagrange_eval(t, x), 0, -1)

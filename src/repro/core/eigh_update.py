@@ -1,0 +1,248 @@
+"""Symmetric diagonal-plus-rank-1 eigen-update (paper Algorithm 6.2).
+
+Computes the eigendecomposition of ``diag(d) + rho z z^T`` and exposes the
+eigenvector rotation Q as a *structured operator* (permutation ∘ deflation
+rotations ∘ scaled-Cauchy matrix), so the singular-vector update
+``U_new = U @ Q`` (paper Eq. 10/20) can be evaluated:
+
+* ``method="direct"`` — dense stable Cauchy product, O(m n^2);
+* ``method="fmm"``    — batched Chebyshev FMM, O(m n p) (paper §5);
+* ``method="kernel"`` — Pallas on-the-fly Cauchy kernel (TPU hot path).
+
+The plan/apply split mirrors how the framework uses it: one plan, several
+applies (U update, Q materialization for the sign fix, diagnostics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cauchy as _cauchy
+from repro.core import fmm as _fmm
+from repro.core.secular import (
+    SecularRoots,
+    apply_givens_columns,
+    deflate,
+    loewner_zhat,
+    secular_solve,
+)
+
+__all__ = ["EighUpdatePlan", "make_plan", "eigenvalues", "apply_update", "materialize_q", "eigh_update"]
+
+_FMM_MIN_N = 96  # below this the FMM tree is pointless; fall back to direct
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "sort_idx",
+        "givens_a",
+        "givens_b",
+        "givens_c",
+        "givens_s",
+        "any_rot",
+        "compact",
+        "dc",
+        "zc",
+        "rho",
+        "zhat",
+        "mu",
+        "anchor",
+        "tau",
+        "valid",
+        "colnorm",
+        "mu_full",
+        "out_sort",
+        "fmm",
+    ],
+    meta_fields=["n", "negated", "has_fmm"],
+)
+@dataclasses.dataclass(frozen=True)
+class EighUpdatePlan:
+    sort_idx: jax.Array   # (n,) ascending-d permutation of the (possibly negated) problem
+    givens_a: jax.Array
+    givens_b: jax.Array
+    givens_c: jax.Array
+    givens_s: jax.Array
+    any_rot: jax.Array
+    compact: jax.Array    # retained-first permutation (on sorted problem)
+    dc: jax.Array         # (n,) sorted+compacted poles
+    zc: jax.Array         # (n,) merged z, compacted
+    rho: jax.Array        # () positive rho of the solved problem
+    zhat: jax.Array       # (n,) Loewner weights (0 on padding)
+    mu: jax.Array         # (n,) secular roots (compacted positions)
+    anchor: jax.Array     # (n,) int32
+    tau: jax.Array        # (n,)
+    valid: jax.Array      # (n,) bool
+    colnorm: jax.Array    # (n,) scaled-Cauchy column norms (1 on padding)
+    mu_full: jax.Array    # (n,) eigenvalues in compacted positions
+    out_sort: jax.Array   # (n,) final ascending order
+    fmm: Any              # FmmPlan or None
+    n: int
+    negated: bool         # problem was negated to make rho positive
+    has_fmm: bool
+
+
+def make_plan(
+    d: jax.Array,
+    z: jax.Array,
+    rho: jax.Array,
+    *,
+    rho_positive: bool,
+    fmm_p: int = 20,
+    build_fmm: bool = False,
+    deflate_rtol: float | None = None,
+) -> EighUpdatePlan:
+    """Build the structured eigen-update operator for ``diag(d) + rho z z^T``.
+
+    ``rho_positive`` must reflect the *static* sign of rho (in the SVD update
+    the two 2x2 Schur eigenvalues have fixed signs). For rho < 0 the problem
+    is negated: eig(D + rho zz^T) = -eig(-D + |rho| zz^T), same eigenvectors.
+    """
+    n = d.shape[0]
+    negated = not rho_positive
+    d_w = -d if negated else d
+    rho_w = -rho if negated else rho
+
+    sort_idx = jnp.argsort(d_w).astype(jnp.int32)
+    ds = d_w[sort_idx]
+    zs = z[sort_idx]
+
+    defl = deflate(ds, zs, rho_w, rtol=deflate_rtol)
+    dc = ds[defl.compact]
+    zc = defl.z[defl.compact]
+
+    roots = secular_solve(dc, zc, rho_w, defl.n_keep)
+    zhat = loewner_zhat(dc, zc, rho_w, roots)
+    colnorm = _cauchy.cauchy_colnorms_stable(
+        zhat, dc, roots.anchor, roots.tau, src_valid=roots.valid, tgt_valid=roots.valid
+    )
+    mu_full = jnp.where(roots.valid, roots.mu, dc)
+    out_sort = jnp.argsort(mu_full, stable=True).astype(jnp.int32)
+
+    fmm_plan = None
+    use_fmm = build_fmm and n >= _FMM_MIN_N
+    if use_fmm:
+        fmm_plan = _fmm.build_plan(
+            dc,
+            mu_full,
+            p=fmm_p,
+            src_valid=roots.valid,
+            tgt_valid=roots.valid,
+            tgt_anchor=roots.anchor,
+            tgt_tau=roots.tau,
+        )
+
+    return EighUpdatePlan(
+        sort_idx=sort_idx,
+        givens_a=defl.givens_a,
+        givens_b=defl.givens_b,
+        givens_c=defl.givens_c,
+        givens_s=defl.givens_s,
+        any_rot=defl.any_rot,
+        compact=defl.compact,
+        dc=dc,
+        zc=zc,
+        rho=rho_w,
+        zhat=zhat,
+        mu=roots.mu,
+        anchor=roots.anchor,
+        tau=roots.tau,
+        valid=roots.valid,
+        colnorm=colnorm,
+        mu_full=mu_full,
+        out_sort=out_sort,
+        fmm=fmm_plan,
+        n=n,
+        negated=negated,
+        has_fmm=use_fmm,
+    )
+
+
+def eigenvalues(plan: EighUpdatePlan) -> jax.Array:
+    """Eigenvalues of diag(d) + rho zz^T, ascending."""
+    mu = plan.mu_full[plan.out_sort]
+    if plan.negated:
+        mu = -mu[::-1]
+    return mu
+
+
+def _cauchy_block(plan: EighUpdatePlan, wc: jax.Array, method: str) -> jax.Array:
+    """out[:, i] = sum_j wc[:, j] * zhat_j / (dc_j - mu_i), columns /colnorm."""
+    wz = wc * plan.zhat[None, :]
+    if method == "fmm" and plan.has_fmm:
+        # fmm computes sum wz/(mu_i - dc_j); Cauchy convention flips the sign.
+        # Pathological spectra that overflow the static box capacity fall back
+        # to the dense stable product (correctness safety net, see DESIGN.md).
+        def _via_fmm(w_in):
+            return -_fmm.fmm_apply(plan.fmm, w_in)
+
+        def _via_dense(w_in):
+            return _cauchy.cauchy_matmul_stable(
+                w_in, plan.dc, plan.anchor, plan.tau,
+                src_valid=plan.valid, tgt_valid=plan.valid,
+            )
+
+        out = jax.lax.cond(plan.fmm.overflow, _via_dense, _via_fmm, wz)
+    elif method == "kernel":
+        from repro.kernels import ops as _kops
+
+        out = _kops.cauchy_matmul_stable(
+            wz, plan.dc, plan.anchor, plan.tau,
+            src_valid=plan.valid, tgt_valid=plan.valid,
+        )
+    else:
+        out = _cauchy.cauchy_matmul_stable(
+            wz, plan.dc, plan.anchor, plan.tau,
+            src_valid=plan.valid, tgt_valid=plan.valid,
+        )
+    return out / plan.colnorm[None, :]
+
+
+@partial(jax.jit, static_argnames=("method",))
+def apply_update(plan: EighUpdatePlan, w: jax.Array, *, method: str = "direct") -> jax.Array:
+    """Compute ``w @ Q`` where Q's columns are the eigenvectors (ascending mu).
+
+    w: (m, n). The structured pipeline: column permutation (sort) → deflation
+    rotations → compaction → scaled-Cauchy product on the retained block with
+    deflated columns passing through → final eigenvalue ordering.
+    """
+    ws = w[:, plan.sort_idx]
+    ws = apply_givens_columns(ws, plan.givens_a, plan.givens_b, plan.givens_c, plan.givens_s, plan.any_rot)
+    wc = ws[:, plan.compact]
+
+    cau = _cauchy_block(plan, wc, method)
+    out_c = jnp.where(plan.valid[None, :], cau, wc)
+    out = out_c[:, plan.out_sort]
+    if plan.negated:
+        out = out[:, ::-1]
+    return out
+
+
+def materialize_q(plan: EighUpdatePlan, *, method: str = "direct", dtype=None) -> jax.Array:
+    """Materialize the n x n eigenvector rotation Q (ascending-mu columns)."""
+    dt = dtype or plan.dc.dtype
+    return apply_update(plan, jnp.eye(plan.n, dtype=dt), method=method)
+
+
+def eigh_update(
+    u: jax.Array,
+    d: jax.Array,
+    z: jax.Array,
+    rho: jax.Array,
+    *,
+    rho_positive: bool,
+    method: str = "direct",
+    fmm_p: int = 20,
+):
+    """(mu, U_new) for  U diag(d) U^T + rho (Uz)(Uz)^T = U_new diag(mu) U_new^T.
+
+    Matches paper Algorithm 6.2 (with z already projected: z = U^T a_1).
+    """
+    plan = make_plan(d, z, rho, rho_positive=rho_positive, build_fmm=(method == "fmm"), fmm_p=fmm_p)
+    return eigenvalues(plan), apply_update(plan, u, method=method)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+cauchy_matmul   — on-the-fly U1 @ C(lambda, mu) (Trummer, MXU)
+secular_newton  — in-VMEM secular-equation bisection+Newton (VPU)
+nearfield       — FMM near-field block-tridiagonal product (MXU)
+
+Each has a pure-jnp oracle in ref.py; ops.py is the dispatching jit wrapper
+(interpret=True on CPU, Mosaic on TPU). core.eigh_update routes here via
+method="kernel".
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

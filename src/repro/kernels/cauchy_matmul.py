@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: on-the-fly Cauchy matrix product (Trummer hot spot).
+
+Computes  out[r, i] = sum_j w[r, j] / ((src_j - anchor_i) - tau_i) * tmask_i
+
+The Cauchy matrix is *generated in VMEM* from the pole/root vectors and fed
+straight to the MXU — it never exists in HBM. Per (BR, BM) output tile the
+HBM traffic is O(BR*BN + BN + BM) instead of O(BN*BM) for a materialized C:
+this moves the dense update from memory-bound to compute-bound on TPU
+(roofline analysis in EXPERIMENTS.md §Perf).
+
+Tiling: grid (R/BR, M/BM, N/BN), accumulation over the innermost N axis via
+output revisiting. Block sizes default to MXU-aligned 128/256/512.
+
+Stable denominators: targets are passed in anchored form
+(mu_i = anchor_vals_i + tau_i, anchor values gathered *outside*), matching
+core.cauchy.cauchy_matmul_stable — near-pole accuracy is preserved.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["cauchy_matmul_pallas"]
+
+
+def _kernel(w_ref, src_ref, av_ref, tau_ref, tmask_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = w_ref[...]            # (BR, BN)
+    src = src_ref[...]        # (1, BN)
+    av = av_ref[...]          # (1, BM)
+    tau = tau_ref[...]        # (1, BM)
+    tm = tmask_ref[...]       # (1, BM)
+
+    # on-the-fly Cauchy tile: (BN, BM)
+    denom = (src[0, :, None] - av[0, None, :]) - tau[0, None, :]
+    safe = jnp.where(denom == 0.0, 1.0, denom)
+    c = jnp.where(denom != 0.0, 1.0 / safe, 0.0) * tm[0, None, :]
+    out_ref[...] += jnp.dot(w, c, preferred_element_type=out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_r", "block_m", "block_n", "interpret")
+)
+def cauchy_matmul_pallas(
+    w: jax.Array,
+    src: jax.Array,
+    anchor_vals: jax.Array,
+    tau: jax.Array,
+    tgt_mask: jax.Array,
+    *,
+    block_r: int = 128,
+    block_m: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[r, i] = sum_j w[r, j] / ((src_j - anchor_vals_i) - tau_i).
+
+    Invalid sources must be pre-zeroed in ``w`` (weights carry the mask);
+    invalid targets are zeroed via ``tgt_mask``.
+    """
+    r, n = w.shape
+    m = anchor_vals.shape[0]
+    dt = w.dtype
+
+    br = min(block_r, max(8, r))
+    bm = min(block_m, max(8, m))
+    bn = min(block_n, max(8, n))
+
+    pad_r = (-r) % br
+    pad_m = (-m) % bm
+    pad_n = (-n) % bn
+
+    # pad with values that cannot create zero denominators
+    w_p = jnp.pad(w, ((0, pad_r), (0, pad_n)))
+    src_p = jnp.pad(src, (0, pad_n), constant_values=jnp.asarray(1e30, dt))[None, :]
+    av_p = jnp.pad(anchor_vals, (0, pad_m), constant_values=jnp.asarray(-1e30, dt))[None, :]
+    tau_p = jnp.pad(tau, (0, pad_m))[None, :]
+    tm_p = jnp.pad(tgt_mask.astype(dt), (0, pad_m))[None, :]
+
+    rp, np_ = w_p.shape
+    mp = av_p.shape[1]
+    grid = (rp // br, mp // bm, np_ // bn)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bn), lambda i, j, k: (i, k)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, k)),
+            pl.BlockSpec((1, bm), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, bm), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, bm), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bm), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rp, mp), dt),
+        interpret=interpret,
+    )(w_p, src_p, av_p, tau_p, tm_p)
+    return out[:r, :m]

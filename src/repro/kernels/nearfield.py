@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: FMM near-field block products with on-the-fly kernels.
+
+The FMM near field is a block-tridiagonal Cauchy product: each leaf box's
+targets interact directly with sources of boxes (b-1, b, b+1). The jnp path
+precomputes ``near_inv`` (nb, 3*cap, capt) in HBM; this kernel instead
+generates each (3*cap, capt) inverse-distance block in VMEM from the gathered
+coordinates and contracts on the MXU, removing the near_inv HBM residency
+(the dominant memory term of an FMM apply at large N — see EXPERIMENTS.md).
+
+Grid: (nb, R/BR). Stable denominators via anchored targets, matching
+core.fmm.build_plan.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["nearfield_pallas"]
+
+
+def _kernel(w_ref, x_ref, av_ref, tau_ref, tmask_ref, out_ref):
+    w = w_ref[...][:, 0, :]       # (BR, 3cap) — weights already source-masked
+    x = x_ref[...][0]             # (3cap,)
+    av = av_ref[...][0]           # (capt,)
+    tau = tau_ref[...][0]         # (capt,)
+    tm = tmask_ref[...][0]        # (capt,)
+
+    denom = (av[None, :] - x[:, None]) + tau[None, :]   # (3cap, capt) = y - x
+    safe = jnp.where(denom == 0.0, 1.0, denom)
+    c = jnp.where(denom != 0.0, 1.0 / safe, 0.0) * tm[None, :]
+    out_ref[...] = jnp.dot(w, c, preferred_element_type=out_ref.dtype)[:, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def nearfield_pallas(
+    w_near: jax.Array,    # (R, nb, 3cap) gathered weights, invalid slots zeroed
+    x_near: jax.Array,    # (nb, 3cap) gathered source coords
+    av_b: jax.Array,      # (nb, capt) target anchor values per box
+    tau_b: jax.Array,     # (nb, capt) target taus per box
+    tgt_mask: jax.Array,  # (nb, capt) bool
+    *,
+    block_r: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[r, b, t] = sum_c w_near[r, b, c] / (y_{b,t} - x_{b,c})."""
+    r, nb, c3 = w_near.shape
+    capt = av_b.shape[1]
+    dt = w_near.dtype
+
+    br = min(block_r, max(8, r))
+    pad_r = (-r) % br
+    w_p = jnp.pad(w_near, ((0, pad_r), (0, 0), (0, 0)))
+    rp = w_p.shape[0]
+    # pad x so masked slots cannot alias target values (w is zero there anyway)
+    tm = tgt_mask.astype(dt)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(nb, rp // br),
+        in_specs=[
+            pl.BlockSpec((br, 1, c3), lambda b, i: (i, b, 0)),
+            pl.BlockSpec((1, c3), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, capt), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, capt), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, capt), lambda b, i: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, 1, capt), lambda b, i: (i, b, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, nb, capt), dt),
+        interpret=interpret,
+    )(w_p, x_near, av_b, tau_b, tm)
+    return out[:r]

@@ -1,0 +1,69 @@
+"""Dispatching jit wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in ``interpret=True`` mode — the
+kernel bodies execute as written, which is how correctness is validated.
+On TPU they compile to Mosaic. ``core.eigh_update`` calls these through
+``method="kernel"``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cauchy_matmul import cauchy_matmul_pallas
+from repro.kernels.nearfield import nearfield_pallas
+from repro.kernels.secular_newton import secular_solve_pallas
+
+__all__ = ["interpret_default", "cauchy_matmul_stable", "secular_solve", "nearfield"]
+
+
+def interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def cauchy_matmul_stable(
+    w: jax.Array,
+    src: jax.Array,
+    anchor: jax.Array,
+    tau: jax.Array,
+    *,
+    src_valid: jax.Array | None = None,
+    tgt_valid: jax.Array | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Kernel-backed drop-in for core.cauchy.cauchy_matmul_stable.
+
+    Note the sign convention: returns sum_j w_j/(src_j - mu_i) (Cauchy
+    orientation), same as the core function.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    n = src.shape[0]
+    m = anchor.shape[0]
+    if src_valid is None:
+        src_valid = jnp.ones((n,), bool)
+    if tgt_valid is None:
+        tgt_valid = jnp.ones((m,), bool)
+    w_masked = jnp.where(src_valid[None, :], w, 0.0)
+    anchor_vals = src[anchor]
+    return cauchy_matmul_pallas(
+        w_masked, src, anchor_vals, tau, tgt_valid, interpret=interpret
+    )
+
+
+def secular_solve(
+    dc, zc2, rho, anchor_vals, lo, hi, *, n_bisect=58, n_newton=4, interpret=None
+):
+    if interpret is None:
+        interpret = interpret_default()
+    return secular_solve_pallas(
+        dc, zc2, rho, anchor_vals, lo, hi,
+        n_bisect=n_bisect, n_newton=n_newton, interpret=interpret,
+    )
+
+
+def nearfield(w_near, x_near, av_b, tau_b, tgt_mask, *, interpret=None):
+    if interpret is None:
+        interpret = interpret_default()
+    return nearfield_pallas(w_near, x_near, av_b, tau_b, tgt_mask, interpret=interpret)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["cauchy_matmul_ref", "secular_solve_ref", "nearfield_ref"]
+
+
+def cauchy_matmul_ref(w, src, anchor_vals, tau, tgt_mask):
+    """Oracle for kernels.cauchy_matmul.cauchy_matmul_pallas."""
+    denom = (src[:, None] - anchor_vals[None, :]) - tau[None, :]
+    safe = jnp.where(denom == 0.0, 1.0, denom)
+    c = jnp.where(denom != 0.0, 1.0 / safe, 0.0) * tgt_mask.astype(w.dtype)[None, :]
+    return w @ c
+
+
+def secular_solve_ref(dc, zc2, rho, anchor_vals, lo, hi, *, n_bisect=58, n_newton=4):
+    """Oracle for kernels.secular_newton.secular_solve_pallas."""
+    dt = dc.dtype
+    diff = dc[:, None] - anchor_vals[None, :]
+
+    def w_of(tau):
+        delta = diff - tau[None, :]
+        safe = jnp.where(delta == 0.0, 1.0, delta)
+        inv = jnp.where(delta != 0.0, 1.0 / safe, 0.0)
+        w = 1.0 + rho * jnp.sum(zc2[:, None] * inv, axis=0)
+        wp = rho * jnp.sum(zc2[:, None] * inv * inv, axis=0)
+        return w, wp
+
+    def bis(_, carry):
+        lo_c, hi_c = carry
+        mid = 0.5 * (lo_c + hi_c)
+        w, _ = w_of(mid)
+        right = w < 0.0
+        return jnp.where(right, mid, lo_c), jnp.where(right, hi_c, mid)
+
+    lo_f, hi_f = lax.fori_loop(0, n_bisect, bis, (lo, hi))
+    tau = 0.5 * (lo_f + hi_f)
+
+    def newton(_, t):
+        w, wp = w_of(t)
+        return jnp.clip(t - w / jnp.maximum(wp, jnp.finfo(dt).tiny), lo_f, hi_f)
+
+    return lax.fori_loop(0, n_newton, newton, tau)
+
+
+def nearfield_ref(w_near, x_near, av_b, tau_b, tgt_mask):
+    """Oracle for kernels.nearfield.nearfield_pallas."""
+    denom = (av_b[:, None, :] - x_near[:, :, None]) + tau_b[:, None, :]
+    safe = jnp.where(denom == 0.0, 1.0, denom)
+    c = jnp.where(denom != 0.0, 1.0 / safe, 0.0) * tgt_mask.astype(w_near.dtype)[:, None, :]
+    return jnp.einsum("rbc,bct->rbt", w_near, c)

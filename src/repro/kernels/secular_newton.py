@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: in-VMEM secular-equation root solve.
+
+The jnp solver (core.secular.secular_solve) re-reads the (N poles x M roots)
+difference tensor from HBM on every bisection sweep: ~n_iter * N * M * 8B of
+traffic. This kernel keeps the pole vector and a (BN=all, BM) tile of root
+state resident in VMEM for all iterations — HBM traffic drops to O(N + M),
+turning the O(n^2) eigenvalue phase (paper Table 1, row 2) from memory-bound
+to VPU compute-bound.
+
+Grid: (M/BM,). Each program owns BM roots and the full pole set. The entire
+bisection + Newton iteration runs inside the kernel (jax.lax loops).
+Brackets/anchors are precomputed by the caller exactly like the jnp path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+__all__ = ["secular_solve_pallas"]
+
+
+def _kernel(dc_ref, zc2_ref, rho_ref, av_ref, lo_ref, hi_ref, tau_ref, *, n_bisect, n_newton):
+    dc = dc_ref[...][0]     # (N,)
+    zc2 = zc2_ref[...][0]   # (N,)  (invalid sources pre-zeroed)
+    rho = rho_ref[...][0, 0]
+    av = av_ref[...][0]     # (BM,)
+    lo = lo_ref[...][0]
+    hi = hi_ref[...][0]
+    dt = dc.dtype
+
+    diff = dc[:, None] - av[None, :]  # (N, BM) — resident for all iterations
+
+    def w_of(tau):
+        delta = diff - tau[None, :]
+        safe = jnp.where(delta == 0.0, 1.0, delta)
+        inv = jnp.where(delta != 0.0, 1.0 / safe, 0.0)
+        w = 1.0 + rho * jnp.sum(zc2[:, None] * inv, axis=0)
+        wp = rho * jnp.sum(zc2[:, None] * inv * inv, axis=0)
+        return w, wp
+
+    def bis_step(_, carry):
+        lo_c, hi_c = carry
+        mid = 0.5 * (lo_c + hi_c)
+        w, _ = w_of(mid)
+        go_right = w < 0.0
+        return jnp.where(go_right, mid, lo_c), jnp.where(go_right, hi_c, mid)
+
+    lo_f, hi_f = lax.fori_loop(0, n_bisect, bis_step, (lo, hi))
+    tau = 0.5 * (lo_f + hi_f)
+
+    def newton_step(_, tau_c):
+        w, wp = w_of(tau_c)
+        step = w / jnp.maximum(wp, jnp.finfo(dt).tiny)
+        return jnp.clip(tau_c - step, lo_f, hi_f)
+
+    tau = lax.fori_loop(0, n_newton, newton_step, tau)
+    tau_ref[...] = tau[None, :]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "n_bisect", "n_newton", "interpret")
+)
+def secular_solve_pallas(
+    dc: jax.Array,
+    zc2: jax.Array,
+    rho: jax.Array,
+    anchor_vals: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    *,
+    block_m: int = 128,
+    n_bisect: int = 58,
+    n_newton: int = 4,
+    interpret: bool = False,
+) -> jax.Array:
+    """Solve w(av_i + tau_i) = 0 for tau_i within brackets [lo_i, hi_i]."""
+    n = dc.shape[0]
+    m = anchor_vals.shape[0]
+    dt = dc.dtype
+
+    bm = min(block_m, max(8, m))
+    pad_m = (-m) % bm
+
+    dc_p = dc[None, :]
+    zc2_p = zc2[None, :]
+    rho_p = jnp.reshape(rho.astype(dt), (1, 1))
+    av_p = jnp.pad(anchor_vals, (0, pad_m))[None, :]
+    # padded roots get a degenerate bracket [0, 0] -> tau 0
+    lo_p = jnp.pad(lo, (0, pad_m))[None, :]
+    hi_p = jnp.pad(hi, (0, pad_m))[None, :]
+    mp = av_p.shape[1]
+
+    kern = functools.partial(_kernel, n_bisect=n_bisect, n_newton=n_newton)
+    out = pl.pallas_call(
+        kern,
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda j: (0, 0)),
+            pl.BlockSpec((1, n), lambda j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),
+            pl.BlockSpec((1, bm), lambda j: (0, j)),
+            pl.BlockSpec((1, bm), lambda j: (0, j)),
+            pl.BlockSpec((1, bm), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, mp), dt),
+        interpret=interpret,
+    )(dc_p, zc2_p, rho_p, av_p, lo_p, hi_p)
+    return out[0, :m]

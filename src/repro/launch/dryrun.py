@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and extract memory / cost / collective roofline terms.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and only the dry-run wants 512 placeholder devices (smoke tests and
+benches see 1 device).
+
+Cost extraction caveat (measured, see EXPERIMENTS.md §Dry-run): XLA's
+``cost_analysis`` counts while-loop bodies ONCE, so a scanned-L-layer program
+under-reports FLOPs/bytes/collectives by ~L. The dry-run therefore compiles
+each cell twice more with depth-1 and depth-2 *unrolled* stacks
+(``scan_layers=False``) and affine-extrapolates:
+
+    total(L) = f(1) + (L - 1) * (f(2) - f(1))
+
+Memory analysis (does-it-fit) always comes from the real scanned program.
+SSD/WKV chunk scans are unrolled too; where that would explode the HLO
+(32k-sequence cells) the measurement chunk is enlarged and the intra-chunk
+over-count documented (<5% of total FLOPs).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes [--out DIR]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.dist import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import HW, collective_bytes, model_flops, roofline_terms
+from repro.models.registry import build_model
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+
+
+def _train_step_fn(api, lr=3e-4):
+    cfg = api.cfg
+
+    def loss_fn(params, batch):
+        if cfg.fsdp_gather_params:
+            compute = sh.gather_for_compute(params, cfg.compute_dtype)
+            return api.train_loss(compute, batch)
+        return api.train_loss(params, batch)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_state, gnorm = adamw_update(grads, opt_state, params, lr=lr)
+        return new_params, new_state, loss, gnorm
+
+    return train_step
+
+
+def lower_cell(cfg, shape, mesh, *, multi_pod: bool, shape_name: str,
+               cache_seq_fallback: bool = True):
+    """Lower + compile one (config, shape) cell on ``mesh``. Returns compiled."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    api = build_model(cfg)
+    specs = api.input_specs(shape)
+    param_shapes = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    p_specs = sh.param_pspecs(param_shapes)
+
+    def ns(spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    with mesh:
+        if shape.kind == "train":
+            batch_specs = sh.batch_pspecs(specs["batch"], multi_pod=multi_pod)
+            opt_shapes = jax.eval_shape(adamw_init, param_shapes)
+            o_specs = AdamWState(step=P(), m=p_specs, v=p_specs)
+            lowered = jax.jit(
+                _train_step_fn(api),
+                in_shardings=(ns(p_specs), ns(o_specs), ns(batch_specs)),
+                out_shardings=(ns(p_specs), ns(o_specs), NamedSharding(mesh, P()),
+                               NamedSharding(mesh, P())),
+                donate_argnums=(0, 1),
+            ).lower(param_shapes, opt_shapes, specs["batch"])
+        elif shape.kind == "prefill":
+            batch_specs = sh.batch_pspecs(specs["batch"], multi_pod=multi_pod)
+
+            def prefill_fn(params, batch):
+                if cfg.fsdp_gather_params:
+                    params = sh.gather_for_compute(params, cfg.compute_dtype)
+                return api.prefill(params, batch)
+
+            lowered = jax.jit(
+                prefill_fn, in_shardings=(ns(p_specs), ns(batch_specs))
+            ).lower(param_shapes, specs["batch"])
+        else:
+            long_ctx = shape_name.startswith("long")
+            cache_specs = sh.cache_pspecs(
+                specs["cache"], multi_pod=multi_pod, long_context=long_ctx,
+                seq_shard_fallback=cache_seq_fallback,
+            )
+            if long_ctx:
+                tok_specs = P(None, None)
+            else:
+                tok_specs = sh.batch_pspecs(
+                    {"token": specs["token"]}, multi_pod=multi_pod
+                )["token"]
+
+            def decode_fn(params, cache, token, pos):
+                return api.decode_step(params, cache, token, pos)
+
+            lowered = jax.jit(
+                decode_fn,
+                in_shardings=(ns(p_specs), ns(cache_specs),
+                              NamedSharding(mesh, tok_specs), NamedSharding(mesh, P())),
+                donate_argnums=(1,),
+            ).lower(param_shapes, specs["cache"], specs["token"], specs["pos"])
+
+        return lowered.compile()
+
+
+def _extract(compiled, n_dev):
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text(), n_dev)
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            coll)
+
+
+def _measurement_cfg(cfg, shape, n_units: int):
+    """Reduced-depth, fully-unrolled config for cost extraction."""
+    unit = cfg.attn_every if (cfg.ssm is not None and cfg.attn_every) else 1
+    kw = {"n_layers": n_units * unit, "scan_layers": False}
+    if cfg.ssm is not None:
+        max_bodies = 32  # heavy SSD bodies
+        chunk = max(cfg.ssm.chunk, shape.seq_len // max_bodies)
+        kw["ssm"] = dataclasses.replace(cfg.ssm, chunk=chunk)
+    if cfg.rwkv is not None:
+        max_bodies = 256  # cheap WKV bodies
+        chunk = max(cfg.rwkv.chunk, shape.seq_len // max_bodies)
+        kw["rwkv"] = dataclasses.replace(cfg.rwkv, chunk=chunk)
+    return cfg.replace(**kw)
+
+
+def _affine(f1, f2, n_units):
+    """Depth-affine extrapolation, clamped: a real L-layer program costs at
+    least its 2-layer measurement (guards noisy f2 < f1 on depth-independent
+    decode cells, which would extrapolate negative)."""
+    return max(f1 + (n_units - 1.0) * (f2 - f1), max(f2, 0.0))
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: Path,
+             method_tag: str = "baseline", extrapolate: bool = True,
+             cfg_override=None, cache_seq_fallback: bool = True) -> dict:
+    cfg = cfg_override if cfg_override is not None else configs.get(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+
+    # (1) the REAL program: scanned, remat'd — memory analysis + compilability
+    compiled = lower_cell(cfg, shape, mesh, multi_pod=multi_pod, shape_name=shape_name,
+                          cache_seq_fallback=cache_seq_fallback)
+    mem = compiled.memory_analysis()
+    flops_raw, bytes_raw, coll_raw = _extract(compiled, n_dev)
+
+    # (2+3) depth-affine cost extraction on unrolled reduced stacks
+    extra = {}
+    if extrapolate:
+        unit = cfg.attn_every if (cfg.ssm is not None and cfg.attn_every) else 1
+        n_units = cfg.n_layers / unit
+        c1 = lower_cell(_measurement_cfg(cfg, shape, 1), shape, mesh,
+                        multi_pod=multi_pod, shape_name=shape_name,
+                        cache_seq_fallback=cache_seq_fallback)
+        c2 = lower_cell(_measurement_cfg(cfg, shape, 2), shape, mesh,
+                        multi_pod=multi_pod, shape_name=shape_name,
+                        cache_seq_fallback=cache_seq_fallback)
+        f1, b1, k1 = _extract(c1, n_dev)
+        f2, b2, k2 = _extract(c2, n_dev)
+        flops = _affine(f1, f2, n_units)
+        byts = _affine(b1, b2, n_units)
+        coll = {k: _affine(k1[k], k2[k], n_units) for k in k1}
+        extra = {"depth_units": n_units, "f1": f1, "f2": f2}
+    else:
+        flops, byts, coll = flops_raw, bytes_raw, coll_raw
+
+    t_compile = time.time() - t0
+    hw = HW(chips=n_dev)
+    terms = roofline_terms({"flops": flops, "bytes accessed": byts}, coll, hw)
+    mf = model_flops(cfg, shape)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "method": method_tag,
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost": {"flops": flops, "bytes accessed": byts,
+                 "flops_scanned_raw": flops_raw, "bytes_scanned_raw": bytes_raw},
+        "collectives": coll,
+        "roofline": terms,
+        "model_flops_global": mf,
+        "model_flops_per_device": mf / n_dev,
+        "useful_flops_ratio": (mf / n_dev) / terms["flops_per_device"]
+        if terms["flops_per_device"] else None,
+        "extrapolation": extra,
+    }
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{result['mesh']}"
+    if method_tag != "baseline":
+        tag += f"__{method_tag}"
+    (out_dir / f"{tag}.json").write_text(json.dumps(result, indent=2))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="benchmarks/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-extrapolate", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    cells = configs.cells() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch, shape_name in cells:
+        for mp in meshes:
+            mesh_tag = "2x16x16" if mp else "16x16"
+            tag = f"{arch}__{shape_name}__{mesh_tag}"
+            if args.skip_existing and (out_dir / f"{tag}.json").exists():
+                print(f"SKIP {tag}", flush=True)
+                continue
+            try:
+                r = run_cell(arch, shape_name, multi_pod=mp, out_dir=out_dir,
+                             extrapolate=not args.no_extrapolate)
+                rt = r["roofline"]
+                print(
+                    f"OK   {tag}: compile={r['compile_s']}s "
+                    f"flops/dev={rt['flops_per_device']:.3e} "
+                    f"t_comp={rt['t_compute_s']*1e3:.2f}ms "
+                    f"t_mem={rt['t_memory_s']*1e3:.2f}ms "
+                    f"t_coll={rt['t_collective_s']*1e3:.2f}ms "
+                    f"useful={r['useful_flops_ratio'] and round(r['useful_flops_ratio'], 3)}",
+                    flush=True,
+                )
+            except Exception as e:
+                failures.append((tag, repr(e)))
+                print(f"FAIL {tag}: {e}", flush=True)
+                traceback.print_exc(limit=4)
+
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for t, e in failures:
+            print(" ", t, e)
+        raise SystemExit(1)
+    print("\nall dry-run cells green")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: hypothesis -> change -> re-lower -> record.
+
+Three cells (selected from the baseline roofline table — worst fraction /
+most collective-bound / most technique-representative plumbing; see
+EXPERIMENTS.md §Perf for the napkin math per hypothesis):
+
+  A. qwen2-72b      x train_4k    (biggest dense; memory+collective bound)
+  B. deepseek-v2-lite x prefill_32k (most collective-bound; MoE+MLA)
+  C. qwen1.5-32b    x decode_32k  (worst fit: MHA cache replicates on model)
+
+Each variant re-runs the dry-run cell with a method tag; JSONs land next to
+the baselines for before/after diffing.
+"""
+
+import argparse
+import traceback
+from pathlib import Path
+
+from repro import configs
+from repro.launch.dryrun import run_cell
+
+VARIANTS = {
+    # ---- cell A: qwen2-72b train_4k
+    ("qwen2-72b", "train_4k"): [
+        # H1: remat recompute inflates HLO flops ~1.33x; saving matmul
+        # outputs removes most recompute at modest memory cost.
+        ("remat-dots", lambda c: c.replace(remat_policy="dots"), {}),
+        # H2: the (s x s) score tensor dominates "bytes accessed" at seq 4k;
+        # blockwise attention removes its HBM residency.
+        ("flash1k", lambda c: c.replace(attn_block_k=1024), {}),
+        # H3: both.
+        ("flash1k+dots", lambda c: c.replace(attn_block_k=1024, remat_policy="dots"), {}),
+        # H8: peak is only 3.4 GB of 16 — remat over-saves; dropping it
+        # removes the recompute forward entirely (flops -~25%).
+        ("no-remat", lambda c: c.replace(remat=False), {}),
+        # H9: 9.6 TB/step of all-reduce = XLA reducing partial matmul
+        # products over the FSDP-sharded contraction dim. Gather bf16 weights
+        # at use instead (ZeRO-3): ~17 GB of all-gather replaces it.
+        ("zero3-gather", lambda c: c.replace(fsdp_gather_params=True), {}),
+        ("zero3+no-remat", lambda c: c.replace(fsdp_gather_params=True, remat=False), {}),
+    ],
+    # ---- cell B: deepseek-v2-lite prefill_32k
+    ("deepseek-v2-lite-16b", "prefill_32k"): [
+        # H4: GSPMD reshards the MoE dispatch tensors through all-gathers;
+        # explicit EP constraints keep group on data / experts on model.
+        ("moe-ep", lambda c: c.replace(moe_shard_constraints=True), {}),
+        # H5: the absorbed-MLA (h, sq, sk) scores at 32k dominate memory;
+        # query chunking shrinks them 16x.
+        ("mla-qchunk", lambda c: c.replace(mla_q_chunk=2048), {}),
+        ("moe-ep+qchunk", lambda c: c.replace(moe_shard_constraints=True,
+                                              mla_q_chunk=2048), {}),
+        # H9b: same contraction-dim AR pathology as cell A.
+        ("zero3-gather", lambda c: c.replace(fsdp_gather_params=True), {}),
+        ("zero3+qchunk", lambda c: c.replace(fsdp_gather_params=True,
+                                             mla_q_chunk=2048), {}),
+    ],
+    # ---- cell C: qwen1.5-32b decode_32k
+    ("qwen1.5-32b", "decode_32k"): [
+        # H6: kv heads (40) don't divide model=16 -> cache replicated 16x;
+        # shard the sequence dim over model instead.
+        ("kv-seq-shard", lambda c: c, {"cache_seq_fallback": True}),
+        # H7: int8 KV halves cache bytes again -> fits 16 GB.
+        ("kv-seq-shard+int8", lambda c: c.replace(kv_cache_dtype="int8"),
+         {"cache_seq_fallback": True}),
+    ],
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="benchmarks/dryrun")
+    ap.add_argument("--cell", default=None, help="arch:shape filter")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    for (arch, shape), variants in VARIANTS.items():
+        if args.cell and args.cell != f"{arch}:{shape}":
+            continue
+        for tag, mutate, kw in variants:
+            try:
+                cfg = mutate(configs.get(arch))
+                # baseline comparability: cell C's baseline ran without the
+                # seq-shard fallback; variants opt in explicitly
+                kwargs = {"cache_seq_fallback": False}
+                kwargs.update(kw)
+                r = run_cell(arch, shape, multi_pod=args.multi_pod,
+                             out_dir=out_dir, method_tag=tag,
+                             cfg_override=cfg, **kwargs)
+                rt = r["roofline"]
+                print(f"OK {arch}/{shape}/{tag}: "
+                      f"t_comp={rt['t_compute_s']*1e3:.1f}ms "
+                      f"t_mem={rt['t_memory_s']*1e3:.1f}ms "
+                      f"t_coll={rt['t_collective_s']*1e3:.1f}ms "
+                      f"peak={r['memory']['peak_bytes'] and r['memory']['peak_bytes']/1e9:.1f}GB",
+                      flush=True)
+            except Exception as e:
+                print(f"FAIL {arch}/{shape}/{tag}: {e}", flush=True)
+                traceback.print_exc(limit=3)
+
+
+if __name__ == "__main__":
+    main()

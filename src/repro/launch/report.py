@@ -1,0 +1,72 @@
+"""Roofline report generator: benchmarks/dryrun/*.json -> markdown tables."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+
+def load(d: str | Path):
+    rows = []
+    for f in sorted(Path(d).glob("*.json")):
+        rows.append(json.loads(f.read_text()))
+    return rows
+
+
+def fmt_row(r):
+    rt = r["roofline"]
+    tc, tm, tl = rt["t_compute_s"], rt["t_memory_s"], rt["t_collective_s"]
+    dom = max(("compute", tc), ("memory", tm), ("collective", tl), key=lambda kv: kv[1])
+    ratio = r.get("useful_flops_ratio")
+    peak = r["memory"].get("peak_bytes") or 0
+    return {
+        "arch": r["arch"],
+        "shape": r["shape"],
+        "mesh": r["mesh"],
+        "method": r.get("method", "baseline"),
+        "t_compute_ms": tc * 1e3,
+        "t_memory_ms": tm * 1e3,
+        "t_collective_ms": tl * 1e3,
+        "bottleneck": dom[0],
+        "useful_ratio": ratio,
+        "peak_gb": peak / 1e9,
+        "flops": rt["flops_per_device"],
+        "bytes": rt["bytes_per_device"],
+        "coll_bytes": rt["collective_bytes_per_device"],
+    }
+
+
+def markdown_table(rows, *, mesh=None, method="baseline"):
+    out = [
+        "| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | bottleneck | useful FLOPs | peak GB/dev |",
+        "|---|---|---:|---:|---:|---|---:|---:|",
+    ]
+    for r in rows:
+        fr = fmt_row(r)
+        if mesh and fr["mesh"] != mesh:
+            continue
+        if method and fr["method"] != method:
+            continue
+        ur = f"{fr['useful_ratio']:.2f}" if fr["useful_ratio"] else "-"
+        out.append(
+            f"| {fr['arch']} | {fr['shape']} | {fr['t_compute_ms']:.2f} | "
+            f"{fr['t_memory_ms']:.1f} | {fr['t_collective_ms']:.1f} | "
+            f"{fr['bottleneck']} | {ur} | {fr['peak_gb']:.1f} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--method", default="baseline")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    print(markdown_table(rows, mesh=args.mesh, method=args.method))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh), in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs / (chips * 197e12)         [bf16 MXU peak]
+  memory     = HLO_bytes / (chips * 819e9)          [HBM bandwidth]
+  collective = collective_bytes / (chips * 50e9)    [per-link ICI]
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-partition SPMD
+module). collective_bytes is parsed from the compiled HLO text: for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute we
+take the per-device wire bytes under ring semantics:
+
+  all-gather:      out_bytes * (g-1)/g
+  reduce-scatter:  in_bytes  * (g-1)/g
+  all-reduce:      2 * bytes * (g-1)/g
+  all-to-all:      bytes * (g-1)/g
+  collective-permute: bytes
+
+with g = replica-group size parsed from the op attributes.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+__all__ = ["HW", "collective_bytes", "roofline_terms", "model_flops"]
+
+# TPU v5e, per chip
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+@dataclass
+class HW:
+    chips: int
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over all array shapes in an HLO type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0]
+        ids = [t for t in first.replace("{", "").split(",") if t.strip() != ""]
+        if ids:
+            return len(ids)
+    return default
+
+
+def collective_bytes(hlo_text: str, total_devices: int) -> dict:
+    """Per-device wire bytes by collective kind (ring model)."""
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0, "count": 0}
+    seen_start = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        # avoid double counting start/done pairs: count only -start or plain
+        if "-done(" in line:
+            continue
+        opname = line.split("=")[0].strip()
+        if opname in seen_start:
+            continue
+        seen_start.add(opname)
+        b = _shape_bytes(type_str)
+        if b == 0:
+            continue
+        g = _group_size(line, total_devices)
+        if g <= 1:
+            continue
+        frac = (g - 1) / g
+        if kind == "all-gather":
+            out[kind] += b * frac
+        elif kind == "reduce-scatter":
+            # HLO result type is the scattered (per-shard) output; wire bytes
+            # per device under ring = input*(g-1)/g = out_bytes*(g-1)
+            out[kind] += b * (g - 1)
+        elif kind == "all-reduce":
+            out[kind] += 2.0 * b * frac
+        elif kind == "all-to-all":
+            out[kind] += b * frac
+        elif kind == "collective-permute":
+            out[kind] += b
+        out["count"] += 1
+    # clean up reduce-scatter estimate: output bytes ~ input/g; wire = in*(g-1)/g
+    return out
+
+
+def roofline_terms(cost: dict, coll: dict, hw: HW) -> dict:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cbytes = sum(v for k, v in coll.items() if k != "count")
+    return {
+        "flops_per_device": flops,
+        "bytes_per_device": byts,
+        "collective_bytes_per_device": cbytes,
+        "t_compute_s": flops / hw.peak_flops,
+        "t_memory_s": byts / hw.hbm_bw,
+        "t_collective_s": cbytes / hw.ici_bw,
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE), D = tokens processed.
+
+    For decode shapes D = global_batch (one token each); train counts fwd+bwd
+    (factor 6); prefill/decode count forward only (factor 2).
+    """
+    n_params_active = _active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 2.0
+    else:
+        tokens = shape.global_batch * 1
+        factor = 2.0
+    return factor * n_params_active * tokens
+
+
+def _active_param_count(cfg) -> float:
+    """Analytic per-token-active parameter count (excl. embeddings)."""
+    d = cfg.d_model
+    L = cfg.n_layers
+    if cfg.rwkv is not None:
+        per_layer = 5 * d * d + 2 * d * cfg.d_ff + 2 * d * cfg.rwkv.decay_lora
+        return L * per_layer
+    if cfg.ssm is not None and cfg.attn_every:
+        d_inner = cfg.ssm.expand * d
+        per_mamba = d * (2 * d_inner + 2 * cfg.ssm.d_state + d_inner // cfg.ssm.head_dim) + d_inner * d
+        n_attn = L // cfg.attn_every
+        attn = 2 * d * cfg.n_heads * cfg.head_dim + 2 * d * cfg.n_kv_heads * cfg.head_dim
+        mlp = 3 * d * cfg.d_ff
+        # shared weights are stored once but *applied* n_attn times — active
+        # (compute) params count per application
+        return L * per_mamba + n_attn * (attn + mlp)
+    # attention params
+    if cfg.mla is not None:
+        m = cfg.mla
+        attn = (d * cfg.n_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                + m.kv_lora_rank * cfg.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                + cfg.n_heads * m.v_head_dim * d)
+    else:
+        attn = (d * cfg.n_heads * cfg.head_dim * 2
+                + d * cfg.n_kv_heads * cfg.head_dim * 2)
+    # ffn params (active)
+    if cfg.moe is not None:
+        mo = cfg.moe
+        ffn = 3 * d * mo.d_ff_expert * (mo.top_k + mo.n_shared)
+    else:
+        mult = 3 if cfg.mlp_type == "swiglu" else 2
+        ffn = mult * d * cfg.d_ff
+    total = cfg.n_layers * (attn + ffn)
+    if cfg.encdec:
+        total *= 2  # encoder + decoder stacks
+    return float(total)

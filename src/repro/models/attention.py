@@ -1,0 +1,240 @@
+"""GQA/MQA/MHA attention with KV cache (train, prefill, decode paths)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dot, rope_apply, uniform_init
+
+__all__ = ["attn_init", "attn_train", "attn_prefill", "attn_decode", "init_kv_cache"]
+
+
+def attn_init(key, cfg, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    kvh = cfg.n_kv_heads
+    dh = cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = (1.0 / d) ** 0.5
+    p = {
+        "wq": uniform_init(ks[0], (d, h * dh), s, dtype),
+        "wk": uniform_init(ks[1], (d, kvh * dh), s, dtype),
+        "wv": uniform_init(ks[2], (d, kvh * dh), s, dtype),
+        "wo": uniform_init(ks[3], (h * dh, d), (1.0 / (h * dh)) ** 0.5, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((kvh * dh,), dtype)
+        p["bv"] = jnp.zeros((kvh * dh,), dtype)
+    return p
+
+
+def _qkv(x, p, cfg):
+    b, s, _ = x.shape
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cd = jnp.dtype(cfg.compute_dtype)
+    q = dot(x, p["wq"], cd)
+    k = dot(x, p["wk"], cd)
+    v = dot(x, p["wv"], cd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(b, s, h, dh).astype(x.dtype)
+    k = k.reshape(b, s, kvh, dh).astype(x.dtype)
+    v = v.reshape(b, s, kvh, dh).astype(x.dtype)
+    return q, k, v
+
+
+def _sdpa_full(q, k, v, cfg, causal, q_offset=0):
+    """Vanilla attention: materializes the (sq, sk) score tensor."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    rep = h // kvh
+    cd = jnp.dtype(cfg.compute_dtype)
+    qg = q.reshape(b, sq, kvh, rep, dh)
+    scores = jnp.einsum(
+        "bqkrd,bskd->bkrqs", qg.astype(cd), k.astype(cd),
+        preferred_element_type=jnp.float32,
+    ) / (dh ** 0.5)
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(sk)
+        mask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(mask[None, None, None, :, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bkrqs,bskd->bqkrd", w.astype(cd), v.astype(cd),
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, sq, h * dh).astype(q.dtype)
+
+
+def _sdpa_blockwise(q, k, v, cfg, causal, q_offset=0):
+    """Flash-style attention: online softmax over KV blocks via lax.scan.
+
+    Activation footprint drops from O(sq*sk) to O(sq*block): the memory-term
+    fix for 32k prefill / 4k train (EXPERIMENTS.md §Perf). Causal masking is
+    applied per block; fully-masked blocks still execute (~2x score-matmul
+    flop overhead for causal, which the memory win dwarfs on the dominant
+    term). Exact — matches _sdpa_full to fp tolerance (tested).
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    rep = h // kvh
+    cd = jnp.dtype(cfg.compute_dtype)
+    bk = min(cfg.attn_block_k, sk)
+    if sk % bk:
+        return _sdpa_full(q, k, v, cfg, causal, q_offset)
+    nb = sk // bk
+
+    qg = (q.reshape(b, sq, kvh, rep, dh).astype(cd) / (dh ** 0.5))
+    kb = jnp.moveaxis(k.reshape(b, nb, bk, kvh, dh), 1, 0)  # (nb, b, bk, kvh, dh)
+    vb = jnp.moveaxis(v.reshape(b, nb, bk, kvh, dh), 1, 0)
+    qpos = jnp.arange(sq) + q_offset
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_j, v_j, j = xs
+        s = jnp.einsum("bqkrd,bskd->bkrqs", qg, k_j.astype(cd),
+                       preferred_element_type=jnp.float32)
+        if causal:
+            kpos = j * bk + jnp.arange(bk)
+            mask = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None, None, :, :], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkrqs,bskd->bkrqd", p.astype(cd), v_j.astype(cd),
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kvh, rep, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kvh, rep, sq), jnp.float32)
+    acc0 = jnp.zeros((b, kvh, rep, sq, dh), jnp.float32)
+    if cfg.scan_layers:
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0),
+                                      (kb, vb, jnp.arange(nb)))
+    else:  # unrolled for dry-run cost extraction
+        carry = (m0, l0, acc0)
+        for j in range(nb):
+            carry, _ = body(carry, (kb[j], vb[j], jnp.asarray(j)))
+        m, l, acc = carry
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h * dh)
+    return out.astype(q.dtype)
+
+
+def _sdpa(q, k, v, cfg, causal, q_offset=0):
+    """q: (b, sq, h, dh); k/v: (b, sk, kvh, dh). GQA via head grouping.
+    Dispatches to blockwise (flash) attention when cfg.attn_block_k is set
+    and the KV length warrants it."""
+    sq, sk = q.shape[1], k.shape[1]
+    if cfg.attn_block_k and sk > cfg.attn_block_k and sq > 1:
+        return _sdpa_blockwise(q, k, v, cfg, causal, q_offset)
+    return _sdpa_full(q, k, v, cfg, causal, q_offset)
+
+
+def _maybe_rope(q, k, cfg, positions):
+    if cfg.use_rope:
+        q = rope_apply(q, positions, cfg.rope_theta)
+        k = rope_apply(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def attn_train(x, p, cfg, positions, causal=True):
+    q, k, v = _qkv(x, p, cfg)
+    q, k = _maybe_rope(q, k, cfg, positions)
+    o = _sdpa(q, k, v, cfg, causal=causal)
+    return dot(o, p["wo"], jnp.dtype(cfg.compute_dtype)).astype(x.dtype)
+
+
+def init_kv_cache(batch, max_len, cfg, dtype):
+    kvh, dh = cfg.n_kv_heads, cfg.head_dim
+    cache = {
+        "k": jnp.zeros((batch, max_len, kvh, dh), dtype),
+        "v": jnp.zeros((batch, max_len, kvh, dh), dtype),
+    }
+    if cfg.kv_cache_dtype == "int8":
+        cache = {
+            "k": jnp.zeros((batch, max_len, kvh, dh), jnp.int8),
+            "v": jnp.zeros((batch, max_len, kvh, dh), jnp.int8),
+            "k_scale": jnp.zeros((batch, max_len, kvh), jnp.float32),
+            "v_scale": jnp.zeros((batch, max_len, kvh), jnp.float32),
+        }
+    return cache
+
+
+def _quantize_kv(x):
+    """Per-(token, head) symmetric int8. x: (b, s, kvh, dh)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def attn_prefill(x, p, cfg, positions):
+    """Full-sequence prefill; returns (out, cache with seq_len entries)."""
+    q, k, v = _qkv(x, p, cfg)
+    q, k = _maybe_rope(q, k, cfg, positions)
+    o = _sdpa(q, k, v, cfg, causal=True)
+    out = dot(o, p["wo"], jnp.dtype(cfg.compute_dtype)).astype(x.dtype)
+    return out, {"k": k, "v": v}
+
+
+def attn_decode(x, p, cfg, cache, pos):
+    """One-token decode: x (b, 1, d); cache holds ``pos`` valid entries.
+
+    With cfg.kv_cache_dtype == "int8" the cache stores per-(token, head)
+    symmetric-quantized KV (+ f32 scales): 2x less HBM than bf16 — the
+    §Perf 'kv-int8' iteration that makes qwen1.5 decode_32k fit 16 GB chips.
+    """
+    b = x.shape[0]
+    q, k, v = _qkv(x, p, cfg)
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q, k = _maybe_rope(q, k, cfg, posv)
+    quantized = cfg.kv_cache_dtype == "int8"
+    if quantized:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, pos, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, pos, axis=1),
+            "k_scale": jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, pos, axis=1),
+            "v_scale": jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, pos, axis=1),
+        }
+        ck = _dequantize_kv(new_cache["k"], new_cache["k_scale"], x.dtype)
+        cv = _dequantize_kv(new_cache["v"], new_cache["v_scale"], x.dtype)
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+    # attend over the full (static) cache; mask positions beyond pos
+    sk = ck.shape[1]
+    kvh, dh = cfg.n_kv_heads, cfg.head_dim
+    h = cfg.n_heads
+    rep = h // kvh
+    cd = jnp.dtype(cfg.compute_dtype)
+    qg = q.reshape(b, 1, kvh, rep, dh)
+    scores = jnp.einsum(
+        "bqkrd,bskd->bkrqs", qg.astype(cd), ck.astype(cd),
+        preferred_element_type=jnp.float32,
+    ) / (dh ** 0.5)
+    valid = (jnp.arange(sk) <= pos)[None, None, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum(
+        "bkrqs,bskd->bqkrd", w.astype(cd), cv.astype(cd),
+        preferred_element_type=jnp.float32,
+    ).reshape(b, 1, h * dh).astype(x.dtype)
+    out = dot(o, p["wo"], cd).astype(x.dtype)
+    if quantized:
+        return out, new_cache
+    return out, {"k": ck, "v": cv}

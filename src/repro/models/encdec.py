@@ -1,0 +1,242 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment, the conv/audio frontend is a STUB: ``input_specs`` feeds
+precomputed frame embeddings (b, s_enc, d_model) directly. Positions are
+sinusoidal (parameter-free, so 32k/500k decode shapes need no giant learned
+tables). Decoder = causal self-attention + cross-attention + GELU MLP,
+layernorm throughout (whisper convention).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention as attn
+from repro.models.attention import _sdpa  # shared scaled-dot-product core
+from repro.models.transformer import remat_wrap, scan_or_unroll
+from repro.models.layers import (
+    cross_entropy,
+    dot,
+    embed_init,
+    embed_lookup,
+    mlp_apply,
+    mlp_init,
+    norm_apply,
+    norm_init,
+    uniform_init,
+)
+
+__all__ = [
+    "encdec_init",
+    "encdec_train_loss",
+    "encdec_prefill",
+    "encdec_decode_step",
+    "encdec_cache_spec",
+]
+
+
+def _sinusoid(positions, d_model):
+    half = d_model // 2
+    freq = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _xattn_init(key, cfg, dtype):
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = (1.0 / d) ** 0.5
+    return {
+        "wq": uniform_init(ks[0], (d, h * dh), s, dtype),
+        "wk": uniform_init(ks[1], (d, h * dh), s, dtype),
+        "wv": uniform_init(ks[2], (d, h * dh), s, dtype),
+        "wo": uniform_init(ks[3], (h * dh, d), (1.0 / (h * dh)) ** 0.5, dtype),
+    }
+
+
+def _enc_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": norm_init(cfg.d_model, cfg.norm_type, dtype),
+        "attn": attn.attn_init(ks[0], cfg, dtype),
+        "ln2": norm_init(cfg.d_model, cfg.norm_type, dtype),
+        "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype),
+    }
+
+
+def _dec_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": norm_init(cfg.d_model, cfg.norm_type, dtype),
+        "self": attn.attn_init(ks[0], cfg, dtype),
+        "ln_x": norm_init(cfg.d_model, cfg.norm_type, dtype),
+        "cross": _xattn_init(ks[1], cfg, dtype),
+        "ln2": norm_init(cfg.d_model, cfg.norm_type, dtype),
+        "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype),
+    }
+
+
+def encdec_init(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ks[0], cfg.n_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": embed_init(ks[2], cfg.padded_vocab, cfg.d_model, dtype),
+        "enc_layers": jax.vmap(partial(_enc_layer_init, cfg=cfg, dtype=dtype))(enc_keys),
+        "enc_norm": norm_init(cfg.d_model, cfg.norm_type, dtype),
+        "dec_layers": jax.vmap(partial(_dec_layer_init, cfg=cfg, dtype=dtype))(dec_keys),
+        "final_norm": norm_init(cfg.d_model, cfg.norm_type, dtype),
+        "head": uniform_init(ks[3], (cfg.d_model, cfg.padded_vocab), cfg.d_model ** -0.5, dtype),
+    }
+
+
+def _encode(params, frames, cfg):
+    b, s, _ = frames.shape
+    pos = jnp.arange(s, dtype=jnp.int32)
+    x = frames + _sinusoid(pos, cfg.d_model)[None].astype(frames.dtype)
+    positions = jnp.broadcast_to(pos[None, :], (b, s))
+
+    def body(carry, lp):
+        h = carry + attn.attn_train(
+            norm_apply(carry, lp["ln1"], cfg.norm_type), lp["attn"], cfg, positions, causal=False
+        )
+        h = h + mlp_apply(norm_apply(h, lp["ln2"], cfg.norm_type), lp["mlp"],
+                          cfg.mlp_type, jnp.dtype(cfg.compute_dtype))
+        return h, None
+
+    body = remat_wrap(body, cfg)
+    x, _ = scan_or_unroll(body, x, params["enc_layers"], cfg)
+    return norm_apply(x, params["enc_norm"], cfg.norm_type)
+
+
+def _cross_attn(x, memory_kv, lp, cfg):
+    """x: (b, sq, d); memory_kv: precomputed {"k","v"}: (b, s_enc, h, dh)."""
+    b, sq, _ = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    cd = jnp.dtype(cfg.compute_dtype)
+    q = dot(x, lp["wq"], cd).reshape(b, sq, h, dh).astype(x.dtype)
+    o = _sdpa(q, memory_kv["k"], memory_kv["v"], cfg, causal=False)
+    return dot(o, lp["wo"], cd).astype(x.dtype)
+
+
+def _memory_kv(memory, lp, cfg):
+    b, s, _ = memory.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    cd = jnp.dtype(cfg.compute_dtype)
+    k = dot(memory, lp["wk"], cd).reshape(b, s, h, dh).astype(memory.dtype)
+    v = dot(memory, lp["wv"], cd).reshape(b, s, h, dh).astype(memory.dtype)
+    return {"k": k, "v": v}
+
+
+def _dec_layer_train(x, memory, lp, cfg, positions):
+    h = x + attn.attn_train(norm_apply(x, lp["ln1"], cfg.norm_type), lp["self"], cfg, positions)
+    mkv = _memory_kv(memory, lp["cross"], cfg)
+    h = h + _cross_attn(norm_apply(h, lp["ln_x"], cfg.norm_type), mkv, lp["cross"], cfg)
+    return h + mlp_apply(norm_apply(h, lp["ln2"], cfg.norm_type), lp["mlp"],
+                         cfg.mlp_type, jnp.dtype(cfg.compute_dtype))
+
+
+def _logits(x, params, cfg):
+    cd = jnp.dtype(cfg.compute_dtype)
+    logits = jnp.matmul(x.astype(cd), params["head"].astype(cd),
+                        preferred_element_type=jnp.float32)
+    vmask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+    return jnp.where(vmask[None, None, :], logits, -1e30)
+
+
+def encdec_forward(params, batch, cfg):
+    memory = _encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    pos = jnp.arange(s, dtype=jnp.int32)
+    x = embed_lookup(tokens, params["embed"])
+    x = x + _sinusoid(pos, cfg.d_model)[None].astype(x.dtype)
+    positions = jnp.broadcast_to(pos[None, :], (b, s))
+
+    def body(carry, lp):
+        return _dec_layer_train(carry, memory, lp, cfg, positions), None
+
+    body = remat_wrap(body, cfg)
+    x, _ = scan_or_unroll(body, x, params["dec_layers"], cfg)
+    x = norm_apply(x, params["final_norm"], cfg.norm_type)
+    return _logits(x, params, cfg)
+
+
+def encdec_train_loss(params, batch, cfg):
+    return cross_entropy(encdec_forward(params, batch, cfg), batch["labels"], cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def encdec_cache_spec(cfg, batch, enc_len, max_dec_len, dtype):
+    L, h, dh, kvh = cfg.n_layers, cfg.n_heads, cfg.head_dim, cfg.n_kv_heads
+    return {
+        "self": {
+            "k": jax.ShapeDtypeStruct((L, batch, max_dec_len, kvh, dh), dtype),
+            "v": jax.ShapeDtypeStruct((L, batch, max_dec_len, kvh, dh), dtype),
+        },
+        "cross": {
+            "k": jax.ShapeDtypeStruct((L, batch, enc_len, h, dh), dtype),
+            "v": jax.ShapeDtypeStruct((L, batch, enc_len, h, dh), dtype),
+        },
+    }
+
+
+def encdec_prefill(params, batch, cfg, *, max_dec_len=None):
+    """Encode frames + prefill decoder prompt; returns (logits, caches)."""
+    memory = _encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    max_dec_len = max_dec_len or s
+    pad = max_dec_len - s
+    pos = jnp.arange(s, dtype=jnp.int32)
+    x = embed_lookup(tokens, params["embed"])
+    x = x + _sinusoid(pos, cfg.d_model)[None].astype(x.dtype)
+    positions = jnp.broadcast_to(pos[None, :], (b, s))
+
+    def body(carry, lp):
+        x_in = carry
+        h_norm = norm_apply(x_in, lp["ln1"], cfg.norm_type)
+        a, self_kv = attn.attn_prefill(h_norm, lp["self"], cfg, positions)
+        h = x_in + a
+        mkv = _memory_kv(memory, lp["cross"], cfg)
+        h = h + _cross_attn(norm_apply(h, lp["ln_x"], cfg.norm_type), mkv, lp["cross"], cfg)
+        h = h + mlp_apply(norm_apply(h, lp["ln2"], cfg.norm_type), lp["mlp"],
+                          cfg.mlp_type, jnp.dtype(cfg.compute_dtype))
+        self_kv = jax.tree.map(
+            lambda c: jnp.pad(c, ((0, 0), (0, pad)) + ((0, 0),) * (c.ndim - 2)), self_kv
+        )
+        return h, (self_kv, mkv)
+
+    x, (self_kvs, cross_kvs) = scan_or_unroll(body, x, params["dec_layers"], cfg)
+    x = norm_apply(x, params["final_norm"], cfg.norm_type)
+    return _logits(x[:, -1:, :], params, cfg), {"self": self_kvs, "cross": cross_kvs}
+
+
+def encdec_decode_step(params, cache, token, pos, cfg):
+    b = token.shape[0]
+    x = embed_lookup(token, params["embed"])
+    x = x + _sinusoid(jnp.full((1,), pos, jnp.int32), cfg.d_model)[None].astype(x.dtype)
+
+    def body(carry, xs):
+        lp, self_kv, cross_kv = xs
+        x_in = carry
+        h_norm = norm_apply(x_in, lp["ln1"], cfg.norm_type)
+        a, new_self = attn.attn_decode(h_norm, lp["self"], cfg, self_kv, pos)
+        h = x_in + a
+        h = h + _cross_attn(norm_apply(h, lp["ln_x"], cfg.norm_type), cross_kv, lp["cross"], cfg)
+        h = h + mlp_apply(norm_apply(h, lp["ln2"], cfg.norm_type), lp["mlp"],
+                          cfg.mlp_type, jnp.dtype(cfg.compute_dtype))
+        return h, new_self
+
+    x, new_self_kvs = scan_or_unroll(body, x, (params["dec_layers"], cache["self"], cache["cross"]), cfg)
+    x = norm_apply(x, params["final_norm"], cfg.norm_type)
+    return _logits(x, params, cfg), {"self": new_self_kvs, "cross": cache["cross"]}

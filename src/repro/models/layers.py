@@ -1,0 +1,152 @@
+"""Shared model building blocks (pure functions over explicit param pytrees)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dot",
+    "rmsnorm",
+    "layernorm",
+    "norm_apply",
+    "norm_init",
+    "mlp_init",
+    "mlp_apply",
+    "rope_freqs",
+    "rope_apply",
+    "embed_init",
+    "embed_lookup",
+    "unembed",
+    "cross_entropy",
+    "uniform_init",
+]
+
+
+def uniform_init(key, shape, scale, dtype):
+    """Scaled truncated-normal-ish init (uniform for cheap determinism)."""
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def dot(x: jax.Array, w: jax.Array, compute_dtype) -> jax.Array:
+    """Matmul in the compute dtype with f32 accumulation (MXU convention)."""
+    return jnp.matmul(
+        x.astype(compute_dtype), w.astype(compute_dtype),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def rmsnorm(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm(x, w, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32) + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm_init(d, norm_type, dtype):
+    if norm_type == "rmsnorm":
+        return {"w": jnp.ones((d,), dtype)}
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def norm_apply(x, p, norm_type):
+    if norm_type == "rmsnorm":
+        return rmsnorm(x, p["w"])
+    return layernorm(x, p["w"], p["b"])
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model, d_ff, mlp_type, dtype):
+    ks = jax.random.split(key, 3)
+    scale_in = (1.0 / d_model) ** 0.5
+    scale_out = (1.0 / d_ff) ** 0.5
+    if mlp_type == "swiglu":
+        return {
+            "wg": uniform_init(ks[0], (d_model, d_ff), scale_in, dtype),
+            "wu": uniform_init(ks[1], (d_model, d_ff), scale_in, dtype),
+            "wd": uniform_init(ks[2], (d_ff, d_model), scale_out, dtype),
+        }
+    return {
+        "wi": uniform_init(ks[0], (d_model, d_ff), scale_in, dtype),
+        "wd": uniform_init(ks[2], (d_ff, d_model), scale_out, dtype),
+    }
+
+
+def mlp_apply(x, p, mlp_type, compute_dtype):
+    if mlp_type == "swiglu":
+        g = dot(x, p["wg"], compute_dtype)
+        u = dot(x, p["wu"], compute_dtype)
+        h = jax.nn.silu(g) * u
+        return dot(h.astype(x.dtype), p["wd"], compute_dtype).astype(x.dtype)
+    h = dot(x, p["wi"], compute_dtype)
+    if mlp_type == "relu2":  # nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(h))
+    else:  # gelu
+        h = jax.nn.gelu(h)
+    return dot(h.astype(x.dtype), p["wd"], compute_dtype).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim, theta):
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    return inv  # (half,)
+
+
+def rope_apply(x, positions, theta):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    half = x.shape[-1] // 2
+    inv = rope_freqs(x.shape[-1], theta)
+    ang = positions[..., :, None].astype(jnp.float32) * inv[None, :]  # (..., seq, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    cos = jnp.cos(ang)[..., :, None, :]
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, padded_vocab, d_model, dtype):
+    return {"table": uniform_init(key, (padded_vocab, d_model), d_model ** -0.5, dtype)}
+
+
+def embed_lookup(tokens, p):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(x, p, compute_dtype):
+    """Logits = x @ table^T (tied); returns f32 logits."""
+    return jnp.matmul(
+        x.astype(compute_dtype), p["table"].T.astype(compute_dtype),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def cross_entropy(logits, labels, vocab_size):
+    """Mean token NLL; ignores padded vocab tail via label validity."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    return jnp.mean(nll)

@@ -1,0 +1,123 @@
+"""Mixture-of-Experts layer (DeepSeek-MoE style: shared + fine-grained routed).
+
+GShard/Switch-style capacity dispatch: top-k routing with a static per-expert
+capacity, dispatch/combine as dense einsums (TPU-native; experts shard over
+the ``model`` mesh axis = expert parallelism). Overflowed tokens fall through
+on the residual path (standard capacity semantics).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import dot, mlp_init, uniform_init
+
+
+def _constrain(x, spec, cfg):
+    """Optional explicit EP sharding annotation (cfg.moe_shard_constraints).
+    No-op outside a mesh context."""
+    if not cfg.moe_shard_constraints:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):
+        return x
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, cfg, dtype):
+    d = cfg.d_model
+    m = cfg.moe
+    ks = jax.random.split(key, 5)
+    s_in = (1.0 / d) ** 0.5
+    s_out = (1.0 / m.d_ff_expert) ** 0.5
+    p = {
+        "router": uniform_init(ks[0], (d, m.n_routed), s_in, jnp.float32),
+        "wg": uniform_init(ks[1], (m.n_routed, d, m.d_ff_expert), s_in, dtype),
+        "wu": uniform_init(ks[2], (m.n_routed, d, m.d_ff_expert), s_in, dtype),
+        "wd": uniform_init(ks[3], (m.n_routed, m.d_ff_expert, d), s_out, dtype),
+    }
+    if m.n_shared > 0:
+        p["shared"] = mlp_init(ks[4], d, m.n_shared * m.d_ff_expert, "swiglu", dtype)
+    return p
+
+
+def moe_apply(x, p, cfg):
+    """x: (b, s, d) -> (b, s, d). Router in f32; experts in compute dtype.
+
+    GShard capacity dispatch over fixed-size groups: the (gs, E, C) one-hot
+    tensors are quadratic in group size, so ``group_size`` is held constant
+    (default 1024) no matter the global token count — the group axis shards
+    over ``data`` and experts over ``model`` (EP).
+    """
+    b, s, d = x.shape
+    m = cfg.moe
+    cd = jnp.dtype(cfg.compute_dtype)
+    t = b * s
+    gs = min(m.group_size, t)
+    if t % gs:
+        raise ValueError(f"token count {t} not divisible by MoE group size {gs}")
+    n_groups = t // gs
+    xg = x.reshape(n_groups, gs, d)
+
+    # --- routing (f32 for numerics)
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, m.top_k)             # (g, s, k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+
+    capacity = max(1, int(m.capacity_factor * gs * m.top_k / m.n_routed))
+
+    # --- position within expert, per group, over flattened (gs*k) choices
+    onehot = jax.nn.one_hot(gate_idx, m.n_routed, dtype=jnp.int32)  # (g, s, k, E)
+    flat = onehot.reshape(n_groups, gs * m.top_k, m.n_routed)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat                 # (g, s*k, E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(n_groups, gs, m.top_k)
+    keep = pos < capacity
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # --- dispatch one-hots as dense einsums (TPU-native EP)
+    cap_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity, dtype=cd)
+    disp = jnp.einsum("gske,gskc->gsec", onehot.astype(cd), cap_oh)  # (g, s, E, C)
+    disp = _constrain(disp, ("data", None, "model", None), cfg)
+    x_exp = jnp.einsum("gsec,gsd->gecd", disp, xg.astype(cd))        # (g, E, C, d)
+    x_exp = _constrain(x_exp, ("data", "model", None, None), cfg)
+
+    # --- expert FFNs (batched over E; E shards over the model axis = EP)
+    g_act = jnp.einsum("gecd,edf->gecf", x_exp, p["wg"].astype(cd),
+                       preferred_element_type=jnp.float32)
+    u_act = jnp.einsum("gecd,edf->gecf", x_exp, p["wu"].astype(cd),
+                       preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g_act) * u_act).astype(cd)
+    y_exp = jnp.einsum("gecf,efd->gecd", h, p["wd"].astype(cd),
+                       preferred_element_type=jnp.float32).astype(cd)
+    y_exp = _constrain(y_exp, ("data", "model", None, None), cfg)
+
+    # --- combine (dispatch weighted by gates)
+    gate_disp = jnp.einsum("gske,gskc,gsk->gsec", onehot.astype(cd), cap_oh,
+                           gate_vals.astype(cd))
+    y = jnp.einsum("gsec,gecd->gsd", gate_disp, y_exp)
+    out = y.reshape(b, s, d).astype(x.dtype)
+
+    if m.n_shared > 0:
+        sh = p["shared"]
+        g2 = dot(x, sh["wg"], cd)
+        u2 = dot(x, sh["wu"], cd)
+        out = out + dot((jax.nn.silu(g2) * u2).astype(x.dtype), sh["wd"], cd).astype(x.dtype)
+    return out
+
+
+def moe_aux_loss(x, p, cfg):
+    """Load-balance auxiliary loss (mean fraction * mean prob per expert)."""
+    b, s, d = x.shape
+    m = cfg.moe
+    xf = x.reshape(b * s, d)
+    logits = jnp.matmul(xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(probs, m.top_k)
+    frac = jnp.mean(jax.nn.one_hot(idx, m.n_routed), axis=(0, 1))
+    imp = jnp.mean(probs, axis=0)
+    return m.n_routed * jnp.sum(frac * imp)

@@ -1,0 +1,187 @@
+"""Architecture registry: one API for all assigned architectures.
+
+``build_model(cfg)`` returns a ``ModelApi`` whose entry points cover the
+assigned shape kinds:
+
+  train_loss(params, batch)              — train_* shapes
+  prefill(params, batch)                 — prefill_* shapes
+  decode_step(params, cache, token, pos) — decode_* / long_* shapes
+
+``input_specs(shape)`` yields ShapeDtypeStruct stand-ins for every input of
+the relevant entry point (dry-run contract: no device allocation).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, hybrid, rwkv_model, transformer
+
+__all__ = ["ModelApi", "build_model", "zeros_like_specs"]
+
+
+class ModelApi(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    train_loss: Callable[..., jax.Array]
+    prefill: Callable[..., tuple]
+    decode_step: Callable[..., tuple]
+    input_specs: Callable[[ShapeConfig], dict]
+
+
+def zeros_like_specs(specs):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
+
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def _decoder_api(cfg: ModelConfig) -> ModelApi:
+    act_dt = jnp.dtype(cfg.compute_dtype)
+
+    def input_specs(shape: ShapeConfig):
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            batch = {"tokens": _tok(b, s), "labels": _tok(b, s)}
+            if cfg.frontend == "vision":
+                p = cfg.n_frontend_tokens
+                batch = {
+                    "tokens": _tok(b, s - p),
+                    "labels": _tok(b, s - p),
+                    "patches": jax.ShapeDtypeStruct((b, p, cfg.d_model), act_dt),
+                }
+            return {"batch": batch}
+        if shape.kind == "prefill":
+            batch = {"tokens": _tok(b, s)}
+            if cfg.frontend == "vision":
+                p = cfg.n_frontend_tokens
+                batch = {
+                    "tokens": _tok(b, s - p),
+                    "patches": jax.ShapeDtypeStruct((b, p, cfg.d_model), act_dt),
+                }
+            return {"batch": batch}
+        # decode: one new token against a cache of seq_len
+        return {
+            "cache": transformer.decode_cache_spec(cfg, b, s, act_dt),
+            "token": _tok(b, 1),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: transformer.decoder_init(key, cfg),
+        train_loss=lambda params, batch: transformer.decoder_train_loss(params, batch, cfg),
+        prefill=lambda params, batch, **kw: transformer.decoder_prefill(params, batch, cfg, **kw),
+        decode_step=lambda params, cache, token, pos: transformer.decoder_decode_step(
+            params, cache, token, pos, cfg
+        ),
+        input_specs=input_specs,
+    )
+
+
+def _hybrid_api(cfg: ModelConfig) -> ModelApi:
+    act_dt = jnp.dtype(cfg.compute_dtype)
+
+    def input_specs(shape: ShapeConfig):
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {"batch": {"tokens": _tok(b, s), "labels": _tok(b, s)}}
+        if shape.kind == "prefill":
+            return {"batch": {"tokens": _tok(b, s)}}
+        return {
+            "cache": hybrid.hybrid_state_spec(cfg, b, s, act_dt),
+            "token": _tok(b, 1),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: hybrid.hybrid_init(key, cfg),
+        train_loss=lambda params, batch: hybrid.hybrid_train_loss(params, batch, cfg),
+        prefill=lambda params, batch, **kw: hybrid.hybrid_prefill(params, batch, cfg, **kw),
+        decode_step=lambda params, cache, token, pos: hybrid.hybrid_decode_step(
+            params, cache, token, pos, cfg
+        ),
+        input_specs=input_specs,
+    )
+
+
+def _rwkv_api(cfg: ModelConfig) -> ModelApi:
+    act_dt = jnp.dtype(cfg.compute_dtype)
+
+    def input_specs(shape: ShapeConfig):
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {"batch": {"tokens": _tok(b, s), "labels": _tok(b, s)}}
+        if shape.kind == "prefill":
+            return {"batch": {"tokens": _tok(b, s)}}
+        return {
+            "cache": rwkv_model.rwkv_state_spec(cfg, b, act_dt),
+            "token": _tok(b, 1),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: rwkv_model.rwkv_model_init(key, cfg),
+        train_loss=lambda params, batch: rwkv_model.rwkv_train_loss(params, batch, cfg),
+        prefill=lambda params, batch: rwkv_model.rwkv_prefill(params, batch, cfg),
+        decode_step=lambda params, cache, token, pos: rwkv_model.rwkv_decode_step(
+            params, cache, token, pos, cfg
+        ),
+        input_specs=input_specs,
+    )
+
+
+def _encdec_api(cfg: ModelConfig) -> ModelApi:
+    act_dt = jnp.dtype(cfg.compute_dtype)
+
+    def input_specs(shape: ShapeConfig):
+        b, s = shape.global_batch, shape.seq_len
+        s_dec = max(s // cfg.dec_ratio, 64)
+        if shape.kind == "train":
+            return {
+                "batch": {
+                    "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), act_dt),
+                    "tokens": _tok(b, s_dec),
+                    "labels": _tok(b, s_dec),
+                }
+            }
+        if shape.kind == "prefill":
+            return {
+                "batch": {
+                    "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), act_dt),
+                    "tokens": _tok(b, s_dec),
+                }
+            }
+        return {
+            "cache": encdec.encdec_cache_spec(cfg, b, s, s, act_dt),
+            "token": _tok(b, 1),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: encdec.encdec_init(key, cfg),
+        train_loss=lambda params, batch: encdec.encdec_train_loss(params, batch, cfg),
+        prefill=lambda params, batch, **kw: encdec.encdec_prefill(params, batch, cfg, **kw),
+        decode_step=lambda params, cache, token, pos: encdec.encdec_decode_step(
+            params, cache, token, pos, cfg
+        ),
+        input_specs=input_specs,
+    )
+
+
+def build_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.encdec:
+        return _encdec_api(cfg)
+    if cfg.rwkv is not None:
+        return _rwkv_api(cfg)
+    if cfg.ssm is not None and cfg.attn_every > 0:
+        return _hybrid_api(cfg)
+    return _decoder_api(cfg)

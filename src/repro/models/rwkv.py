@@ -1,0 +1,230 @@
+"""RWKV-6 ("Finch") blocks: data-dependent decay linear attention.
+
+Training uses the chunked matmul formulation (strictly-causal (Q x Q) score
+matmuls with per-channel decay folded into q/k scalings); decode is the O(1)
+recurrence. A step-by-step recurrent reference (`wkv_recurrent`) backs the
+tests.
+
+State per layer: time-mix token shift (b, d), wkv state (b, h, dk, dv),
+channel-mix token shift (b, d).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dot, rmsnorm, uniform_init
+
+__all__ = [
+    "rwkv_init",
+    "rwkv_time_mix_train",
+    "rwkv_channel_mix_train",
+    "rwkv_decode_step",
+    "init_rwkv_state",
+    "wkv_recurrent",
+]
+
+_LOGW_CLIP = 30.0  # bounds per-chunk decay products in the matmul split
+
+
+def rwkv_init(key, cfg, dtype):
+    d = cfg.d_model
+    r = cfg.rwkv
+    h = d // r.head_dim
+    ks = jax.random.split(key, 10)
+    s = (1.0 / d) ** 0.5
+    return {
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "wr": uniform_init(ks[0], (d, d), s, dtype),
+        "wk": uniform_init(ks[1], (d, d), s, dtype),
+        "wv": uniform_init(ks[2], (d, d), s, dtype),
+        "wg": uniform_init(ks[3], (d, d), s, dtype),
+        "w0": jnp.full((d,), -2.0, dtype),  # base log-decay rate
+        "w_lora_a": uniform_init(ks[4], (d, r.decay_lora), s, dtype),
+        "w_lora_b": uniform_init(ks[5], (r.decay_lora, d), (1.0 / r.decay_lora) ** 0.5, dtype),
+        "u_bonus": uniform_init(ks[6], (h, r.head_dim), 0.5, dtype),
+        "ln_x": jnp.ones((d,), dtype),
+        "wo": uniform_init(ks[7], (d, d), s, dtype),
+        # channel mix
+        "cm_mu_k": jnp.full((d,), 0.5, dtype),
+        "cm_mu_r": jnp.full((d,), 0.5, dtype),
+        "cm_wk": uniform_init(ks[8], (d, cfg.d_ff), s, dtype),
+        "cm_wv": uniform_init(ks[9], (cfg.d_ff, d), (1.0 / cfg.d_ff) ** 0.5, dtype),
+        "cm_wr": uniform_init(jax.random.fold_in(key, 77), (d, d), s, dtype),
+    }
+
+
+def _shift(x, x_prev_last):
+    """Token shift: x_{t-1} with x_prev_last (b, d) as position -1."""
+    return jnp.concatenate([x_prev_last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)[None, None, :]
+
+
+def _projections(x, xs, p, cfg):
+    cd = jnp.dtype(cfg.compute_dtype)
+    r = dot(_lerp(x, xs, p["mu_r"]), p["wr"], cd)
+    k = dot(_lerp(x, xs, p["mu_k"]), p["wk"], cd)
+    v = dot(_lerp(x, xs, p["mu_v"]), p["wv"], cd)
+    g = dot(_lerp(x, xs, p["mu_g"]), p["wg"], cd)
+    # data-dependent decay (the RWKV-6 signature)
+    wx = _lerp(x, xs, p["mu_w"])
+    lora = dot(jnp.tanh(dot(wx, p["w_lora_a"], cd)).astype(x.dtype), p["w_lora_b"], cd)
+    logw = -jnp.exp(jnp.clip(p["w0"].astype(jnp.float32)[None, None, :]
+                             + lora.astype(jnp.float32), -8.0, 4.0))  # log w_t <= 0
+    return r.astype(x.dtype), k.astype(x.dtype), v.astype(x.dtype), g.astype(x.dtype), logw
+
+
+def wkv_recurrent(r, k, v, logw, u, state):
+    """Reference recurrence. r/k/v: (b, l, h, dk|dv); logw: (b, l, h, dk).
+
+    y_t = (S_{t-1} + u k_t v_t^T)^T r_t ;  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    def step(s, inp):
+        rt, kt, vt, lwt = inp  # (b,h,dk), ..., (b,h,dk)
+        bonus = jnp.einsum("bhi,hi,bhi,bhj->bhj", rt, u, kt, vt)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s) + bonus
+        s = s * jnp.exp(lwt)[..., None] + jnp.einsum("bhi,bhj->bhij", kt, vt)
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, logw))
+    state, ys = lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def _wkv_chunked(r, k, v, logw, u, state, chunk, unroll=False):
+    """Chunked matmul WKV. Shapes as in wkv_recurrent; l % chunk == 0."""
+    b, l, h, dk = r.shape
+    dv = v.shape[-1]
+    q = chunk
+    nc = l // q
+    f32 = jnp.promote_types(r.dtype, jnp.float32)  # >= f32; f64 under x64 tests
+
+    rc = r.reshape(b, nc, q, h, dk).astype(f32)
+    kc = k.reshape(b, nc, q, h, dk).astype(f32)
+    vc = v.reshape(b, nc, q, h, dv).astype(f32)
+    lw = logw.reshape(b, nc, q, h, dk).astype(f32)
+
+    lpw = jnp.cumsum(lw, axis=2) - lw            # exclusive cumsum: prod_{s<t} w_s
+    lpw_tot = lpw[:, :, -1, :, :] + lw[:, :, -1, :, :]  # full-chunk decay
+
+    # matmul split (clipped to avoid overflow in exp(-lpw))
+    q_dec = rc * jnp.exp(jnp.maximum(lpw, -_LOGW_CLIP))
+    k_dec = kc * jnp.exp(jnp.minimum(-(lpw + lw), _LOGW_CLIP))
+
+    scores = jnp.einsum("bcqhi,bcshi->bchqs", q_dec, k_dec)   # strict-causal
+    mask = jnp.tril(jnp.ones((q, q), bool), k=-1)
+    scores = jnp.where(mask[None, None, None, :, :], scores, 0.0)
+    y_intra = jnp.einsum("bchqs,bcshj->bcqhj", scores, vc)
+
+    # u bonus (diagonal term)
+    bonus = jnp.einsum("bcqhi,hi,bcqhi->bcqh", rc, u.astype(f32), kc)
+    y_intra = y_intra + bonus[..., None] * vc
+
+    # chunk state summaries: sum_s (k_s * prod_{u>s} w_u) v_s^T
+    k_tail = kc * jnp.exp(jnp.maximum(lpw_tot[:, :, None, :, :] - (lpw + lw), -_LOGW_CLIP))
+    s_local = jnp.einsum("bcshi,bcshj->bchij", k_tail, vc)
+
+    def step(s, inp):
+        s_loc, lw_tot, r_dec_c, v_c = inp
+        y_inter = jnp.einsum("bqhi,bhij->bqhj", r_dec_c, s)
+        s = s * jnp.exp(lw_tot)[..., None] + s_loc
+        return s, y_inter
+
+    xs = (
+        jnp.moveaxis(s_local, 1, 0),
+        jnp.moveaxis(lpw_tot, 1, 0),
+        jnp.moveaxis(q_dec, 1, 0),
+        jnp.moveaxis(vc, 1, 0),
+    )
+    if unroll:
+        st = state.astype(f32)
+        ys = []
+        for i in range(nc):
+            st, y = step(st, jax.tree.map(lambda a: a[i], xs))
+            ys.append(y)
+        state = st
+        y_inter = jnp.stack(ys, axis=1)
+    else:
+        state, y_inter = lax.scan(step, state.astype(f32), xs)
+        y_inter = jnp.moveaxis(y_inter, 0, 1)
+
+    y = (y_intra + y_inter).reshape(b, l, h, dv)
+    return y, state
+
+
+def rwkv_time_mix_train(x, p, cfg, x_last, state):
+    """x: (b, l, d). Returns (out, (new_x_last, new_state))."""
+    r_cfg = cfg.rwkv
+    d = cfg.d_model
+    h = d // r_cfg.head_dim
+    b, l, _ = x.shape
+    xs = _shift(x, x_last)
+    r, k, v, g, logw = _projections(x, xs, p, cfg)
+
+    hr = r.reshape(b, l, h, r_cfg.head_dim)
+    hk = k.reshape(b, l, h, r_cfg.head_dim)
+    hv = v.reshape(b, l, h, r_cfg.head_dim)
+    hw = logw.reshape(b, l, h, r_cfg.head_dim)
+
+    y, new_state = _wkv_chunked(hr, hk, hv, hw, p["u_bonus"], state, r_cfg.chunk,
+                                unroll=not cfg.scan_layers)
+    y = y.reshape(b, l, d).astype(x.dtype)
+    y = rmsnorm(y, p["ln_x"]) * jax.nn.silu(g)
+    out = dot(y, p["wo"], jnp.dtype(cfg.compute_dtype)).astype(x.dtype)
+    return out, (x[:, -1, :], new_state)
+
+
+def rwkv_channel_mix_train(x, p, cfg, x_last):
+    cd = jnp.dtype(cfg.compute_dtype)
+    xs = _shift(x, x_last)
+    xk = _lerp(x, xs, p["cm_mu_k"])
+    xr = _lerp(x, xs, p["cm_mu_r"])
+    k = jnp.square(jax.nn.relu(dot(xk, p["cm_wk"], cd))).astype(x.dtype)
+    kv = dot(k, p["cm_wv"], cd).astype(x.dtype)
+    return jax.nn.sigmoid(dot(xr, p["cm_wr"], cd)).astype(x.dtype) * kv, x[:, -1, :]
+
+
+def init_rwkv_state(batch, cfg, dtype):
+    d = cfg.d_model
+    r = cfg.rwkv
+    h = d // r.head_dim
+    return {
+        "tm_x": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, h, r.head_dim, r.head_dim), jnp.float32),
+        "cm_x": jnp.zeros((batch, d), dtype),
+    }
+
+
+def rwkv_decode_step(x, p, cfg, state):
+    """One token through time mix + channel mix. x: (b, 1, d)."""
+    r_cfg = cfg.rwkv
+    d = cfg.d_model
+    h = d // r_cfg.head_dim
+    b = x.shape[0]
+    xs = state["tm_x"][:, None, :].astype(x.dtype)
+    r, k, v, g, logw = _projections(x, xs, p, cfg)
+    hr = r.reshape(b, 1, h, r_cfg.head_dim)
+    hk = k.reshape(b, 1, h, r_cfg.head_dim)
+    hv = v.reshape(b, 1, h, r_cfg.head_dim)
+    hw = logw.reshape(b, 1, h, r_cfg.head_dim)
+    y, wkv = wkv_recurrent(hr, hk, hv, hw, p["u_bonus"], state["wkv"])
+    y = y.reshape(b, 1, d).astype(x.dtype)
+    y = rmsnorm(y, p["ln_x"]) * jax.nn.silu(g)
+    tm_out = dot(y, p["wo"], jnp.dtype(cfg.compute_dtype)).astype(x.dtype)
+
+    return tm_out, {"tm_x": x[:, 0, :], "wkv": wkv, "cm_x": state["cm_x"]}
+
+
+def rwkv_channel_mix_decode(x, p, cfg, state):
+    # _shift handles the single-token case: x_{t-1} comes from the carried state
+    out, cm_x = rwkv_channel_mix_train(x, p, cfg, state["cm_x"])
+    return out, cm_x

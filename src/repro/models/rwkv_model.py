@@ -1,0 +1,130 @@
+"""RWKV-6 decoder-only model wrapper (attention-free)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import rwkv as rw
+from repro.models.transformer import remat_wrap, scan_or_unroll
+from repro.models.layers import (
+    cross_entropy,
+    embed_init,
+    embed_lookup,
+    norm_apply,
+    norm_init,
+    uniform_init,
+)
+
+__all__ = [
+    "rwkv_model_init",
+    "rwkv_train_loss",
+    "rwkv_prefill",
+    "rwkv_decode_step",
+    "rwkv_state_spec",
+]
+
+
+def _layer_init(key, cfg, dtype):
+    return {
+        "ln1": norm_init(cfg.d_model, cfg.norm_type, dtype),
+        "ln2": norm_init(cfg.d_model, cfg.norm_type, dtype),
+        "mix": rw.rwkv_init(key, cfg, dtype),
+    }
+
+
+def rwkv_model_init(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    return {
+        "embed": embed_init(ks[1], cfg.padded_vocab, cfg.d_model, dtype),
+        "layers": jax.vmap(partial(_layer_init, cfg=cfg, dtype=dtype))(layer_keys),
+        "final_norm": norm_init(cfg.d_model, cfg.norm_type, dtype),
+        "head": uniform_init(ks[2], (cfg.d_model, cfg.padded_vocab), cfg.d_model ** -0.5, dtype),
+    }
+
+
+def _logits(x, params, cfg):
+    cd = jnp.dtype(cfg.compute_dtype)
+    logits = jnp.matmul(x.astype(cd), params["head"].astype(cd),
+                        preferred_element_type=jnp.float32)
+    vmask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+    return jnp.where(vmask[None, None, :], logits, -1e30)
+
+
+def _run_layers(x, params, cfg, states=None, *, collect_states=False):
+    """states: per-layer stacked {tm_x, wkv, cm_x} or None (zeros)."""
+    b = x.shape[0]
+    if states is None:
+        zero = rw.init_rwkv_state(b, cfg, x.dtype)
+        states = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), zero
+        )
+
+    def body(carry, xs):
+        lp, st = xs
+        h = carry
+        tm_in = norm_apply(h, lp["ln1"], cfg.norm_type)
+        tm_out, (tm_x, wkv) = rw.rwkv_time_mix_train(tm_in, lp["mix"], cfg, st["tm_x"], st["wkv"])
+        h = h + tm_out
+        cm_in = norm_apply(h, lp["ln2"], cfg.norm_type)
+        cm_out, cm_x = rw.rwkv_channel_mix_train(cm_in, lp["mix"], cfg, st["cm_x"])
+        h = h + cm_out
+        return h, {"tm_x": tm_x, "wkv": wkv, "cm_x": cm_x}
+
+    body = remat_wrap(body, cfg)
+    x, new_states = scan_or_unroll(body, x, (params["layers"], states), cfg)
+    return x, new_states
+
+
+def rwkv_train_loss(params, batch, cfg):
+    x = embed_lookup(batch["tokens"], params["embed"])
+    x, _ = _run_layers(x, params, cfg)
+    x = norm_apply(x, params["final_norm"], cfg.norm_type)
+    return cross_entropy(_logits(x, params, cfg), batch["labels"], cfg.vocab_size)
+
+
+def rwkv_state_spec(cfg, batch, dtype):
+    d = cfg.d_model
+    h = d // cfg.rwkv.head_dim
+    hd = cfg.rwkv.head_dim
+    L = cfg.n_layers
+    return {
+        "tm_x": jax.ShapeDtypeStruct((L, batch, d), dtype),
+        "wkv": jax.ShapeDtypeStruct((L, batch, h, hd, hd), jnp.float32),
+        "cm_x": jax.ShapeDtypeStruct((L, batch, d), dtype),
+    }
+
+
+def rwkv_prefill(params, batch, cfg):
+    """Prompt pass; returns (last logits, per-layer states) — O(1) state size,
+    which is what makes the 500k-context decode shape viable (DESIGN.md)."""
+    x = embed_lookup(batch["tokens"], params["embed"])
+    x, states = _run_layers(x, params, cfg)
+    x = norm_apply(x, params["final_norm"], cfg.norm_type)
+    return _logits(x[:, -1:, :], params, cfg), states
+
+
+def rwkv_decode_step(params, states, token, pos, cfg):
+    del pos  # position-free architecture
+    x = embed_lookup(token, params["embed"])
+
+    def body(carry, xs):
+        lp, st = xs
+        h = carry
+        tm_in = norm_apply(h, lp["ln1"], cfg.norm_type)
+        tm_out, st2 = rw.rwkv_decode_step(tm_in, lp["mix"], cfg, st)
+        h = h + tm_out
+        cm_in = norm_apply(h, lp["ln2"], cfg.norm_type)
+        cm_out, cm_x = rw.rwkv_channel_mix_decode(cm_in, lp["mix"], cfg, st)
+        h = h + cm_out
+        st2 = {"tm_x": st2["tm_x"], "wkv": st2["wkv"], "cm_x": cm_x}
+        return h, st2
+
+    x, new_states = scan_or_unroll(body, x, (params["layers"], states), cfg)
+    x = norm_apply(x, params["final_norm"], cfg.norm_type)
+    return _logits(x, params, cfg), new_states

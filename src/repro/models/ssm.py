@@ -1,0 +1,198 @@
+"""Mamba2 (SSD) block: chunked matmul-form training scan + O(1) decode step.
+
+The chunked state-space-dual formulation keeps everything MXU-shaped:
+within-chunk interactions are (Q x Q) masked matmuls, inter-chunk state is a
+short lax.scan over chunk summaries (b, h, d_state, head_dim). Decode keeps
+(conv buffer, SSM state) per layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dot, rmsnorm, uniform_init
+
+__all__ = ["ssm_init", "ssm_train", "ssm_decode", "init_ssm_state", "ssm_dims"]
+
+
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def ssm_init(key, cfg, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    sc = (1.0 / d) ** 0.5
+    return {
+        "in_proj": uniform_init(
+            ks[0], (d, 2 * d_inner + 2 * s.d_state + n_heads), sc, dtype
+        ),
+        "conv_w": uniform_init(ks[1], (s.conv_width, conv_dim), 0.5, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(dtype)),
+        "dt_bias": jnp.zeros((n_heads,), dtype),
+        "d_skip": jnp.ones((n_heads,), dtype),
+        "norm_w": jnp.ones((d_inner,), dtype),
+        "out_proj": uniform_init(ks[2], (d_inner, d), (1.0 / d_inner) ** 0.5, dtype),
+    }
+
+
+def _split(zxbcdt, cfg):
+    s = cfg.ssm
+    d_inner, n_heads, _ = ssm_dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : d_inner + d_inner + 2 * s.d_state]
+    dt = zxbcdt[..., -n_heads:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv along time. xbc: (b, l, c); w: (k, c)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(k):
+        out = out + pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :]
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def ssm_train(x, p, cfg, *, return_final_state=False):
+    """x: (b, l, d) -> (b, l, d); l must be a multiple of cfg.ssm.chunk."""
+    s = cfg.ssm
+    cd = jnp.dtype(cfg.compute_dtype)
+    b, l, d = x.shape
+    d_inner, n_heads, _ = ssm_dims(cfg)
+    hd = s.head_dim
+    q = min(s.chunk, l)
+    if l % q:
+        raise ValueError(f"sequence length {l} not divisible by SSD chunk {q}")
+    nc = l // q
+
+    zxbcdt = dot(x, p["in_proj"], cd).astype(x.dtype)
+    z, xbc, dt_raw = _split(zxbcdt, cfg)
+    xbc_preact = xbc  # raw conv inputs (terminal conv state for decode)
+    xbc = _causal_conv(xbc, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    xs = xbc[..., :d_inner].reshape(b, l, n_heads, hd)
+    bmat = xbc[..., d_inner : d_inner + s.d_state]          # (b, l, n)
+    cmat = xbc[..., d_inner + s.d_state :]                  # (b, l, n)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))            # (h,) negative
+    da = dt * a[None, None, :]                               # (b, l, h) <= 0
+
+    # chunked views
+    xs_c = xs.reshape(b, nc, q, n_heads, hd)
+    b_c = bmat.reshape(b, nc, q, s.d_state)
+    c_c = cmat.reshape(b, nc, q, s.d_state)
+    dt_c = dt.reshape(b, nc, q, n_heads)
+    da_c = da.reshape(b, nc, q, n_heads)
+
+    seg = jnp.cumsum(da_c, axis=2)                           # inclusive (b,nc,q,h)
+    seg_tot = seg[:, :, -1, :]                               # (b, nc, h)
+
+    # within-chunk: Y_diag[t] = sum_{s<=t} exp(seg_t - seg_s) CB[t,s] dt_s x_s
+    cb = jnp.einsum("bcqn,bcsn->bcqs", c_c.astype(cd), b_c.astype(cd),
+                    preferred_element_type=jnp.float32)      # (b,nc,q,q)
+    ldecay = seg[:, :, :, None, :] - seg[:, :, None, :, :]   # (b,nc,t,s,h)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    # mask INSIDE the exp: exp of masked (positive) exponents would be inf and
+    # poison the backward pass through the where.
+    decay = jnp.exp(jnp.where(causal[None, None, :, :, None], ldecay, -jnp.inf))
+    w_ts = cb[..., None] * decay                             # (b,nc,t,s,h)
+    xdt = xs_c.astype(jnp.float32) * dt_c[..., None]         # (b,nc,q,h,p)
+    y_diag = jnp.einsum("bctsh,bcshp->bcthp", w_ts, xdt)
+
+    # chunk summary states: S_c = sum_s exp(seg_tot - seg_s) dt_s B_s x_s^T
+    dec_to_end = jnp.exp(seg_tot[:, :, None, :] - seg)       # (b,nc,q,h)
+    bx = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", b_c.astype(jnp.float32),
+                    dec_to_end * dt_c, xs_c.astype(jnp.float32))
+
+    # inter-chunk recurrence over chunk states
+    def step(state, inp):
+        bx_c, seg_tot_c = inp                                # (b,h,n,p), (b,h)
+        out_state = state                                    # state BEFORE chunk
+        new_state = state * jnp.exp(seg_tot_c)[:, :, None, None] + bx_c
+        return new_state, out_state
+
+    init = jnp.zeros((b, n_heads, s.d_state, hd), jnp.float32)
+    xs_scan = (jnp.moveaxis(bx, 1, 0), jnp.moveaxis(seg_tot, 1, 0))
+    if cfg.scan_layers:
+        final_state, states_prev = lax.scan(step, init, xs_scan)
+        states_prev = jnp.moveaxis(states_prev, 0, 1)        # (b,nc,h,n,p)
+    else:
+        st = init
+        outs = []
+        for i in range(nc):
+            st, o = step(st, jax.tree.map(lambda a: a[i], xs_scan))
+            outs.append(o)
+        final_state = st
+        states_prev = jnp.stack(outs, axis=1)
+
+    # inter-chunk contribution: Y_off[t] = exp(seg_t) C_t . S_prev
+    y_off = jnp.einsum("bcqn,bchnp,bcqh->bcqhp",
+                       c_c.astype(jnp.float32), states_prev, jnp.exp(seg))
+    y = (y_diag + y_off).reshape(b, l, n_heads, hd)
+    y = y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, l, d_inner).astype(x.dtype)
+
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    out = dot(y, p["out_proj"], cd).astype(x.dtype)
+    if return_final_state:
+        # exact terminal decode state from the chunked recurrence: SSM state
+        # after the last chunk + the conv buffer = last conv_width-1 inputs
+        conv_state = xbc_preact[:, -(s.conv_width - 1):, :]
+        return out, {"conv": conv_state, "ssm": final_state}
+    return out
+
+
+def init_ssm_state(batch, cfg, dtype):
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, n_heads, s.d_state, s.head_dim), jnp.float32),
+    }
+
+
+def ssm_decode(x, p, cfg, state):
+    """One-token step. x: (b, 1, d); returns (y, new_state)."""
+    s = cfg.ssm
+    cd = jnp.dtype(cfg.compute_dtype)
+    b = x.shape[0]
+    d_inner, n_heads, conv_dim = ssm_dims(cfg)
+    hd = s.head_dim
+
+    zxbcdt = dot(x, p["in_proj"], cd).astype(x.dtype)
+    z, xbc, dt_raw = _split(zxbcdt, cfg)
+
+    buf = jnp.concatenate([state["conv"], xbc], axis=1)      # (b, k, c)
+    conv_out = jnp.einsum("bkc,kc->bc", buf.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xbc1 = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)
+    new_conv = buf[:, 1:, :]
+
+    xs = xbc1[..., :d_inner].reshape(b, n_heads, hd)
+    bvec = xbc1[:, 0, d_inner : d_inner + s.d_state]
+    cvec = xbc1[:, 0, d_inner + s.d_state :]
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a[None, :])                          # (b, h)
+
+    ssm = state["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", bvec.astype(jnp.float32), dt, xs.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cvec.astype(jnp.float32), ssm)
+    y = y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    out = dot(y, p["out_proj"], cd).astype(x.dtype)
+    return out, {"conv": new_conv, "ssm": ssm}

@@ -1,0 +1,250 @@
+"""Decoder-only transformer (dense / MoE / MLA variants).
+
+Layers are *stacked* (leading n_layers axis) and iterated with ``lax.scan`` so
+the HLO stays O(1) in depth — essential for 80-layer dry-run compiles — with
+optional per-layer remat (activation checkpointing).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    cross_entropy,
+    embed_init,
+    embed_lookup,
+    mlp_apply,
+    mlp_init,
+    norm_apply,
+    norm_init,
+    uniform_init,
+)
+
+
+def scan_or_unroll(body, carry, stacked, cfg, *, length=None):
+    """lax.scan over stacked leaves, or a python unroll when
+    cfg.scan_layers is False (dry-run cost-extraction mode: XLA's
+    cost_analysis counts while-loop bodies ONCE, so roofline measurements
+    use unrolled programs — see launch/dryrun.py)."""
+    if cfg.scan_layers:
+        return lax.scan(body, carry, stacked, length=length)
+    n = length if length is not None else jax.tree.leaves(stacked)[0].shape[0]
+    ys = []
+    for i in range(n):
+        sl = jax.tree.map(lambda a: a[i], stacked) if stacked is not None else None
+        carry, y = body(carry, sl)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *xs: jnp.stack(xs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+
+def remat_wrap(body, cfg):
+    """Activation-checkpoint wrapper honoring cfg.remat_policy.
+
+    "full": recompute everything in backward (min memory, +1 fwd of FLOPs);
+    "dots": save matmul outputs, recompute elementwise only — trades a little
+    memory for removing most recompute FLOPs (see EXPERIMENTS.md §Perf).
+    """
+    if not cfg.remat:
+        return body
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(body)
+
+__all__ = [
+    "decoder_init",
+    "decoder_train_loss",
+    "decoder_prefill",
+    "decoder_decode_step",
+    "decode_cache_spec",
+]
+
+
+def _use_mla(cfg) -> bool:
+    return cfg.mla is not None
+
+
+def _use_moe(cfg) -> bool:
+    return cfg.moe is not None
+
+
+def _layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": norm_init(cfg.d_model, cfg.norm_type, dtype),
+         "ln2": norm_init(cfg.d_model, cfg.norm_type, dtype)}
+    if _use_mla(cfg):
+        p["mla"] = mla_mod.mla_init(ks[0], cfg, dtype)
+    else:
+        p["attn"] = attn.attn_init(ks[0], cfg, dtype)
+    if _use_moe(cfg):
+        p["moe"] = moe_mod.moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype)
+    return p
+
+
+def decoder_init(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(partial(_layer_init, cfg=cfg, dtype=dtype))(layer_keys)
+    params = {
+        "embed": embed_init(k_embed, cfg.padded_vocab, cfg.d_model, dtype),
+        "layers": layers,
+        "final_norm": norm_init(cfg.d_model, cfg.norm_type, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = uniform_init(
+            k_head, (cfg.d_model, cfg.padded_vocab), cfg.d_model ** -0.5, dtype
+        )
+    return params
+
+
+def _mixer_train(x, lp, cfg, positions):
+    if _use_mla(cfg):
+        return mla_mod.mla_train(x, lp["mla"], cfg, positions)
+    return attn.attn_train(x, lp["attn"], cfg, positions)
+
+
+def _ffn(x, lp, cfg):
+    if _use_moe(cfg):
+        return moe_mod.moe_apply(x, lp["moe"], cfg)
+    return mlp_apply(x, lp["mlp"], cfg.mlp_type, jnp.dtype(cfg.compute_dtype))
+
+
+def _layer_train(x, lp, cfg, positions):
+    h = x + _mixer_train(norm_apply(x, lp["ln1"], cfg.norm_type), lp, cfg, positions)
+    return h + _ffn(norm_apply(h, lp["ln2"], cfg.norm_type), lp, cfg)
+
+
+def _logits(x, params, cfg):
+    cd = jnp.dtype(cfg.compute_dtype)
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].T
+    else:
+        w = params["head"]
+    logits = jnp.matmul(x.astype(cd), w.astype(cd), preferred_element_type=jnp.float32)
+    vmask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+    return jnp.where(vmask[None, None, :], logits, -1e30)
+
+
+def _embed_inputs(params, batch, cfg):
+    """Tokens (+ optional VLM patch embeddings prepended)."""
+    x = embed_lookup(batch["tokens"], params["embed"])
+    if cfg.frontend == "vision" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    return x
+
+
+def decoder_forward(params, batch, cfg):
+    x = _embed_inputs(params, batch, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+
+    def body(carry, lp):
+        return _layer_train(carry, lp, cfg, positions), None
+
+    body = remat_wrap(body, cfg)
+    x, _ = scan_or_unroll(body, x, params["layers"], cfg)
+    x = norm_apply(x, params["final_norm"], cfg.norm_type)
+    return _logits(x, params, cfg)
+
+
+def decoder_train_loss(params, batch, cfg):
+    logits = decoder_forward(params, batch, cfg)
+    labels = batch["labels"]
+    if cfg.frontend == "vision" and "patches" in batch:
+        logits = logits[:, -labels.shape[1]:, :]  # loss on the token stream only
+    return cross_entropy(logits, labels, cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def decode_cache_spec(cfg, batch, max_len, dtype):
+    """ShapeDtypeStructs of the stacked decode cache."""
+    if _use_mla(cfg):
+        one = {
+            "c_kv": jax.ShapeDtypeStruct((batch, max_len, cfg.mla.kv_lora_rank), dtype),
+            "k_rope": jax.ShapeDtypeStruct((batch, max_len, cfg.mla.qk_rope_head_dim), dtype),
+        }
+    elif cfg.kv_cache_dtype == "int8":
+        import jax.numpy as _jnp
+        one = {
+            "k": jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads, cfg.head_dim), _jnp.int8),
+            "v": jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads, cfg.head_dim), _jnp.int8),
+            "k_scale": jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads), _jnp.float32),
+            "v_scale": jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads), _jnp.float32),
+        }
+    else:
+        one = {
+            "k": jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        }
+    return jax.tree.map(
+        lambda sd: jax.ShapeDtypeStruct((cfg.n_layers,) + sd.shape, sd.dtype), one
+    )
+
+
+def decoder_prefill(params, batch, cfg, *, max_len=None):
+    """Returns (last-position logits, stacked kv cache padded to max_len)."""
+    x = _embed_inputs(params, batch, cfg)
+    b, s, _ = x.shape
+    max_len = max_len or s
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+
+    def body(carry, lp):
+        x_in = carry
+        h_norm = norm_apply(x_in, lp["ln1"], cfg.norm_type)
+        if _use_mla(cfg):
+            h, cache = mla_mod.mla_prefill(h_norm, lp["mla"], cfg, positions)
+        else:
+            h, cache = attn.attn_prefill(h_norm, lp["attn"], cfg, positions)
+        h = x_in + h
+        out = h + _ffn(norm_apply(h, lp["ln2"], cfg.norm_type), lp, cfg)
+        pad = max_len - s
+        cache = jax.tree.map(
+            lambda c: jnp.pad(c, ((0, 0), (0, pad)) + ((0, 0),) * (c.ndim - 2)), cache
+        )
+        return out, cache
+
+    body = remat_wrap(body, cfg)
+    x, caches = scan_or_unroll(body, x, params["layers"], cfg)
+    x = norm_apply(x, params["final_norm"], cfg.norm_type)
+    return _logits(x[:, -1:, :], params, cfg), caches
+
+
+def decoder_decode_step(params, cache, token, pos, cfg):
+    """One decode step. token: (b, 1) int32; cache: stacked over layers."""
+    x = embed_lookup(token, params["embed"])
+
+    def body(carry, xs):
+        lp, cache_l = xs
+        x_in = carry
+        h_norm = norm_apply(x_in, lp["ln1"], cfg.norm_type)
+        if _use_mla(cfg):
+            h, new_cache = mla_mod.mla_decode(h_norm, lp["mla"], cfg, cache_l, pos)
+        else:
+            h, new_cache = attn.attn_decode(h_norm, lp["attn"], cfg, cache_l, pos)
+        h = x_in + h
+        out = h + _ffn(norm_apply(h, lp["ln2"], cfg.norm_type), lp, cfg)
+        return out, new_cache
+
+    x, new_caches = scan_or_unroll(body, x, (params["layers"], cache), cfg)
+    x = norm_apply(x, params["final_norm"], cfg.norm_type)
+    return _logits(x, params, cfg), new_caches

@@ -1,0 +1,1 @@
+"""Optimizers + the paper-technique features (spectral, compression)."""

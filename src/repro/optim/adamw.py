@@ -1,0 +1,64 @@
+"""AdamW with global-norm clipping (pure pytree functions, no optax)."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "global_norm"]
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: object   # pytree like params
+    v: object
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    lr,
+    betas=(0.9, 0.95),
+    eps=1e-8,
+    weight_decay=0.1,
+    grad_clip=1.0,
+):
+    b1, b2 = betas
+    step = state.step + 1
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-12)) if grad_clip else 1.0
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mhat = m2 / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v2 / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), gnorm

@@ -1,0 +1,78 @@
+"""Spectral gradient projection — the paper's technique as an optimizer feature.
+
+GaLore-style low-rank optimizer-state compression with one crucial change:
+instead of re-running a full SVD every T steps (O(m n r)), each 2-D
+parameter keeps a *streaming* truncated SVD of its gradient history that is
+updated every step with the paper's rank-1 machinery
+(``core.svd_update_truncated``: Brand augmentation + secular/Loewner/Cauchy).
+
+Per step and per (m, n) parameter:
+  1. one power-iteration step (warm-started) extracts the dominant rank-1
+     component of the fresh gradient: g ≈ sigma * u v^T           O(m n)
+  2. the tracker SVD is updated with that rank-1 term               O((m+n) r + r^2 p)
+  3. the gradient is projected onto the rank-r left basis: G_p = U_r^T G
+     and Adam moments live in the (r, n) projected space            O(m n r) -> O(m r n)
+
+Memory: moments shrink from 2 m n to 2 r n floats (plus the (m+r+1) r
+tracker) — the big win for billion-parameter training.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.svd_update import TruncatedSvd, svd_update_truncated
+
+__all__ = ["SpectralState", "spectral_init", "spectral_update_basis", "project", "unproject"]
+
+
+class SpectralState(NamedTuple):
+    tracker: TruncatedSvd     # streaming SVD of the gradient history
+    power_v: jax.Array        # (n,) warm-started power-iteration vector
+    step: jax.Array
+
+
+def spectral_init(key, m: int, n: int, rank: int, dtype=jnp.float32) -> SpectralState:
+    ku, kv, kp = jax.random.split(key, 3)
+    u0, _ = jnp.linalg.qr(jax.random.normal(ku, (m, rank), dtype))
+    v0, _ = jnp.linalg.qr(jax.random.normal(kv, (n, rank), dtype))
+    return SpectralState(
+        tracker=TruncatedSvd(u=u0, s=jnp.zeros((rank,), dtype), v=v0),
+        power_v=jax.random.normal(kp, (n,), dtype) / (n ** 0.5),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+@partial(jax.jit, static_argnames=("method",))
+def spectral_update_basis(state: SpectralState, grad: jax.Array, *, decay: float = 0.99,
+                          method: str = "direct") -> SpectralState:
+    """Fold the fresh gradient's dominant rank-1 component into the tracker."""
+    g = grad.astype(state.tracker.u.dtype)
+
+    # one warm-started power iteration: v <- G^T G v / |.|, u = G v / |G v|
+    v = state.power_v
+    gv = g @ v
+    u = gv / (jnp.linalg.norm(gv) + 1e-30)
+    gtu = g.T @ u
+    sigma = jnp.linalg.norm(gtu)
+    v_new = gtu / (sigma + 1e-30)
+
+    # decay the tracker (recency weighting), then rank-1 update via the paper
+    tr = state.tracker
+    tr = TruncatedSvd(u=tr.u, s=tr.s * decay, v=tr.v)
+    tr = svd_update_truncated(tr, u * jnp.sqrt(sigma), v_new * jnp.sqrt(sigma), method=method)
+    return SpectralState(tracker=tr, power_v=v_new, step=state.step + 1)
+
+
+def project(state: SpectralState, grad: jax.Array) -> jax.Array:
+    """G_p = U_r^T G  — (r, n) projected gradient."""
+    return state.tracker.u.T @ grad.astype(state.tracker.u.dtype)
+
+
+def unproject(state: SpectralState, update_p: jax.Array) -> jax.Array:
+    """Back to parameter space: U_r @ update_p."""
+    return state.tracker.u @ update_p

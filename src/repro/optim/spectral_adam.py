@@ -1,0 +1,138 @@
+"""Spectral AdamW: AdamW with streaming-SVD low-rank moment projection.
+
+The paper-technique optimizer (DESIGN.md §3.1) as a drop-in train-loop
+policy: every 2-D parameter with min(m, n) > 4*rank keeps
+
+  * a SpectralState (streaming truncated SVD of its gradient history,
+    maintained by core.svd_update_truncated — the paper's Algorithm 6.1), and
+  * Adam moments in the (rank, n) projected space instead of (m, n):
+    memory for moments shrinks by ~m/rank.
+
+Per step and per projected parameter:
+  1. fold the fresh gradient's dominant rank-1 into the tracker
+     (``update_every`` controls cadence),
+  2. G_p = U_r^T G;  Adam moment update in projected space;
+  3. delta = U_r @ adam(G_p)  back in parameter space (+ weight decay).
+
+Non-2-D (norms, biases) and small parameters fall through to dense AdamW.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.spectral import SpectralState, project, spectral_init, spectral_update_basis, unproject
+
+__all__ = ["SpectralAdamState", "spectral_adam_init", "spectral_adam_update"]
+
+
+class _LeafState(NamedTuple):
+    spectral: SpectralState | None
+    m: jax.Array
+    v: jax.Array
+
+
+class SpectralAdamState(NamedTuple):
+    step: jax.Array
+    leaves: object  # pytree of _LeafState
+
+
+def _eligible(p, rank):
+    return p.ndim == 2 and min(p.shape) > 4 * rank
+
+
+def spectral_adam_init(key, params, *, rank: int = 32) -> SpectralAdamState:
+    flat, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(key, max(len(flat), 1))
+    leaves = []
+    for k, p in zip(keys, flat):
+        if _eligible(p, rank):
+            m, n = p.shape
+            leaves.append(_LeafState(
+                spectral=spectral_init(k, m, n, rank),
+                m=jnp.zeros((rank, n), jnp.float32),
+                v=jnp.zeros((rank, n), jnp.float32),
+            ))
+        else:
+            leaves.append(_LeafState(
+                spectral=None,
+                m=jnp.zeros_like(p, dtype=jnp.float32),
+                v=jnp.zeros_like(p, dtype=jnp.float32),
+            ))
+    return SpectralAdamState(step=jnp.zeros((), jnp.int32),
+                             leaves=jax.tree.unflatten(treedef, [(l,) for l in leaves]))
+
+
+def spectral_adam_update(
+    grads,
+    state: SpectralAdamState,
+    params,
+    *,
+    lr,
+    betas=(0.9, 0.95),
+    eps=1e-8,
+    weight_decay=0.1,
+    update_basis_every: int = 1,
+):
+    b1, b2 = betas
+    step = state.step + 1
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_p = treedef.flatten_up_to(params)
+    flat_s = [t[0] for t in jax.tree.leaves(
+        state.leaves, is_leaf=lambda x: isinstance(x, tuple) and isinstance(x[0], _LeafState))]
+    # fallback flatten: leaves stored as 1-tuples of _LeafState
+    if len(flat_s) != len(flat_g):
+        flat_s = [t for t in jax.tree.leaves(
+            state.leaves, is_leaf=lambda x: isinstance(x, _LeafState))]
+
+    new_p, new_s = [], []
+    for g, p, s in zip(flat_g, flat_p, flat_s):
+        gf = g.astype(jnp.float32)
+        if s.spectral is not None:
+            do_update = (step % update_basis_every) == 0
+            spec = jax.lax.cond(
+                do_update,
+                lambda st: spectral_update_basis(st, gf),
+                lambda st: st,
+                s.spectral,
+            )
+            gp = project(spec, gf)                      # (r, n)
+            m2 = b1 * s.m + (1 - b1) * gp
+            v2 = b2 * s.v + (1 - b2) * gp * gp
+            upd_p = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+            delta = unproject(spec, upd_p)              # (m, n)
+            p2 = p.astype(jnp.float32) - lr * (delta + weight_decay * p.astype(jnp.float32))
+            new_s.append(_LeafState(spectral=spec, m=m2, v=v2))
+        else:
+            m2 = b1 * s.m + (1 - b1) * gf
+            v2 = b2 * s.v + (1 - b2) * gf * gf
+            upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+            p2 = p.astype(jnp.float32) - lr * (upd + weight_decay * p.astype(jnp.float32))
+            new_s.append(_LeafState(spectral=None, m=m2, v=v2))
+        new_p.append(p2.astype(p.dtype))
+
+    leaves = jax.tree.unflatten(treedef, [(l,) for l in new_s])
+    return (jax.tree.unflatten(treedef, new_p),
+            SpectralAdamState(step=step, leaves=leaves))
+
+
+def moment_memory_ratio(params, rank: int) -> float:
+    """Dense-Adam moment floats / spectral-Adam moment+tracker floats."""
+    dense = proj = 0
+    for p in jax.tree.leaves(params):
+        n_el = 1
+        for d in p.shape:
+            n_el *= d
+        dense += 2 * n_el
+        if _eligible(p, rank):
+            m, n = p.shape
+            proj += 2 * rank * n + (m + n + 1) * rank + n
+        else:
+            proj += 2 * n_el
+    return dense / max(proj, 1)

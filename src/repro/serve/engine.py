@@ -1,0 +1,55 @@
+"""Serving engine: batched prefill + decode with greedy/temperature sampling.
+
+Small but real: requests are batched, prefilled once, then decoded step by
+step with the per-architecture cache machinery (KV / compressed-MLA / SSM /
+WKV states all behind the same ModelApi).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import ModelApi
+
+__all__ = ["ServeConfig", "generate"]
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0   # 0 = greedy
+    seed: int = 0
+
+
+def _sample(logits, temperature, key):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def generate(api: ModelApi, params, prompts: jax.Array, serve_cfg: ServeConfig,
+             *, max_len: int | None = None):
+    """prompts: (b, prompt_len) int32. Returns (b, max_new_tokens) int32."""
+    b, prompt_len = prompts.shape
+    total = prompt_len + serve_cfg.max_new_tokens
+    max_len = max_len or total
+
+    logits, cache = api.prefill(params, {"tokens": prompts}, max_len=max_len)
+    key = jax.random.PRNGKey(serve_cfg.seed)
+
+    decode = jax.jit(api.decode_step, donate_argnums=(1,))
+
+    out = []
+    token = _sample(logits[:, -1, :], serve_cfg.temperature, key)[:, None]
+    out.append(token)
+    pos = prompt_len
+    for i in range(serve_cfg.max_new_tokens - 1):
+        key, sub = jax.random.split(key)
+        logits, cache = decode(params, cache, token, jnp.asarray(pos, jnp.int32))
+        token = _sample(logits[:, -1, :], serve_cfg.temperature, sub)[:, None]
+        out.append(token)
+        pos += 1
+    return jnp.concatenate(out, axis=1)

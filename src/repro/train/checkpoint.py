@@ -1,0 +1,143 @@
+"""Fault-tolerant checkpointing: atomic writes, manifest, auto-resume.
+
+Layout:
+  <dir>/step_000123/
+      arrays.npz          (flattened pytree leaves)
+      treedef.json        (pytree structure + leaf names)
+      MANIFEST.json       (step, written_at, leaf checksums, COMPLETE flag)
+  <dir>/latest            (text file with the last COMPLETE step)
+
+Guarantees:
+* torn writes never count: MANIFEST is written *after* arrays, and ``latest``
+  is updated with os.replace (atomic on POSIX) only after the manifest.
+* restore validates the manifest checksum set before loading.
+* checkpoints are mesh-independent (full arrays gathered to host), so a
+  restart may use a different device count — elastic scaling (train.elastic).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "available_steps"]
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(np.asarray(leaf))
+    return names, leaves, jax.tree.structure(tree)
+
+
+def save(ckpt_dir: str | Path, step: int, tree, *, keep: int = 3) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    step_dir = ckpt_dir / f"step_{step:09d}"
+    tmp_dir = ckpt_dir / f".tmp_step_{step:09d}"
+    if tmp_dir.exists():
+        shutil.rmtree(tmp_dir)
+    tmp_dir.mkdir(parents=True)
+
+    names, leaves, _ = _flatten_with_names(tree)
+    arrays = {f"leaf_{i}": leaf for i, leaf in enumerate(leaves)}
+    np.savez(tmp_dir / "arrays.npz", **arrays)
+
+    checksums = {}
+    with open(tmp_dir / "arrays.npz", "rb") as f:
+        checksums["arrays.npz"] = hashlib.sha256(f.read()).hexdigest()
+
+    (tmp_dir / "treedef.json").write_text(json.dumps({"names": names}))
+    manifest = {
+        "step": step,
+        "written_at": time.time(),
+        "n_leaves": len(leaves),
+        "checksums": checksums,
+        "complete": True,
+    }
+    (tmp_dir / "MANIFEST.json").write_text(json.dumps(manifest))
+
+    if step_dir.exists():
+        shutil.rmtree(step_dir)
+    os.replace(tmp_dir, step_dir)
+
+    # atomic latest pointer
+    latest_tmp = ckpt_dir / ".latest_tmp"
+    latest_tmp.write_text(str(step))
+    os.replace(latest_tmp, ckpt_dir / "latest")
+
+    _gc(ckpt_dir, keep)
+    return step_dir
+
+
+def _gc(ckpt_dir: Path, keep: int):
+    steps = sorted(available_steps(ckpt_dir))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(ckpt_dir / f"step_{s:09d}", ignore_errors=True)
+
+
+def available_steps(ckpt_dir: str | Path):
+    ckpt_dir = Path(ckpt_dir)
+    out = []
+    if not ckpt_dir.exists():
+        return out
+    for d in ckpt_dir.iterdir():
+        if d.is_dir() and d.name.startswith("step_") and (d / "MANIFEST.json").exists():
+            try:
+                m = json.loads((d / "MANIFEST.json").read_text())
+                if m.get("complete"):
+                    out.append(int(m["step"]))
+            except (json.JSONDecodeError, KeyError, ValueError):
+                continue
+    return out
+
+
+def latest_step(ckpt_dir: str | Path) -> int | None:
+    ckpt_dir = Path(ckpt_dir)
+    marker = ckpt_dir / "latest"
+    if marker.exists():
+        try:
+            s = int(marker.read_text().strip())
+            if (ckpt_dir / f"step_{s:09d}" / "MANIFEST.json").exists():
+                return s
+        except ValueError:
+            pass
+    steps = available_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str | Path, tree_like, step: int | None = None):
+    """Load into the structure of ``tree_like``; returns (step, tree)."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no complete checkpoint under {ckpt_dir}")
+    step_dir = ckpt_dir / f"step_{step:09d}"
+
+    manifest = json.loads((step_dir / "MANIFEST.json").read_text())
+    with open(step_dir / "arrays.npz", "rb") as f:
+        digest = hashlib.sha256(f.read()).hexdigest()
+    if digest != manifest["checksums"]["arrays.npz"]:
+        raise IOError(f"checkpoint {step_dir} failed checksum validation")
+
+    data = np.load(step_dir / "arrays.npz")
+    leaves = [data[f"leaf_{i}"] for i in range(manifest["n_leaves"])]
+    flat_like, treedef = jax.tree.flatten(tree_like)
+    if len(flat_like) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves; target structure has {len(flat_like)}"
+        )
+    restored = [
+        np.asarray(leaf).astype(like.dtype) if hasattr(like, "dtype") else leaf
+        for leaf, like in zip(leaves, flat_like)
+    ]
+    return step, jax.tree.unflatten(treedef, restored)

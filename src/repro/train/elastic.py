@@ -1,0 +1,40 @@
+"""Elastic scaling: re-mesh on restart.
+
+Checkpoints store full (host-gathered) arrays, so they are mesh-independent.
+On restart, ``plan_mesh`` inspects the devices that are actually alive and
+chooses the largest (data, model) factorization consistent with the model's
+TP divisibility constraints; ``reshard`` places a restored pytree onto the
+new mesh. At 1000+-node scale this is the recover-with-fewer-pods path: a
+dead pod shrinks the data axis, training continues at reduced global batch.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.dist import sharding as sh
+
+__all__ = ["plan_mesh", "reshard", "largest_factorization"]
+
+
+def largest_factorization(n: int, max_model: int = 16) -> tuple[int, int]:
+    """(data, model) with model as large as possible, model | n, model <= max."""
+    for m in range(min(max_model, n), 0, -1):
+        if n % m == 0:
+            return n // m, m
+    return n, 1
+
+
+def plan_mesh(max_model: int = 16):
+    n = jax.device_count()
+    data, model = largest_factorization(n, max_model)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def reshard(tree, mesh):
+    """Place a host pytree onto ``mesh`` per the standard param rules."""
+    specs = sh.param_pspecs(tree)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs
+    )

@@ -1,0 +1,8 @@
+import jax
+
+# Core numerics (secular / Loewner / Cauchy) need f64 for the orthogonality
+# guarantees under test. Model code pins its dtypes explicitly, so enabling
+# x64 only changes defaults. NOTE: XLA_FLAGS device-count forcing is NOT set
+# here on purpose — only launch/dryrun.py uses 512 placeholder devices;
+# distributed tests spawn subprocesses with their own env.
+jax.config.update("jax_enable_x64", True)

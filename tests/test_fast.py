@@ -1,0 +1,54 @@
+"""FAST baseline (Gerasoulis): correct in the paper's range, documented
+instability beyond it (the reason the paper moves to FMM)."""
+
+import numpy as np
+import pytest
+
+from repro.core.fast import fast_cauchy_matvec, multipoint_eval, poly_from_roots
+
+RNG = np.random.default_rng(0)
+
+
+def _direct(u, lam, mu):
+    return np.sum(u[None, :] / (lam[None, :] - mu[:, None]), axis=1)
+
+
+@pytest.mark.parametrize("n", [4, 8, 16])
+def test_fast_small_n_accurate(n):
+    """In the regime the paper actually benchmarked (n <= 35, Fig. 1)."""
+    lam = np.sort(RNG.uniform(0, 1, n))
+    mu = np.sort(RNG.uniform(0, 1, n)) + 1e-5
+    u = RNG.normal(size=n)
+    out = fast_cauchy_matvec(u, lam, mu)
+    ref = _direct(u, lam, mu)
+    rel = np.max(np.abs(out - ref)) / np.max(np.abs(ref))
+    assert rel < 1e-6
+
+
+def test_fast_instability_documented():
+    """Power-basis arithmetic degrades catastrophically with n — faithful to
+    the known behaviour of the FAST algorithm (why the paper adopts FMM)."""
+    errs = {}
+    for n in [8, 64]:
+        lam = np.sort(RNG.uniform(0, 1, n))
+        mu = np.sort(RNG.uniform(0, 1, n)) + 1e-5
+        u = RNG.normal(size=n)
+        out = fast_cauchy_matvec(u, lam, mu)
+        ref = _direct(u, lam, mu)
+        errs[n] = np.max(np.abs(out - ref)) / np.max(np.abs(ref))
+    assert errs[8] < 1e-6
+    assert errs[64] > 1e3  # blows up, as documented in EXPERIMENTS.md
+
+
+def test_poly_from_roots():
+    roots = np.array([1.0, -2.0, 3.0])
+    c = poly_from_roots(roots)  # (x-1)(x+2)(x-3) = x^3 -2x^2 -5x + 6
+    np.testing.assert_allclose(c, [6.0, -5.0, -2.0, 1.0], atol=1e-12)
+
+
+def test_multipoint_eval_matches_horner():
+    coeffs = RNG.normal(size=20)
+    pts = RNG.uniform(-1, 1, 50)
+    tree = multipoint_eval(coeffs, pts)
+    horner = np.polyval(coeffs[::-1], pts)
+    np.testing.assert_allclose(tree, horner, rtol=1e-8, atol=1e-8)

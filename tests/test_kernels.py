@@ -1,0 +1,73 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(11)
+
+
+@pytest.mark.parametrize("r,n,m", [(1, 16, 16), (7, 100, 90), (64, 300, 300),
+                                   (3, 513, 700), (130, 64, 1030)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_cauchy_matmul_kernel(r, n, m, dtype):
+    src = jnp.asarray(np.sort(RNG.uniform(0, 1, n)), dtype)
+    anchor = jnp.asarray(RNG.integers(0, n, m), jnp.int32)
+    tau = jnp.asarray(RNG.uniform(1e-6, 1e-3, m), dtype)
+    w = jnp.asarray(RNG.normal(size=(r, n)), dtype)
+    tgt_valid = jnp.asarray(RNG.uniform(size=m) > 0.1)
+    out = ops.cauchy_matmul_stable(w, src, anchor, tau, tgt_valid=tgt_valid, interpret=True)
+    want = ref.cauchy_matmul_ref(w, src, src[anchor], tau, tgt_valid)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-12
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=tol, atol=tol * float(jnp.max(jnp.abs(want))))
+
+
+@pytest.mark.parametrize("n,m", [(50, 50), (200, 200), (333, 150)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_secular_kernel(n, m, dtype):
+    dc = jnp.asarray(np.sort(RNG.uniform(0, 5, n)), dtype)
+    zc2 = jnp.asarray(RNG.uniform(0.01, 1, n), dtype)
+    rho = jnp.asarray(0.7, dtype)
+    anchor_vals = jnp.asarray(np.sort(RNG.uniform(0, 5, m)), dtype)
+    width = jnp.asarray(RNG.uniform(0.01, 0.5, m), dtype)
+    lo = jnp.zeros(m, dtype)
+    hi = width
+    out = ops.secular_solve(dc, zc2, rho, anchor_vals, lo, hi, interpret=True)
+    want = ref.secular_solve_ref(dc, zc2, rho, anchor_vals, lo, hi)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-14
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=tol)
+
+
+@pytest.mark.parametrize("r,nb,c3,capt", [(2, 4, 12, 6), (5, 8, 24, 12), (9, 16, 48, 20)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_nearfield_kernel(r, nb, c3, capt, dtype):
+    w = jnp.asarray(RNG.normal(size=(r, nb, c3)), dtype)
+    x = jnp.asarray(RNG.uniform(0, 1, (nb, c3)), dtype)
+    av = jnp.asarray(RNG.uniform(0, 1, (nb, capt)), dtype)
+    tau = jnp.asarray(RNG.uniform(0, 1e-3, (nb, capt)), dtype)
+    mask = jnp.asarray(RNG.uniform(size=(nb, capt)) > 0.2)
+    out = ops.nearfield(w, x, av, tau, mask, interpret=True)
+    want = ref.nearfield_ref(w, x, av, tau, mask)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-11
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=tol, atol=tol * float(jnp.max(jnp.abs(want)) + 1))
+
+
+def test_kernel_vs_core_stable_cauchy():
+    """ops.cauchy_matmul_stable == core.cauchy.cauchy_matmul_stable exactly."""
+    from repro.core.cauchy import cauchy_matmul_stable as core_stable
+
+    n, m, r = 180, 170, 5
+    src = jnp.asarray(np.sort(RNG.uniform(0, 1, n)))
+    anchor = jnp.asarray(RNG.integers(0, n, m), jnp.int32)
+    tau = jnp.asarray(RNG.uniform(1e-9, 1e-3, m))
+    w = jnp.asarray(RNG.normal(size=(r, n)))
+    src_valid = jnp.asarray(RNG.uniform(size=n) > 0.1)
+    tgt_valid = jnp.asarray(RNG.uniform(size=m) > 0.1)
+    a = ops.cauchy_matmul_stable(w, src, anchor, tau, src_valid=src_valid,
+                                 tgt_valid=tgt_valid, interpret=True)
+    b = core_stable(w, src, anchor, tau, src_valid=src_valid, tgt_valid=tgt_valid)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-12)

@@ -1,0 +1,236 @@
+"""Per-architecture smoke tests (assignment requirement) + decode-path
+consistency: prefill+decode logits must match the full forward pass."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import ShapeConfig
+from repro.models.registry import build_model, zeros_like_specs
+
+RNG = np.random.default_rng(0)
+TRAIN_SHAPE = ShapeConfig("train_small", 32, 2, "train")
+DECODE_SHAPE = ShapeConfig("decode_small", 32, 2, "decode")
+
+
+def _concrete_batch(specs, vocab):
+    return jax.tree.map(
+        lambda s: (jnp.asarray(RNG.integers(0, vocab, s.shape), jnp.int32)
+                   if s.dtype == jnp.int32
+                   else jnp.asarray(RNG.normal(size=s.shape) * 0.02, s.dtype)),
+        specs,
+    )
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_train_step(arch):
+    """Reduced same-family config: one fwd/bwd step, shapes + finiteness."""
+    cfg = configs.get_smoke(arch)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = _concrete_batch(api.input_specs(TRAIN_SHAPE)["batch"], cfg.vocab_size)
+    loss, grads = jax.value_and_grad(api.train_loss)(params, batch)
+    assert np.isfinite(float(loss))
+    assert 1.0 < float(loss) < 20.0  # ~ln(vocab) at init
+    for g in jax.tree.leaves(grads):
+        assert bool(jnp.all(jnp.isfinite(g)))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = configs.get_smoke(arch)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    specs = api.input_specs(DECODE_SHAPE)
+    cache = zeros_like_specs(specs["cache"])
+    token = jnp.zeros(specs["token"].shape, jnp.int32)
+    logits, cache2 = api.decode_step(params, cache, token, jnp.asarray(3, jnp.int32))
+    assert logits.shape[0] == DECODE_SHAPE.global_batch
+    assert bool(jnp.all(jnp.isfinite(logits[..., : cfg.vocab_size])))
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-32b", "granite-34b", "deepseek-v2-lite-16b",
+                                  "rwkv6-1.6b", "zamba2-7b", "whisper-base"])
+def test_prefill_decode_matches_forward(arch):
+    """The decode path must reproduce the training-forward logits: prefill a
+    prompt, decode the next tokens one by one, compare against the full
+    causal forward on the whole sequence."""
+    cfg = configs.get_smoke(arch)
+    if cfg.moe is not None:
+        # capacity dropping is batch-composition-dependent by design (GShard
+        # semantics), which breaks bitwise prefill/forward equivalence; make
+        # the router dropless so this test isolates the MLA/attention caches.
+        import dataclasses
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.n_routed) / cfg.moe.top_k))
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(1))
+    b, total = 2, 16
+    prompt_len = 8
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (b, total)), jnp.int32)
+
+    if cfg.encdec:
+        frames = jnp.asarray(RNG.normal(size=(b, 16, cfg.d_model)) * 0.02,
+                             jnp.dtype(cfg.compute_dtype))
+        from repro.models.encdec import encdec_forward
+        full = encdec_forward(params, {"frames": frames, "tokens": toks}, cfg)
+        logits_p, cache = api.prefill(params, {"frames": frames, "tokens": toks[:, :prompt_len]},
+                                      max_dec_len=total)
+        np.testing.assert_allclose(np.asarray(logits_p[:, -1]),
+                                   np.asarray(full[:, prompt_len - 1]), rtol=3e-4, atol=3e-4)
+        logits_d, cache = api.decode_step(params, cache, toks[:, prompt_len:prompt_len + 1],
+                                          jnp.asarray(prompt_len, jnp.int32))
+        np.testing.assert_allclose(np.asarray(logits_d[:, 0]),
+                                   np.asarray(full[:, prompt_len]), rtol=3e-4, atol=3e-4)
+        return
+
+    if cfg.rwkv is not None:
+        from repro.models.rwkv_model import rwkv_train_loss  # noqa: F401  (api covers it)
+    # full forward logits
+    if cfg.ssm is not None and cfg.attn_every:
+        from repro.models.hybrid import hybrid_forward as fwd
+    elif cfg.rwkv is not None:
+        from repro.models.rwkv_model import _run_layers, _logits
+        from repro.models.layers import embed_lookup, norm_apply
+
+        def fwd(p, batch, c):
+            x = embed_lookup(batch["tokens"], p["embed"])
+            x, _ = _run_layers(x, p, c)
+            x = norm_apply(x, p["final_norm"], c.norm_type)
+            return _logits(x, p, c)
+    else:
+        from repro.models.transformer import decoder_forward as fwd
+
+    full = fwd(params, {"tokens": toks}, cfg)
+
+    logits_p, cache = api.prefill(params, {"tokens": toks[:, :prompt_len]}, max_len=total) \
+        if cfg.rwkv is None else api.prefill(params, {"tokens": toks[:, :prompt_len]})
+    np.testing.assert_allclose(np.asarray(logits_p[:, -1]),
+                               np.asarray(full[:, prompt_len - 1]), rtol=3e-4, atol=3e-4)
+
+    for i in range(prompt_len, min(prompt_len + 3, total)):
+        logits_d, cache = api.decode_step(params, cache, toks[:, i:i + 1],
+                                          jnp.asarray(i, jnp.int32))
+        np.testing.assert_allclose(np.asarray(logits_d[:, 0]), np.asarray(full[:, i]),
+                                   rtol=3e-4, atol=3e-4,
+                                   err_msg=f"decode step at pos {i} diverges from forward")
+
+
+def test_rwkv_chunked_matches_recurrent():
+    """The chunked WKV (training path) must equal the recurrence exactly."""
+    from repro.models.rwkv import _wkv_chunked, wkv_recurrent
+
+    b, l, h, dk = 2, 32, 3, 8
+    r = jnp.asarray(RNG.normal(size=(b, l, h, dk)))
+    k = jnp.asarray(RNG.normal(size=(b, l, h, dk)))
+    v = jnp.asarray(RNG.normal(size=(b, l, h, dk)))
+    logw = -jnp.asarray(RNG.uniform(0.01, 0.3, size=(b, l, h, dk)))
+    u = jnp.asarray(RNG.normal(size=(h, dk)))
+    s0 = jnp.asarray(RNG.normal(size=(b, h, dk, dk)))
+    y_ref, s_ref = wkv_recurrent(r, k, v, logw, u, s0)
+    y_chk, s_chk = _wkv_chunked(r, k, v, logw, u, s0, chunk=8)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref), atol=1e-10)
+    np.testing.assert_allclose(np.asarray(s_chk), np.asarray(s_ref), atol=1e-10)
+
+
+def test_ssm_decode_matches_train():
+    """Mamba2: chunked training outputs == step-by-step decode outputs."""
+    from repro.models import ssm as ssm_mod
+
+    cfg = configs.get_smoke("zamba2-7b")
+    p = ssm_mod.ssm_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, l = 2, 32
+    x = jnp.asarray(RNG.normal(size=(b, l, cfg.d_model)) * 0.1, jnp.float32)
+    y_train = ssm_mod.ssm_train(x, p, cfg)
+    st = ssm_mod.init_ssm_state(b, cfg, jnp.float32)
+    outs = []
+    for t in range(l):
+        y, st = ssm_mod.ssm_decode(x[:, t:t + 1], p, cfg, st)
+        outs.append(y)
+    y_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_train), atol=2e-4)
+
+
+def test_moe_routing_respects_capacity():
+    from repro.models import moe as moe_mod
+
+    cfg = configs.get_smoke("deepseek-moe-16b")
+    p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(2, 16, cfg.d_model)), jnp.float32)
+    y = moe_mod.moe_apply(x, p, cfg)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    # aux loss is ~1 for balanced routing at init
+    aux = moe_mod.moe_aux_loss(x, p, cfg)
+    assert 0.5 < float(aux) < float(cfg.moe.n_routed)
+
+
+def test_flash_attention_matches_full():
+    """Blockwise (flash) attention is exact vs vanilla attention."""
+    from repro.models.attention import _sdpa_blockwise, _sdpa_full
+
+    cfg = configs.get_smoke("qwen2-72b").replace(attn_block_k=16, compute_dtype="float64")
+    b, sq, h, kvh, dh = 2, 64, 8, 2, 16
+    cfg = cfg.replace(n_heads=h, n_kv_heads=kvh)
+    q = jnp.asarray(RNG.normal(size=(b, sq, h, dh)))
+    k = jnp.asarray(RNG.normal(size=(b, sq, kvh, dh)))
+    v = jnp.asarray(RNG.normal(size=(b, sq, kvh, dh)))
+    for causal in (True, False):
+        full = _sdpa_full(q, k, v, cfg, causal)
+        blk = _sdpa_blockwise(q, k, v, cfg, causal)
+        np.testing.assert_allclose(np.asarray(blk), np.asarray(full), atol=5e-6)
+
+
+def test_flash_attention_train_loss_matches():
+    cfg = configs.get_smoke("granite-34b")
+    api_full = build_model(cfg)
+    api_flash = build_model(cfg.replace(attn_block_k=8))
+    params = api_full.init(jax.random.PRNGKey(0))
+    batch = _concrete_batch(api_full.input_specs(TRAIN_SHAPE)["batch"], cfg.vocab_size)
+    l1 = float(api_full.train_loss(params, batch))
+    l2 = float(api_flash.train_loss(params, batch))
+    assert abs(l1 - l2) < 1e-4
+
+
+def test_int8_kv_cache_decode_close_to_fp():
+    """int8 KV decode logits track the fp cache closely (quantized serving)."""
+    cfg = configs.get_smoke("qwen2-72b")
+    api_fp = build_model(cfg)
+    api_q = build_model(cfg.replace(kv_cache_dtype="int8"))
+    params = api_fp.init(jax.random.PRNGKey(1))
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 12)), jnp.int32)
+    _, cache_fp = api_fp.prefill(params, {"tokens": toks[:, :8]}, max_len=12)
+    # build the int8 cache by decoding the same prefix token by token
+    from repro.models.registry import zeros_like_specs
+
+    specs = api_q.input_specs(ShapeConfig("d", 12, 2, "decode"))
+    cache_q = zeros_like_specs(specs["cache"])
+    for i in range(8):
+        logits_q, cache_q = api_q.decode_step(params, cache_q, toks[:, i:i + 1],
+                                              jnp.asarray(i, jnp.int32))
+    logits_fp, _ = api_fp.decode_step(params, cache_fp, toks[:, 8:9],
+                                      jnp.asarray(8, jnp.int32))
+    logits_q, _ = api_q.decode_step(params, cache_q, toks[:, 8:9],
+                                    jnp.asarray(8, jnp.int32))
+    a = np.asarray(logits_fp[..., :cfg.vocab_size])
+    b = np.asarray(logits_q[..., :cfg.vocab_size])
+    # int8 quantization noise is small relative to logit scale
+    assert np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-9) < 0.05
+    # and the argmax (greedy token) agrees
+    np.testing.assert_array_equal(np.argmax(a, -1), np.argmax(b, -1))
+
+
+def test_remat_policy_dots_matches_loss():
+    cfg = configs.get_smoke("nemotron-4-15b").replace(remat=True)
+    api_full = build_model(cfg.replace(remat_policy="full"))
+    api_dots = build_model(cfg.replace(remat_policy="dots"))
+    params = api_full.init(jax.random.PRNGKey(0))
+    batch = _concrete_batch(api_full.input_specs(TRAIN_SHAPE)["batch"], cfg.vocab_size)
+    l1, g1 = jax.value_and_grad(api_full.train_loss)(params, batch)
+    l2, g2 = jax.value_and_grad(api_dots.train_loss)(params, batch)
+    assert abs(float(l1) - float(l2)) < 1e-5
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

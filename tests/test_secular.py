@@ -1,0 +1,109 @@
+"""Secular solver + deflation + Loewner weights vs numpy oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.secular import deflate, loewner_zhat, secular_solve
+
+RNG = np.random.default_rng(42)
+
+
+def _solve_sorted(d, z, rho):
+    dj, zj = jnp.asarray(d), jnp.asarray(z)
+    defl = deflate(dj, zj, jnp.asarray(rho))
+    dc = dj[defl.compact]
+    zc = defl.z[defl.compact]
+    roots = secular_solve(dc, zc, jnp.asarray(rho), defl.n_keep)
+    mu = np.asarray(jnp.sort(jnp.where(roots.valid, roots.mu, dc)))
+    return mu, defl, roots, np.asarray(dc)
+
+
+@pytest.mark.parametrize("n", [4, 17, 64, 256])
+def test_eigenvalues_match_numpy(n):
+    d = np.sort(RNG.uniform(-3, 3, n))
+    z = RNG.normal(size=n)
+    rho = abs(RNG.normal()) + 0.1
+    ref = np.linalg.eigvalsh(np.diag(d) + rho * np.outer(z, z))
+    mu, *_ = _solve_sorted(d, z, rho)
+    np.testing.assert_allclose(mu, ref, rtol=0, atol=1e-12 * max(1, np.abs(ref).max()))
+
+
+def test_duplicate_poles_deflate():
+    n = 60
+    d = np.sort(RNG.uniform(0, 1, n))
+    d[10:25] = d[10]  # multiplicity 15
+    z = RNG.normal(size=n)
+    rho = 0.5
+    ref = np.linalg.eigvalsh(np.diag(d) + rho * np.outer(z, z))
+    mu, defl, _, _ = _solve_sorted(d, z, rho)
+    assert int(defl.n_keep) <= n - 14  # 15 duplicates merge into 1 retained
+    np.testing.assert_allclose(mu, ref, atol=1e-12)
+
+
+def test_zero_z_entries_deflate():
+    n = 40
+    d = np.sort(RNG.uniform(0, 1, n))
+    z = RNG.normal(size=n)
+    z[::4] = 0.0
+    rho = 1.3
+    ref = np.linalg.eigvalsh(np.diag(d) + rho * np.outer(z, z))
+    mu, defl, _, _ = _solve_sorted(d, z, rho)
+    assert int(defl.n_keep) == n - len(z[::4])
+    np.testing.assert_allclose(mu, ref, atol=1e-12)
+
+
+def test_interlacing_exact():
+    """For rho > 0: d_i < mu_i < d_{i+1} (strict, on the retained set)."""
+    n = 100
+    d = np.sort(RNG.uniform(-1, 1, n))
+    z = RNG.normal(size=n) + 0.1
+    rho = 0.7
+    dj, zj = jnp.asarray(d), jnp.asarray(z)
+    defl = deflate(dj, zj, jnp.asarray(rho))
+    dc = np.asarray(dj[defl.compact])
+    zc = defl.z[defl.compact]
+    roots = secular_solve(jnp.asarray(dc), zc, jnp.asarray(rho), defl.n_keep)
+    k = int(defl.n_keep)
+    mu = np.asarray(roots.mu)[:k]
+    assert np.all(mu > dc[:k])
+    upper = np.append(dc[1:k], dc[k - 1] + rho * float(jnp.sum(zc[:k] ** 2)) + 1e-12)
+    assert np.all(mu <= upper)
+
+
+def test_loewner_orthogonality_weights():
+    """zhat from the computed roots reproduces the exact char-poly identity."""
+    n = 50
+    d = np.sort(RNG.uniform(0, 2, n))
+    z = RNG.normal(size=n)
+    rho = 0.9
+    dj, zj = jnp.asarray(d), jnp.asarray(z)
+    defl = deflate(dj, zj, jnp.asarray(rho))
+    dc = dj[defl.compact]
+    zc = defl.z[defl.compact]
+    roots = secular_solve(dc, zc, jnp.asarray(rho), defl.n_keep)
+    zhat = np.asarray(loewner_zhat(dc, zc, jnp.asarray(rho), roots))
+    np.testing.assert_allclose(np.abs(zhat), np.abs(np.asarray(zc)), rtol=1e-8)
+    assert np.all(np.sign(zhat) == np.sign(np.asarray(zc)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(3, 40),
+    seed=st.integers(0, 2**31 - 1),
+    rho=st.floats(0.01, 10.0),
+)
+def test_property_eigenvalues_any_spectrum(n, seed, rho):
+    """Hypothesis: random spectra (incl. duplicates) match numpy to 1e-10."""
+    rng = np.random.default_rng(seed)
+    d = np.sort(rng.uniform(-5, 5, n))
+    if n > 4 and seed % 3 == 0:
+        d[n // 4 : n // 2] = d[n // 4]  # inject duplicates
+    z = rng.normal(size=n)
+    if seed % 2 == 0 and n > 2:
+        z[seed % n] = 0.0
+    ref = np.linalg.eigvalsh(np.diag(d) + rho * np.outer(z, z))
+    mu, *_ = _solve_sorted(d, z, rho)
+    scale = max(1.0, np.abs(ref).max())
+    np.testing.assert_allclose(mu, ref, atol=5e-11 * scale)
