@@ -1,0 +1,147 @@
+"""Batched engine vs. Python-loop-of-updates throughput (DESIGN.md §4).
+
+For B in {1, 8, 32, 128}: B independent rank-1 SVD updates of (m, n)
+states, run (a) as a Python loop of jitted single `svd_update` calls and
+(b) as ONE `SvdEngine.update_batch` call, plus the same comparison for the
+rank-r streaming truncated update (the optimizer/serving hot path).
+
+CSV rows (benchmarks/run.py style):
+  bench_engine/<kind>/<method>/B=<b>,us,updates_per_s=... speedup=...
+
+and a machine-readable summary at benchmarks/BENCH_engine.json.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.engine import SvdEngine
+from repro.core.svd_update import TruncatedSvd, svd_update, svd_update_truncated
+
+BATCHES = [1, 8, 32, 128]
+M, N = 32, 48          # full-update geometry
+RANK = 8               # truncated-update geometry (tracker rank)
+METHODS = ["direct"]   # kernel/fmm cost extra compile time; direct is the CPU path
+
+OUT = Path(__file__).parent / "BENCH_engine.json"
+
+
+def _full_problem(rng, b):
+    us, ss, vs, as_, bs = [], [], [], [], []
+    for _ in range(b):
+        a_mat = rng.uniform(1, 9, (M, N))
+        u, s, vt = np.linalg.svd(a_mat)
+        us.append(u)
+        ss.append(s)
+        vs.append(vt.T)
+        as_.append(rng.normal(size=M))
+        bs.append(rng.normal(size=N))
+    return tuple(jnp.asarray(np.stack(x)) for x in (us, ss, vs, as_, bs))
+
+
+def _trunc_problem(rng, b):
+    us = np.stack([np.linalg.qr(rng.normal(size=(M, RANK)))[0] for _ in range(b)])
+    vs = np.stack([np.linalg.qr(rng.normal(size=(N, RANK)))[0] for _ in range(b)])
+    ss = np.sort(np.abs(rng.normal(size=(b, RANK))), axis=1)[:, ::-1].copy()
+    t = TruncatedSvd(jnp.asarray(us), jnp.asarray(ss), jnp.asarray(vs))
+    a = jnp.asarray(rng.normal(size=(b, M)))
+    bb = jnp.asarray(rng.normal(size=(b, N)))
+    return t, a, bb
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    results: list[dict] = []
+
+    for method in METHODS:
+        engine = SvdEngine(method=method)
+
+        for b in BATCHES:
+            u, s, v, a, bb = _full_problem(rng, b)
+
+            def loop_full(u, s, v, a, bb):
+                outs = [
+                    svd_update(u[i], s[i], v[i], a[i], bb[i], method=method)
+                    for i in range(b)
+                ]
+                return outs[-1].s
+
+            def batch_full(u, s, v, a, bb):
+                return engine.update_batch(u, s, v, a, bb).s
+
+            us_loop = time_fn(loop_full, u, s, v, a, bb)
+            us_batch = time_fn(batch_full, u, s, v, a, bb)
+            row = {
+                "kind": "full",
+                "method": method,
+                "batch": b,
+                "m": M,
+                "n": N,
+                "us_loop": us_loop,
+                "us_batch": us_batch,
+                "updates_per_s_loop": b / (us_loop * 1e-6),
+                "updates_per_s_batch": b / (us_batch * 1e-6),
+                "speedup": us_loop / us_batch,
+            }
+            results.append(row)
+            emit(
+                f"bench_engine/full/{method}/B={b}",
+                us_batch,
+                f"updates_per_s={row['updates_per_s_batch']:.0f} speedup={row['speedup']:.2f}x",
+            )
+
+            t, ta, tb = _trunc_problem(rng, b)
+
+            def loop_trunc(t, ta, tb):
+                outs = [
+                    svd_update_truncated(
+                        TruncatedSvd(t.u[i], t.s[i], t.v[i]), ta[i], tb[i], method=method
+                    )
+                    for i in range(b)
+                ]
+                return outs[-1].s
+
+            def batch_trunc(t, ta, tb):
+                return engine.update_truncated_batch(t, ta, tb).s
+
+            us_loop = time_fn(loop_trunc, t, ta, tb)
+            us_batch = time_fn(batch_trunc, t, ta, tb)
+            row = {
+                "kind": "truncated",
+                "method": method,
+                "batch": b,
+                "m": M,
+                "n": N,
+                "rank": RANK,
+                "us_loop": us_loop,
+                "us_batch": us_batch,
+                "updates_per_s_loop": b / (us_loop * 1e-6),
+                "updates_per_s_batch": b / (us_batch * 1e-6),
+                "speedup": us_loop / us_batch,
+            }
+            results.append(row)
+            emit(
+                f"bench_engine/truncated/{method}/B={b}",
+                us_batch,
+                f"updates_per_s={row['updates_per_s_batch']:.0f} speedup={row['speedup']:.2f}x",
+            )
+
+    summary = {
+        "geometry": {"m": M, "n": N, "rank": RANK},
+        "batches": BATCHES,
+        "results": results,
+    }
+    OUT.write_text(json.dumps(summary, indent=2))
+    return summary
+
+
+if __name__ == "__main__":
+    jax.config.update("jax_enable_x64", True)
+    run()

@@ -8,6 +8,7 @@ Layers (bottom-up):
   fast         — Gerasoulis FAST baseline (§4, App. C)
   eigh_update  — symmetric diag+rank-1 eigen-update (Algorithm 6.2)
   svd_update   — full rank-1 SVD update (Algorithm 6.1) + streaming truncated
+  engine       — batch-first plan-cached update engine (SvdEngine, DESIGN.md §4)
 """
 
 from repro.core.cauchy import (
@@ -19,10 +20,19 @@ from repro.core.cauchy import (
 from repro.core.eigh_update import (
     EighUpdatePlan,
     apply_update,
+    apply_update_batch,
     eigenvalues,
     eigh_update,
     make_plan,
+    make_plan_batch,
     materialize_q,
+)
+from repro.core.engine import (
+    EngineCacheInfo,
+    SvdEngine,
+    default_engine,
+    svd_update_batch,
+    svd_update_truncated_batch,
 )
 from repro.core.fmm import FmmPlan, build_plan, fmm_apply, fmm_error_bound, fmm_matvec
 from repro.core.secular import deflate, loewner_zhat, secular_solve
@@ -40,10 +50,17 @@ __all__ = [
     "cauchy_matvec",
     "EighUpdatePlan",
     "apply_update",
+    "apply_update_batch",
     "eigenvalues",
     "eigh_update",
     "make_plan",
+    "make_plan_batch",
     "materialize_q",
+    "EngineCacheInfo",
+    "SvdEngine",
+    "default_engine",
+    "svd_update_batch",
+    "svd_update_truncated_batch",
     "FmmPlan",
     "build_plan",
     "fmm_apply",

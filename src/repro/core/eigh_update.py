@@ -11,6 +11,16 @@ rotations ∘ scaled-Cauchy matrix), so the singular-vector update
 
 The plan/apply split mirrors how the framework uses it: one plan, several
 applies (U update, Q materialization for the sign fix, diagnostics).
+
+Both halves are pure static-shape functions of their array inputs, so an
+``EighUpdatePlan`` batches cleanly under ``jax.vmap`` — a batched plan
+stacks every data field along a leading batch axis while meta fields stay
+shared. That property is what lets ``core.engine`` vmap whole SVD updates
+(which call make_plan/apply_update internally); ``make_plan_batch`` /
+``apply_update_batch`` expose the same batched plan/apply split directly
+for eigen-level consumers. Under vmap the ``method="kernel"`` Cauchy product
+dispatches to the batched Pallas kernel (batch folded into the grid, see
+``kernels.cauchy_matmul``) via a ``custom_vmap`` rule in ``kernels.ops``.
 """
 
 from __future__ import annotations
@@ -32,7 +42,16 @@ from repro.core.secular import (
     secular_solve,
 )
 
-__all__ = ["EighUpdatePlan", "make_plan", "eigenvalues", "apply_update", "materialize_q", "eigh_update"]
+__all__ = [
+    "EighUpdatePlan",
+    "make_plan",
+    "make_plan_batch",
+    "eigenvalues",
+    "apply_update",
+    "apply_update_batch",
+    "materialize_q",
+    "eigh_update",
+]
 
 _FMM_MIN_N = 96  # below this the FMM tree is pointless; fall back to direct
 
@@ -222,6 +241,39 @@ def apply_update(plan: EighUpdatePlan, w: jax.Array, *, method: str = "direct") 
     if plan.negated:
         out = out[:, ::-1]
     return out
+
+
+def make_plan_batch(
+    d: jax.Array,
+    z: jax.Array,
+    rho: jax.Array,
+    *,
+    rho_positive: bool,
+    fmm_p: int = 20,
+    build_fmm: bool = False,
+    deflate_rtol: float | None = None,
+) -> EighUpdatePlan:
+    """Batched ``make_plan``: ``d``/``z`` are (B, n), ``rho`` is (B,).
+
+    Returns one ``EighUpdatePlan`` whose data fields carry a leading batch
+    axis; the static meta fields (n, negated, has_fmm) are shared across the
+    batch — the point of grouping equal geometries before batching.
+    """
+    fn = partial(
+        make_plan,
+        rho_positive=rho_positive,
+        fmm_p=fmm_p,
+        build_fmm=build_fmm,
+        deflate_rtol=deflate_rtol,
+    )
+    return jax.vmap(fn)(d, z, rho)
+
+
+@partial(jax.jit, static_argnames=("method",))
+def apply_update_batch(plan: EighUpdatePlan, w: jax.Array, *, method: str = "direct") -> jax.Array:
+    """Batched ``apply_update``: batched plan (from ``make_plan_batch``) and
+    ``w`` of shape (B, m, n) -> (B, m, n)."""
+    return jax.vmap(partial(apply_update, method=method))(plan, w)
 
 
 def materialize_q(plan: EighUpdatePlan, *, method: str = "direct", dtype=None) -> jax.Array:

@@ -1,0 +1,360 @@
+"""Batch-first SVD-update engine (DESIGN.md §4).
+
+The paper's O(n^2 log(1/eps)) rank-1 update only pays off at system scale
+when many updates run per step. ``SvdEngine`` is the subsystem that makes
+that the default shape of the computation:
+
+* **Plan cache.** Every distinct update geometry — (kind, batch, m, n, rank,
+  dtype) x (method, fmm_p, sign_fix) — gets one cached, jitted executable.
+  Trace + secular/FMM plan construction ("the plan") is paid once per
+  geometry; every later call with that geometry is a cache hit that goes
+  straight to the compiled batched update. ``warmup`` AOT-compiles a
+  geometry ahead of traffic (serving cold-start control).
+
+* **Batched entry points.** ``update_batch`` / ``update_truncated_batch``
+  vmap Algorithm 6.1 over a leading batch axis of stacked (u, s, v) states
+  and (a, b) perturbations. Under ``method="kernel"`` the hot Cauchy product
+  lowers to ONE Pallas launch with the batch folded into the grid
+  (``kernels.cauchy_matmul.cauchy_matmul_pallas_batched`` via the
+  ``custom_vmap`` rule in ``kernels.ops``); under ``method="fmm"`` the
+  Chebyshev-FMM plans batch as stacked tensors.
+
+* **Sharding.** An optional ``jax.sharding.Sharding`` for the batch axis
+  (build one with ``launch.mesh.batch_sharding``) is applied to the stacked
+  inputs, so a flush of B updates spreads over the mesh's data axis.
+
+Consumers: ``optim.spectral`` / ``optim.compression`` group equal-geometry
+parameters and make one engine call per group; ``serve.svd_service``
+micro-batches streaming (a, b) pairs into engine flushes.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.svd_update import (
+    SvdUpdateResult,
+    TruncatedSvd,
+    _svd_update_impl,
+    _svd_update_truncated_impl,
+)
+
+__all__ = [
+    "EngineCacheInfo",
+    "SvdEngine",
+    "default_engine",
+    "group_indices",
+    "stack_trees",
+    "svd_update_batch",
+    "svd_update_truncated_batch",
+    "truncated_geometry",
+    "unstack_tree",
+]
+
+
+# ---------------------------------------------------------------------------
+# Group/stack/unstack helpers shared by every batching consumer
+# (optim.spectral, optim.compression, serve.svd_service).
+# ---------------------------------------------------------------------------
+
+
+def truncated_geometry(tsvd: "TruncatedSvd") -> tuple:
+    """Batching-group key for a truncated SVD state: ``(m, n, rank, dtype)``.
+
+    States sharing this key can be stacked into one
+    ``update_truncated_batch`` call — the single definition every batching
+    consumer groups by."""
+    m, r = tsvd.u.shape
+    return (m, tsvd.v.shape[0], r, tsvd.u.dtype)
+
+
+def group_indices(keys) -> dict:
+    """``{key: [indices with that key]}`` preserving first-seen order."""
+    groups: dict = {}
+    for i, k in enumerate(keys):
+        groups.setdefault(k, []).append(i)
+    return groups
+
+
+def stack_trees(trees):
+    """Stack a sequence of identically-structured pytrees along a new
+    leading batch axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def unstack_tree(tree, i: int):
+    """Slice batch element ``i`` out of a stacked pytree."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+class EngineCacheInfo(NamedTuple):
+    hits: int
+    misses: int
+    entries: int
+
+
+@dataclass
+class _CacheEntry:
+    fn: Callable[..., Any]          # jitted batched/single update
+    compiled: Any = None            # AOT executable after warmup()
+    calls: int = 0
+
+
+def _geometry(kind: str, *arrays: jax.Array) -> tuple:
+    return (kind,) + tuple((a.shape, jnp.result_type(a)) for a in arrays)
+
+
+class SvdEngine:
+    """Plan-cached, vmap-able rank-1 SVD update engine.
+
+    One engine per (method, fmm_p, sign_fix) configuration; geometries are
+    cached inside. Thread-safe: the serve layer flushes from request
+    threads.
+    """
+
+    def __init__(
+        self,
+        *,
+        method: str = "direct",
+        fmm_p: int = 20,
+        sign_fix: bool = True,
+        sharding: jax.sharding.Sharding | None = None,
+    ):
+        if method not in ("direct", "fmm", "kernel"):
+            raise ValueError(f"unknown method {method!r}")
+        self.method = method
+        self.fmm_p = fmm_p
+        self.sign_fix = sign_fix
+        self.sharding = sharding
+        self._cache: dict[tuple, _CacheEntry] = {}
+        self._hits = 0
+        self._misses = 0
+        self._lock = threading.Lock()
+
+    # -- plan cache ---------------------------------------------------------
+
+    def cache_info(self) -> EngineCacheInfo:
+        return EngineCacheInfo(self._hits, self._misses, len(self._cache))
+
+    def cache_clear(self) -> None:
+        with self._lock:
+            self._cache.clear()
+            self._hits = 0
+            self._misses = 0
+
+    def _entry(self, key: tuple, build: Callable[[], Callable]) -> _CacheEntry:
+        with self._lock:
+            ent = self._cache.get(key)
+            if ent is None:
+                self._misses += 1
+                ent = _CacheEntry(fn=build())
+                self._cache[key] = ent
+            else:
+                self._hits += 1
+            ent.calls += 1
+            return ent
+
+    def _constrain(self, *arrays: jax.Array) -> tuple:
+        if self.sharding is None:
+            return arrays
+        return tuple(jax.device_put(a, self.sharding) for a in arrays)
+
+    # -- builders -----------------------------------------------------------
+
+    def _build_single(self) -> Callable:
+        impl = partial(
+            _svd_update_impl,
+            method=self.method,
+            fmm_p=self.fmm_p,
+            sign_fix=self.sign_fix,
+        )
+        return jax.jit(lambda u, s, v, a, b: impl(u, s, v, a, b))
+
+    def _batch_jit_kwargs(self) -> dict:
+        # Batched builders bake the batch sharding into the jit, so AOT
+        # executables from warmup() accept the _constrain()-ed inputs.
+        return {} if self.sharding is None else {"in_shardings": self.sharding}
+
+    def _build_batch(self) -> Callable:
+        impl = partial(
+            _svd_update_impl,
+            method=self.method,
+            fmm_p=self.fmm_p,
+            sign_fix=self.sign_fix,
+        )
+        return jax.jit(
+            jax.vmap(lambda u, s, v, a, b: impl(u, s, v, a, b)),
+            **self._batch_jit_kwargs(),
+        )
+
+    def _build_truncated(self) -> Callable:
+        impl = partial(_svd_update_truncated_impl, method=self.method)
+        return jax.jit(lambda t, a, b: impl(t, a, b))
+
+    def _build_truncated_batch(self) -> Callable:
+        impl = partial(_svd_update_truncated_impl, method=self.method)
+        return jax.jit(
+            jax.vmap(lambda t, a, b: impl(t, a, b)), **self._batch_jit_kwargs()
+        )
+
+    # -- entry points -------------------------------------------------------
+
+    @staticmethod
+    def _call(ent: _CacheEntry, *args):
+        # Prefer the AOT executable from warmup(): jit's dispatch cache is
+        # NOT populated by lower().compile(), so calling ent.fn would retrace.
+        # AOT executables only take concrete arrays — under an outer trace
+        # (jit / lax.cond / shard_map consumers) fall back to the jitted fn.
+        tracer_cls = getattr(jax.core, "Tracer", None)
+        traced = tracer_cls is not None and any(
+            isinstance(x, tracer_cls) for x in jax.tree.leaves(args)
+        )
+        if ent.compiled is not None and not traced:
+            try:
+                return ent.compiled(*args)
+            except (TypeError, ValueError):
+                pass  # tracer/sharding mismatch leaked past the check — retrace
+        return ent.fn(*args)
+
+    def update(self, u, s, v, a, b) -> SvdUpdateResult:
+        """Single Algorithm-6.1 update (plan-cached jit)."""
+        key = _geometry("single", u, s, v, a, b)
+        ent = self._entry(key, self._build_single)
+        return self._call(ent, u, s, v, a, b)
+
+    def update_batch(self, u, s, v, a, b) -> SvdUpdateResult:
+        """B stacked updates in one call.
+
+        ``u``: (B, m, m), ``s``: (B, m), ``v``: (B, n, n), ``a``: (B, m),
+        ``b``: (B, n). Returns an ``SvdUpdateResult`` whose leaves carry the
+        leading batch axis. Equivalent to B independent ``svd_update`` calls.
+        """
+        if u.ndim != 3:
+            raise ValueError(f"update_batch expects stacked (B, m, m) u; got {u.shape}")
+        key = _geometry("batch", u, s, v, a, b)
+        ent = self._entry(key, self._build_batch)
+        return self._call(ent, *self._constrain(u, s, v, a, b))
+
+    def update_truncated(self, tsvd: TruncatedSvd, a, b) -> TruncatedSvd:
+        """Single streaming truncated update (plan-cached jit)."""
+        key = _geometry("trunc", tsvd.u, tsvd.s, tsvd.v, a, b)
+        ent = self._entry(key, self._build_truncated)
+        return self._call(ent, tsvd, a, b)
+
+    def update_truncated_batch(self, tsvd: TruncatedSvd, a, b) -> TruncatedSvd:
+        """B stacked rank-r streaming updates in one call.
+
+        ``tsvd`` leaves: u (B, m, r), s (B, r), v (B, n, r); ``a``: (B, m),
+        ``b``: (B, n). Returns a stacked ``TruncatedSvd``.
+        """
+        if tsvd.u.ndim != 3:
+            raise ValueError(
+                f"update_truncated_batch expects stacked (B, m, r) u; got {tsvd.u.shape}"
+            )
+        key = _geometry("trunc_batch", tsvd.u, tsvd.s, tsvd.v, a, b)
+        ent = self._entry(key, self._build_truncated_batch)
+        u_, s_, v_, a_, b_ = self._constrain(tsvd.u, tsvd.s, tsvd.v, a, b)
+        return self._call(ent, TruncatedSvd(u_, s_, v_), a_, b_)
+
+    # -- warmup -------------------------------------------------------------
+
+    def warmup(
+        self,
+        *,
+        batch: int | None,
+        m: int,
+        n: int,
+        rank: int | None = None,
+        dtype=jnp.float32,
+    ) -> EngineCacheInfo:
+        """AOT-compile the executable for one geometry before traffic.
+
+        ``rank=None`` warms the full-update path, otherwise the truncated
+        path; ``batch=None`` warms the single-instance variant. The cache key
+        includes ``dtype`` — warm with the dtype real traffic uses (default
+        float32 matches ``compression_init``/``spectral_init`` trackers;
+        pass ``jnp.float64`` for x64 workloads).
+        """
+        dt = jnp.dtype(dtype)
+
+        def sds(*shape):
+            return jax.ShapeDtypeStruct(shape, dt)
+
+        if rank is None:
+            if batch is None:
+                args = (sds(m, m), sds(m), sds(n, n), sds(m), sds(n))
+                key = _geometry("single", *args)
+                ent = self._entry(key, self._build_single)
+            else:
+                args = (sds(batch, m, m), sds(batch, m), sds(batch, n, n),
+                        sds(batch, m), sds(batch, n))
+                key = _geometry("batch", *args)
+                ent = self._entry(key, self._build_batch)
+            if ent.compiled is None:
+                ent.compiled = ent.fn.lower(*args).compile()
+        else:
+            if batch is None:
+                leaves = (sds(m, rank), sds(rank), sds(n, rank))
+                args = (sds(m), sds(n))
+                key = _geometry("trunc", *leaves, *args)
+                ent = self._entry(key, self._build_truncated)
+            else:
+                leaves = (sds(batch, m, rank), sds(batch, rank), sds(batch, n, rank))
+                args = (sds(batch, m), sds(batch, n))
+                key = _geometry("trunc_batch", *leaves, *args)
+                ent = self._entry(key, self._build_truncated_batch)
+            if ent.compiled is None:
+                ent.compiled = ent.fn.lower(TruncatedSvd(*leaves), *args).compile()
+        return self.cache_info()
+
+
+# ---------------------------------------------------------------------------
+# Module-level default engines — one per configuration, shared plan caches.
+# ---------------------------------------------------------------------------
+
+_default_engines: dict[tuple, SvdEngine] = {}
+_default_lock = threading.Lock()
+
+
+def default_engine(
+    method: str = "direct", *, fmm_p: int = 20, sign_fix: bool = True
+) -> SvdEngine:
+    """Process-wide shared engine for a configuration (shared plan cache)."""
+    key = (method, fmm_p, sign_fix)
+    with _default_lock:
+        eng = _default_engines.get(key)
+        if eng is None:
+            eng = SvdEngine(method=method, fmm_p=fmm_p, sign_fix=sign_fix)
+            _default_engines[key] = eng
+        return eng
+
+
+def svd_update_batch(
+    u: jax.Array,
+    s: jax.Array,
+    v: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    method: str = "direct",
+    fmm_p: int = 20,
+    sign_fix: bool = True,
+) -> SvdUpdateResult:
+    """Functional facade over ``default_engine(...).update_batch`` — B stacked
+    Algorithm-6.1 updates in one vmapped, plan-cached call."""
+    eng = default_engine(method, fmm_p=fmm_p, sign_fix=sign_fix)
+    return eng.update_batch(u, s, v, a, b)
+
+
+def svd_update_truncated_batch(
+    tsvd: TruncatedSvd, a: jax.Array, b: jax.Array, *, method: str = "direct"
+) -> TruncatedSvd:
+    """Functional facade over ``default_engine(...).update_truncated_batch``."""
+    eng = default_engine(method)
+    return eng.update_truncated_batch(tsvd, a, b)

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.core.eigh_update import apply_update, eigenvalues, make_plan, materialize_q
 
-__all__ = ["SvdUpdateResult", "svd_update", "svd_update_truncated"]
+__all__ = ["SvdUpdateResult", "TruncatedSvd", "svd_update", "svd_update_truncated"]
 
 
 class SvdUpdateResult(NamedTuple):
@@ -80,8 +80,7 @@ def _double_update(q0, d0, w1, w2, rho_pos, rho_neg, *, method, fmm_p, want_g):
     return d2, q2, g
 
 
-@partial(jax.jit, static_argnames=("method", "fmm_p", "sign_fix"))
-def svd_update(
+def _svd_update_impl(
     u: jax.Array,
     s: jax.Array,
     v: jax.Array,
@@ -92,10 +91,10 @@ def svd_update(
     fmm_p: int = 20,
     sign_fix: bool = True,
 ) -> SvdUpdateResult:
-    """SVD of ``u @ diag(s) @ v[:, :m].T + a b^T``  (Algorithm 6.1).
+    """Unjitted Algorithm 6.1 body — pure, static-shape, and vmap-clean.
 
-    ``u``: (m, m), ``s``: (m,) (any order, >= 0), ``v``: (n, n), m <= n.
-    Returned s_n is descending; reconstruction uses v[:, :m].
+    ``core.engine`` maps this over a leading batch axis; ``svd_update`` is the
+    jitted single-instance wrapper.
     """
     m = u.shape[0]
     n = v.shape[0]
@@ -158,6 +157,29 @@ def svd_update(
     return SvdUpdateResult(u=u_n, s=s_n, v=v_n, d_left=d_left_s, d_right=d_right_s)
 
 
+@partial(jax.jit, static_argnames=("method", "fmm_p", "sign_fix"))
+def svd_update(
+    u: jax.Array,
+    s: jax.Array,
+    v: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    method: str = "direct",
+    fmm_p: int = 20,
+    sign_fix: bool = True,
+) -> SvdUpdateResult:
+    """SVD of ``u @ diag(s) @ v[:, :m].T + a b^T``  (Algorithm 6.1).
+
+    ``u``: (m, m), ``s``: (m,) (any order, >= 0), ``v``: (n, n), m <= n.
+    Returned s_n is descending; reconstruction uses v[:, :m].
+
+    Single-instance entry point. For many updates of the same geometry use
+    ``core.engine.svd_update_batch`` (one vmapped call, plan paid once).
+    """
+    return _svd_update_impl(u, s, v, a, b, method=method, fmm_p=fmm_p, sign_fix=sign_fix)
+
+
 # ---------------------------------------------------------------------------
 # Streaming truncated rank-1 SVD update (Brand augmentation + Algorithm 6.1)
 # ---------------------------------------------------------------------------
@@ -169,18 +191,10 @@ class TruncatedSvd(NamedTuple):
     v: jax.Array  # (n, r)
 
 
-@partial(jax.jit, static_argnames=("method",))
-def svd_update_truncated(
+def _svd_update_truncated_impl(
     tsvd: TruncatedSvd, a: jax.Array, b: jax.Array, *, method: str = "direct"
 ) -> TruncatedSvd:
-    """Rank-r streaming SVD update:  best rank-r SVD of U S V^T + a b^T.
-
-    Brand-style subspace augmentation reduces the update to an (r+1)x(r+1)
-    diagonal-plus-rank-1 problem solved *exactly* by the paper's machinery
-    (svd_update with identity bases); the result is truncated back to rank r.
-    This is the primitive behind the spectral optimizer / gradient-compression
-    features (DESIGN.md §3).
-    """
+    """Unjitted truncated-update body (vmap-clean, see ``core.engine``)."""
     u, s, v = tsvd
     m, r = u.shape
     n = v.shape[0]
@@ -205,10 +219,26 @@ def svd_update_truncated(
     ak = jnp.concatenate([p_vec, ra[None]])
     bk = jnp.concatenate([q_vec, rb[None]])
     eye = jnp.eye(r + 1, dtype=dt)
-    res = svd_update(eye, s_aug, eye, ak, bk, method=method, sign_fix=True)
+    res = _svd_update_impl(eye, s_aug, eye, ak, bk, method=method, sign_fix=True)
 
     u_aug = jnp.concatenate([u, p_unit[:, None]], axis=1)   # (m, r+1)
     v_aug = jnp.concatenate([v, q_unit[:, None]], axis=1)   # (n, r+1)
     u_new = u_aug @ res.u[:, :r]
     v_new = v_aug @ res.v[:, :r]
     return TruncatedSvd(u=u_new, s=res.s[:r], v=v_new)
+
+
+@partial(jax.jit, static_argnames=("method",))
+def svd_update_truncated(
+    tsvd: TruncatedSvd, a: jax.Array, b: jax.Array, *, method: str = "direct"
+) -> TruncatedSvd:
+    """Rank-r streaming SVD update:  best rank-r SVD of U S V^T + a b^T.
+
+    Brand-style subspace augmentation reduces the update to an (r+1)x(r+1)
+    diagonal-plus-rank-1 problem solved *exactly* by the paper's machinery
+    (svd_update with identity bases); the result is truncated back to rank r.
+    This is the primitive behind the spectral optimizer / gradient-compression
+    features (DESIGN.md §3). Batched counterpart:
+    ``core.engine.svd_update_truncated_batch``.
+    """
+    return _svd_update_truncated_impl(tsvd, a, b, method=method)

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["cauchy_matmul_pallas"]
+__all__ = ["cauchy_matmul_pallas", "cauchy_matmul_pallas_batched"]
 
 
 def _kernel(w_ref, src_ref, av_ref, tau_ref, tmask_ref, out_ref):
@@ -105,3 +105,91 @@ def cauchy_matmul_pallas(
         interpret=interpret,
     )(w_p, src_p, av_p, tau_p, tm_p)
     return out[:r, :m]
+
+
+# ---------------------------------------------------------------------------
+# Batched variant: the engine's per-update Cauchy geometries are independent,
+# so the batch axis folds straight into the grid — one kernel launch covers
+# B updates with the same VMEM tiling as the single-instance kernel.
+# ---------------------------------------------------------------------------
+
+
+def _kernel_batched(w_ref, src_ref, av_ref, tau_ref, tmask_ref, out_ref):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = w_ref[0]              # (BR, BN)
+    src = src_ref[0]          # (1, BN)
+    av = av_ref[0]            # (1, BM)
+    tau = tau_ref[0]          # (1, BM)
+    tm = tmask_ref[0]         # (1, BM)
+
+    denom = (src[0, :, None] - av[0, None, :]) - tau[0, None, :]
+    safe = jnp.where(denom == 0.0, 1.0, denom)
+    c = jnp.where(denom != 0.0, 1.0 / safe, 0.0) * tm[0, None, :]
+    out_ref[0] += jnp.dot(w, c, preferred_element_type=out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_r", "block_m", "block_n", "interpret")
+)
+def cauchy_matmul_pallas_batched(
+    w: jax.Array,
+    src: jax.Array,
+    anchor_vals: jax.Array,
+    tau: jax.Array,
+    tgt_mask: jax.Array,
+    *,
+    block_r: int = 128,
+    block_m: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[b, r, i] = sum_j w[b, r, j] / ((src_bj - anchor_vals_bi) - tau_bi).
+
+    ``w``: (B, R, N); ``src``: (B, N); ``anchor_vals``/``tau``/``tgt_mask``:
+    (B, M). Grid is (B, R/BR, M/BM, N/BN) — batch outermost, accumulation
+    over N innermost (output revisiting), so per-batch tiling matches the
+    single-instance kernel exactly.
+    """
+    bsz, r, n = w.shape
+    m = anchor_vals.shape[1]
+    dt = w.dtype
+
+    br = min(block_r, max(8, r))
+    bm = min(block_m, max(8, m))
+    bn = min(block_n, max(8, n))
+
+    pad_r = (-r) % br
+    pad_m = (-m) % bm
+    pad_n = (-n) % bn
+
+    # pad with values that cannot create zero denominators
+    w_p = jnp.pad(w, ((0, 0), (0, pad_r), (0, pad_n)))
+    src_p = jnp.pad(src, ((0, 0), (0, pad_n)), constant_values=jnp.asarray(1e30, dt))[:, None, :]
+    av_p = jnp.pad(anchor_vals, ((0, 0), (0, pad_m)), constant_values=jnp.asarray(-1e30, dt))[:, None, :]
+    tau_p = jnp.pad(tau, ((0, 0), (0, pad_m)))[:, None, :]
+    tm_p = jnp.pad(tgt_mask.astype(dt), ((0, 0), (0, pad_m)))[:, None, :]
+
+    _, rp, np_ = w_p.shape
+    mp = av_p.shape[2]
+    grid = (bsz, rp // br, mp // bm, np_ // bn)
+
+    out = pl.pallas_call(
+        _kernel_batched,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, br, bn), lambda b, i, j, k: (b, i, k)),
+            pl.BlockSpec((1, 1, bn), lambda b, i, j, k: (b, 0, k)),
+            pl.BlockSpec((1, 1, bm), lambda b, i, j, k: (b, 0, j)),
+            pl.BlockSpec((1, 1, bm), lambda b, i, j, k: (b, 0, j)),
+            pl.BlockSpec((1, 1, bm), lambda b, i, j, k: (b, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, br, bm), lambda b, i, j, k: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, rp, mp), dt),
+        interpret=interpret,
+    )(w_p, src_p, av_p, tau_p, tm_p)
+    return out[:, :r, :m]

@@ -4,14 +4,20 @@ On CPU (this container) the kernels run in ``interpret=True`` mode — the
 kernel bodies execute as written, which is how correctness is validated.
 On TPU they compile to Mosaic. ``core.eigh_update`` calls these through
 ``method="kernel"``.
+
+Batching: the Cauchy product carries a ``custom_vmap`` rule, so a
+``jax.vmap`` over the kernel path (what ``core.engine`` does for batched
+SVD updates) lowers to ONE ``cauchy_matmul_pallas_batched`` launch with the
+batch axis folded into the Pallas grid — not B sequential kernel calls.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax import custom_batching
 
-from repro.kernels.cauchy_matmul import cauchy_matmul_pallas
+from repro.kernels.cauchy_matmul import cauchy_matmul_pallas, cauchy_matmul_pallas_batched
 from repro.kernels.nearfield import nearfield_pallas
 from repro.kernels.secular_newton import secular_solve_pallas
 
@@ -20,6 +26,29 @@ __all__ = ["interpret_default", "cauchy_matmul_stable", "secular_solve", "nearfi
 
 def interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+@custom_batching.custom_vmap
+def _cauchy_pallas(w, src, anchor_vals, tau, tgt_mask):
+    return cauchy_matmul_pallas(
+        w, src, anchor_vals, tau, tgt_mask, interpret=interpret_default()
+    )
+
+
+@_cauchy_pallas.def_vmap
+def _cauchy_pallas_vmap(axis_size, in_batched, w, src, anchor_vals, tau, tgt_mask):
+    def bcast(x, batched):
+        return x if batched else jnp.broadcast_to(x, (axis_size,) + x.shape)
+
+    args = [bcast(x, b) for x, b in zip((w, src, anchor_vals, tau, tgt_mask), in_batched)]
+    w_b = args[0]
+    if w_b.ndim > 3:  # nested vmap: collapse leading axes into one batch
+        lead = w_b.shape[: w_b.ndim - 2]
+        args = [x.reshape((-1,) + x.shape[len(lead):]) for x in args]
+        out = cauchy_matmul_pallas_batched(*args, interpret=interpret_default())
+        return out.reshape(lead + out.shape[1:]), True
+    out = cauchy_matmul_pallas_batched(*args, interpret=interpret_default())
+    return out, True
 
 
 def cauchy_matmul_stable(
@@ -35,10 +64,9 @@ def cauchy_matmul_stable(
     """Kernel-backed drop-in for core.cauchy.cauchy_matmul_stable.
 
     Note the sign convention: returns sum_j w_j/(src_j - mu_i) (Cauchy
-    orientation), same as the core function.
+    orientation), same as the core function. vmap-ing this folds the batch
+    into the Pallas grid (see module docstring).
     """
-    if interpret is None:
-        interpret = interpret_default()
     n = src.shape[0]
     m = anchor.shape[0]
     if src_valid is None:
@@ -47,9 +75,11 @@ def cauchy_matmul_stable(
         tgt_valid = jnp.ones((m,), bool)
     w_masked = jnp.where(src_valid[None, :], w, 0.0)
     anchor_vals = src[anchor]
-    return cauchy_matmul_pallas(
-        w_masked, src, anchor_vals, tau, tgt_valid, interpret=interpret
-    )
+    if interpret is not None:  # explicit override skips the custom_vmap path
+        return cauchy_matmul_pallas(
+            w_masked, src, anchor_vals, tau, tgt_valid, interpret=interpret
+        )
+    return _cauchy_pallas(w_masked, src, anchor_vals, tau, tgt_valid)
 
 
 def secular_solve(

@@ -25,12 +25,21 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.svd_update import TruncatedSvd, svd_update_truncated
+from repro.core.engine import (
+    SvdEngine,
+    default_engine,
+    group_indices,
+    stack_trees,
+    truncated_geometry,
+    unstack_tree,
+)
+from repro.core.svd_update import TruncatedSvd
 
 __all__ = [
     "CompressionState",
     "compression_init",
     "compress_decompress",
+    "compress_decompress_batch",
     "compressed_allreduce",
     "refresh_basis",
     "wire_bytes",
@@ -62,37 +71,64 @@ def _orthonormalize(p):
 def compress_decompress(state: CompressionState, grad: jax.Array, *, axis_name=None,
                         update_basis: bool = True, method: str = "direct"):
     """Returns (g_hat, new_state). With ``axis_name`` the two factors are
-    psum-averaged across the DP axis (call under shard_map)."""
-    g = grad.astype(state.error.dtype) + state.error
+    psum-averaged across the DP axis (call under shard_map).
 
-    p = g @ state.v_basis                       # (m, r)
+    Thin wrapper over the B=1 batched path — one algorithm, one tuning."""
+    s_stack = jax.tree.map(lambda x: x[None], state)
+    gh, s2 = compress_decompress_batch(
+        s_stack, grad[None], axis_name=axis_name, update_basis=update_basis, method=method
+    )
+    return gh[0], unstack_tree(s2, 0)
+
+
+def compress_decompress_batch(
+    states: CompressionState,
+    grads: jax.Array,
+    *,
+    axis_name=None,
+    update_basis: bool = True,
+    engine: SvdEngine | None = None,
+    method: str = "direct",
+):
+    """Batched ``compress_decompress``: stacked states + grads of shape
+    (B, m, n), one engine call for all B tracker updates.
+
+    The projections/orthonormalizations are batched einsums/QR; the
+    collectives still cross only ``axis_name`` (the batch axis stays local),
+    so this composes with shard_map exactly like the single-leaf version.
+    """
+    if engine is None:
+        engine = default_engine(method)
+    g = grads.astype(states.error.dtype) + states.error           # (B, m, n)
+
+    p = jnp.einsum("bmn,bnr->bmr", g, states.v_basis)
     if axis_name is not None:
         p = jax.lax.pmean(p, axis_name)
-    p_hat = _orthonormalize(p)
+    p_hat = _orthonormalize(p)                                     # batched QR
 
-    q = g.T @ p_hat                             # (n, r)
+    q = jnp.einsum("bmn,bmr->bnr", g, p_hat)
     if axis_name is not None:
         q = jax.lax.pmean(q, axis_name)
 
-    g_hat = p_hat @ q.T
+    g_hat = jnp.einsum("bmr,bnr->bmn", p_hat, q)
     err = g - g_hat
 
-    tracker = state.tracker
-    v_basis = state.v_basis
+    tracker = states.tracker
+    v_basis = states.v_basis
     if update_basis:
         # short-horizon adaptation: PowerSGD warm start (one power-iteration
         # step per optimizer step — V tracks the current gradient subspace)
         v_basis = _orthonormalize(q)
         # long-horizon memory: the paper's streaming SVD absorbs the dominant
-        # rank-1 of this step's compressed gradient. Exposed via
+        # rank-1 of each step's compressed gradient. Exposed via
         # ``refresh_basis`` (periodic reset) and spectral diagnostics — this
         # is where core.svd_update is load-bearing in the compressor.
-        sigma = jnp.linalg.norm(q[:, 0])
-        u1 = p_hat[:, 0]
-        v1 = q[:, 0] / (sigma + 1e-30)
+        sigma = jnp.linalg.norm(q[:, :, 0], axis=1)                # (B,)
+        u1 = p_hat[:, :, 0]                                        # (B, m)
+        v1 = q[:, :, 0] / (sigma + 1e-30)[:, None]                 # (B, n)
+        scale = jnp.sqrt(sigma)[:, None]
         tracker = TruncatedSvd(tracker.u, tracker.s * 0.99, tracker.v)
-        tracker = svd_update_truncated(tracker, u1 * jnp.sqrt(sigma), v1 * jnp.sqrt(sigma),
-                                       method=method)
+        tracker = engine.update_truncated_batch(tracker, u1 * scale, v1 * scale)
 
     return g_hat, CompressionState(v_basis=v_basis, error=err, tracker=tracker)
 
@@ -104,19 +140,44 @@ def refresh_basis(state: CompressionState) -> CompressionState:
                             tracker=state.tracker)
 
 
-def compressed_allreduce(states, grads, *, axis_name, method: str = "direct"):
-    """Tree version: 2-D leaves are compressed; others psum densely."""
+def compressed_allreduce(states, grads, *, axis_name, method: str = "direct",
+                         engine: SvdEngine | None = None):
+    """Tree version: 2-D leaves are compressed; others psum densely.
+
+    Compressible leaves sharing a geometry (m, n, rank, dtype) are stacked
+    and pushed through ONE ``compress_decompress_batch`` — all their tracker
+    updates ride a single batched engine call instead of a Python loop of
+    per-layer rank-1 updates.
+    """
+    if engine is None:
+        engine = default_engine(method)
     flat_g, treedef = jax.tree.flatten(grads)
     flat_s = treedef.flatten_up_to(states)
-    out_g, out_s = [], []
-    for g, s in zip(flat_g, flat_s):
-        if s is None or g.ndim != 2:
-            out_g.append(jax.lax.pmean(g, axis_name))
-            out_s.append(s)
-        else:
-            gh, s2 = compress_decompress(s, g, axis_name=axis_name, method=method)
-            out_g.append(gh.astype(g.dtype))
-            out_s.append(s2)
+
+    keys = [
+        (g.shape, s.error.dtype) + truncated_geometry(s.tracker)
+        if s is not None and g.ndim == 2
+        else None
+        for g, s in zip(flat_g, flat_s)
+    ]
+
+    out_g: list = list(flat_g)
+    out_s: list = list(flat_s)
+    for i, (g, s) in enumerate(zip(flat_g, flat_s)):
+        if keys[i] is None:
+            out_g[i] = jax.lax.pmean(g, axis_name)
+
+    for key, idxs in group_indices(keys).items():
+        if key is None:
+            continue
+        s_stack = stack_trees([flat_s[i] for i in idxs])
+        g_stack = jnp.stack([flat_g[i] for i in idxs])
+        gh, s2 = compress_decompress_batch(
+            s_stack, g_stack, axis_name=axis_name, engine=engine, method=method
+        )
+        for j, i in enumerate(idxs):
+            out_g[i] = gh[j].astype(flat_g[i].dtype)
+            out_s[i] = unstack_tree(s2, j)
     return jax.tree.unflatten(treedef, out_g), jax.tree.unflatten(treedef, out_s)
 
 

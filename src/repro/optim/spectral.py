@@ -20,14 +20,29 @@ tracker) — the big win for billion-parameter training.
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import (
+    SvdEngine,
+    default_engine,
+    group_indices,
+    stack_trees,
+    truncated_geometry,
+    unstack_tree,
+)
 from repro.core.svd_update import TruncatedSvd, svd_update_truncated
 
-__all__ = ["SpectralState", "spectral_init", "spectral_update_basis", "project", "unproject"]
+__all__ = [
+    "SpectralState",
+    "spectral_init",
+    "spectral_update_basis",
+    "spectral_update_basis_grouped",
+    "project",
+    "unproject",
+]
 
 
 class SpectralState(NamedTuple):
@@ -47,10 +62,12 @@ def spectral_init(key, m: int, n: int, rank: int, dtype=jnp.float32) -> Spectral
     )
 
 
-@partial(jax.jit, static_argnames=("method",))
-def spectral_update_basis(state: SpectralState, grad: jax.Array, *, decay: float = 0.99,
-                          method: str = "direct") -> SpectralState:
-    """Fold the fresh gradient's dominant rank-1 component into the tracker."""
+def _rank1_of_grad(state: SpectralState, grad: jax.Array, decay: float):
+    """Power-iteration front half: decayed tracker + (a, b) rank-1 vectors.
+
+    Pure and vmap-clean — the batched path maps this over stacked states and
+    hands the stacked (a, b) pairs to one engine call.
+    """
     g = grad.astype(state.tracker.u.dtype)
 
     # one warm-started power iteration: v <- G^T G v / |.|, u = G v / |G v|
@@ -61,11 +78,61 @@ def spectral_update_basis(state: SpectralState, grad: jax.Array, *, decay: float
     sigma = jnp.linalg.norm(gtu)
     v_new = gtu / (sigma + 1e-30)
 
-    # decay the tracker (recency weighting), then rank-1 update via the paper
+    # decay the tracker (recency weighting) before the rank-1 absorption
     tr = state.tracker
     tr = TruncatedSvd(u=tr.u, s=tr.s * decay, v=tr.v)
-    tr = svd_update_truncated(tr, u * jnp.sqrt(sigma), v_new * jnp.sqrt(sigma), method=method)
+    return tr, u * jnp.sqrt(sigma), v_new * jnp.sqrt(sigma), v_new
+
+
+@partial(jax.jit, static_argnames=("method",))
+def spectral_update_basis(state: SpectralState, grad: jax.Array, *, decay: float = 0.99,
+                          method: str = "direct") -> SpectralState:
+    """Fold the fresh gradient's dominant rank-1 component into the tracker."""
+    tr, a_vec, b_vec, v_new = _rank1_of_grad(state, grad, decay)
+    tr = svd_update_truncated(tr, a_vec, b_vec, method=method)
     return SpectralState(tracker=tr, power_v=v_new, step=state.step + 1)
+
+
+def spectral_update_basis_grouped(
+    states: Sequence[SpectralState],
+    grads: Sequence[jax.Array],
+    *,
+    decay: float = 0.99,
+    method: str = "direct",
+    engine: SvdEngine | None = None,
+) -> tuple[SpectralState, ...]:
+    """Batched basis update: group equal-geometry parameters, one engine call
+    per group.
+
+    ``states[i]`` / ``grads[i]`` pair up; parameters sharing (m, n, rank,
+    dtype) are stacked along a batch axis and their trackers updated by a
+    single ``SvdEngine.update_truncated_batch`` — B rank-1 updates for one
+    plan/dispatch instead of B Python-loop iterations.
+    """
+    if len(states) != len(grads):
+        raise ValueError("states and grads must pair up")
+    if engine is None:
+        engine = default_engine(method)
+
+    keys = []
+    for i, (st, g) in enumerate(zip(states, grads)):
+        m, n, r, dt = truncated_geometry(st.tracker)
+        if g.shape != (m, n):
+            raise ValueError(f"grad {i} shape {g.shape} != tracker geometry {(m, n)}")
+        keys.append((m, n, r, dt))
+
+    out: list[SpectralState | None] = [None] * len(states)
+    for idxs in group_indices(keys).values():
+        stacked = stack_trees([states[i] for i in idxs])
+        g_stack = jnp.stack([grads[i] for i in idxs])
+        tr, a_vec, b_vec, v_new = jax.vmap(partial(_rank1_of_grad, decay=decay))(
+            stacked, g_stack
+        )
+        tr = engine.update_truncated_batch(tr, a_vec, b_vec)
+        batched = SpectralState(tracker=tr, power_v=v_new, step=stacked.step + 1)
+        for j, i in enumerate(idxs):
+            out[i] = unstack_tree(batched, j)
+    return tuple(out)
 
 
 def project(state: SpectralState, grad: jax.Array) -> jax.Array:

@@ -24,7 +24,13 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.optim.spectral import SpectralState, project, spectral_init, spectral_update_basis, unproject
+from repro.optim.spectral import (
+    SpectralState,
+    project,
+    spectral_init,
+    spectral_update_basis_grouped,
+    unproject,
+)
 
 __all__ = ["SpectralAdamState", "spectral_adam_init", "spectral_adam_update"]
 
@@ -91,17 +97,28 @@ def spectral_adam_update(
         flat_s = [t for t in jax.tree.leaves(
             state.leaves, is_leaf=lambda x: isinstance(x, _LeafState))]
 
+    # Batched basis refresh: eligible leaves are grouped by geometry and
+    # updated with one engine call per group (core.engine), instead of one
+    # svd_update_truncated dispatch per parameter.
+    elig = [i for i, s in enumerate(flat_s) if s.spectral is not None]
+    new_specs: dict[int, SpectralState] = {}
+    if elig:
+        do_update = (step % update_basis_every) == 0
+        spec_in = tuple(flat_s[i].spectral for i in elig)
+        g_in = tuple(flat_g[i].astype(jnp.float32) for i in elig)
+        updated = jax.lax.cond(
+            do_update,
+            lambda ops: spectral_update_basis_grouped(ops[0], ops[1]),
+            lambda ops: ops[0],
+            (spec_in, g_in),
+        )
+        new_specs = dict(zip(elig, updated))
+
     new_p, new_s = [], []
-    for g, p, s in zip(flat_g, flat_p, flat_s):
+    for i, (g, p, s) in enumerate(zip(flat_g, flat_p, flat_s)):
         gf = g.astype(jnp.float32)
         if s.spectral is not None:
-            do_update = (step % update_basis_every) == 0
-            spec = jax.lax.cond(
-                do_update,
-                lambda st: spectral_update_basis(st, gf),
-                lambda st: st,
-                s.spectral,
-            )
+            spec = new_specs[i]
             gp = project(spec, gf)                      # (r, n)
             m2 = b1 * s.m + (1 - b1) * gp
             v2 = b2 * s.v + (1 - b2) * gp * gp

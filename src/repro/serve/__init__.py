@@ -1,1 +1,10 @@
-"""Serving engine: prefill/decode with KV caches."""
+"""Serving: LM engine (prefill/decode) + the streaming SVD-update service.
+
+``serve.engine``      — batched token generation over ModelApi caches.
+``serve.svd_service`` — micro-batching rank-1 SVD-update service: many
+                        streams enqueue (a, b) pairs, each flush is one
+                        batched ``core.engine.SvdEngine`` call (batch axis
+                        shardable over ``launch.mesh``).
+"""
+
+from repro.serve.svd_service import SvdService, SvdServiceStats  # noqa: F401

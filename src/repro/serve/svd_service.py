@@ -1,0 +1,203 @@
+"""Streaming rank-1 SVD-update service: micro-batched engine flushes.
+
+The serving story for the paper's machinery: many concurrent streams (one
+per user/session/adapter) each own a truncated SVD state that evolves by
+rank-1 updates — personalization vectors folding into low-rank adapters,
+per-tenant gradient sketches, online covariance trackers. Issuing those
+updates one at a time wastes the hardware; this service queues them and
+flushes *one batched engine call* per round:
+
+    svc = SvdService(max_batch=64)
+    svc.register("user-1", tsvd1)
+    svc.enqueue("user-1", a, b)        # cheap: just queues
+    svc.enqueue("user-2", a2, b2)
+    svc.flush()                        # one SvdEngine.update_truncated_batch
+
+* Per-stream ordering: a stream's queued pairs are applied in FIFO order;
+  each flush round takes at most one pending pair per stream (they are
+  sequential updates to the same state, so they cannot share a batch).
+* Micro-batching: ``enqueue`` auto-flushes once ``max_batch`` streams have
+  a pending pair. Batches are padded up to bucket sizes (powers of two) so
+  the engine's plan cache sees a handful of geometries, not every B.
+* Sharding: give the engine a ``launch.mesh.batch_sharding(mesh)`` and the
+  stacked batch axis spreads over the mesh's data axis.
+
+The LM engine (``serve.engine``) serves tokens; this serves spectra.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict, deque
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import (
+    SvdEngine,
+    default_engine,
+    group_indices,
+    stack_trees,
+    truncated_geometry,
+    unstack_tree,
+)
+from repro.core.svd_update import TruncatedSvd
+
+__all__ = ["SvdService", "SvdServiceStats"]
+
+
+@dataclass
+class SvdServiceStats:
+    enqueued: int = 0
+    applied: int = 0
+    flushes: int = 0
+    rounds: int = 0          # batched engine calls (one per geometry group)
+    max_batch: int = 0       # largest batch (incl. bucket padding) dispatched
+
+
+def _bucket(b: int, cap: int) -> int:
+    """Smallest power of two >= b (clamped to cap) — bounds plan-cache size."""
+    p = 1
+    while p < b:
+        p <<= 1
+    return min(p, max(cap, 1))
+
+
+class SvdService:
+    """Micro-batching front end over ``SvdEngine.update_truncated_batch``."""
+
+    def __init__(
+        self,
+        *,
+        engine: SvdEngine | None = None,
+        method: str = "direct",
+        max_batch: int = 64,
+        pad_to_bucket: bool = True,
+    ):
+        self.engine = engine if engine is not None else default_engine(method)
+        self.max_batch = max_batch
+        self.pad_to_bucket = pad_to_bucket
+        self.stats = SvdServiceStats()
+        self._streams: OrderedDict[str, TruncatedSvd] = OrderedDict()
+        self._pending: dict[str, deque] = {}
+        self._lock = threading.RLock()
+
+    # -- stream lifecycle ---------------------------------------------------
+
+    def register(self, stream_id: str, tsvd: TruncatedSvd) -> None:
+        """Create (or replace) a stream with its current truncated SVD.
+
+        Replacing drops any pending pairs — they were queued against the old
+        state (and may not even match the new geometry).
+        """
+        with self._lock:
+            self._streams[stream_id] = tsvd
+            self._pending[stream_id] = deque()
+
+    def evict(self, stream_id: str) -> TruncatedSvd:
+        """Drop a stream and return its state with its OWN queue applied.
+
+        Other streams' pending pairs are left queued — eviction of one user
+        must not advance anyone else's state.
+        """
+        with self._lock:
+            state = self._streams.pop(stream_id)
+            queue = self._pending.pop(stream_id, deque())
+            for a, b in queue:
+                state = self.engine.update_truncated(state, a, b)
+                self.stats.applied += 1
+            return state
+
+    def state(self, stream_id: str) -> TruncatedSvd:
+        """Current state — pending (unflushed) pairs are NOT yet applied."""
+        with self._lock:
+            return self._streams[stream_id]
+
+    def pending(self, stream_id: str | None = None) -> int:
+        with self._lock:
+            if stream_id is not None:
+                return len(self._pending[stream_id])
+            return sum(len(q) for q in self._pending.values())
+
+    # -- the hot path -------------------------------------------------------
+
+    def enqueue(self, stream_id: str, a: jax.Array, b: jax.Array) -> None:
+        """Queue one rank-1 perturbation ``a b^T`` for a stream.
+
+        Auto-flushes when ``max_batch`` streams have a pending head pair.
+        """
+        with self._lock:
+            if stream_id not in self._streams:
+                raise KeyError(f"unknown stream {stream_id!r}; register() first")
+            t = self._streams[stream_id]
+            m, n = t.u.shape[0], t.v.shape[0]
+            if a.shape != (m,) or b.shape != (n,):
+                # reject HERE: at flush time a bad pair would poison a whole
+                # geometry group (pairs are popped before the engine call)
+                raise ValueError(
+                    f"pair shapes {a.shape}/{b.shape} do not match stream "
+                    f"{stream_id!r} geometry ({m},)/({n},)"
+                )
+            self._pending[stream_id].append((a, b))
+            self.stats.enqueued += 1
+            ready = sum(1 for q in self._pending.values() if q)
+            if ready >= self.max_batch:
+                self._flush_round()
+
+    def flush(self) -> int:
+        """Apply ALL pending pairs (possibly several rounds); returns the
+        number of updates applied."""
+        with self._lock:
+            applied = 0
+            while any(self._pending.values()):
+                applied += self._flush_round()
+            return applied
+
+    def _flush_round(self) -> int:
+        """One round: at most one pending pair per stream, grouped by
+        geometry, one batched engine call per group."""
+        round_ids = [sid for sid, q in self._pending.items() if q]
+        if not round_ids:
+            return 0
+
+        keys = [truncated_geometry(self._streams[sid]) for sid in round_ids]
+
+        applied = 0
+        for (m, n, r, dt), idxs in group_indices(keys).items():
+            sids = [round_ids[i] for i in idxs]
+            # peek, don't pop: if the engine call raises (first-compile OOM,
+            # backend error), the pairs stay queued and a retry re-applies
+            # them — flush stays failure-atomic per group
+            pairs = [self._pending[sid][0] for sid in sids]
+            states = [self._streams[sid] for sid in sids]
+            bsz = len(sids)
+            pad = 0
+            if self.pad_to_bucket:
+                # a group can exceed max_batch (retry after a failed flush
+                # accumulates streams) — never pad negative, just dispatch big
+                pad = max(0, _bucket(bsz, self.max_batch) - bsz)
+
+            t_stack = stack_trees(states)
+            a_stack = jnp.stack([jnp.asarray(a, dt) for a, _ in pairs])
+            b_stack = jnp.stack([jnp.asarray(b, dt) for _, b in pairs])
+            if pad:
+                # no-op rank-1 pairs (a = b = 0); padded outputs are discarded
+                t_stack = jax.tree.map(
+                    lambda x: jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)]),
+                    t_stack,
+                )
+                a_stack = jnp.concatenate([a_stack, jnp.zeros((pad, m), dt)])
+                b_stack = jnp.concatenate([b_stack, jnp.zeros((pad, n), dt)])
+
+            out = self.engine.update_truncated_batch(t_stack, a_stack, b_stack)
+            for j, sid in enumerate(sids):
+                self._streams[sid] = unstack_tree(out, j)
+                self._pending[sid].popleft()
+            applied += bsz
+            self.stats.rounds += 1
+            self.stats.max_batch = max(self.stats.max_batch, bsz + pad)
+
+        self.stats.flushes += 1
+        self.stats.applied += applied
+        return applied

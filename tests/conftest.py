@@ -1,4 +1,8 @@
+import sys
+import types
+
 import jax
+import pytest
 
 # Core numerics (secular / Loewner / Cauchy) need f64 for the orthogonality
 # guarantees under test. Model code pins its dtypes explicitly, so enabling
@@ -6,3 +10,38 @@ import jax
 # here on purpose — only launch/dryrun.py uses 512 placeholder devices;
 # distributed tests spawn subprocesses with their own env.
 jax.config.update("jax_enable_x64", True)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis shim: property tests are optional (the `test` extra installs the
+# real library). Without it, `from hypothesis import given, ...` resolves to
+# this stub and @given tests are collected but skipped — the rest of the
+# module (the deterministic tier-1 tests) still runs.
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _skip = pytest.mark.skip(reason="hypothesis not installed (pip install -e .[test])")
+
+    def _given(*_args, **_kwargs):
+        def deco(fn):
+            return _skip(fn)
+
+        return deco
+
+    def _settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.__getattr__ = lambda name: (lambda *a, **k: None)
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

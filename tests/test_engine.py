@@ -1,0 +1,378 @@
+"""Batch-first engine (core.engine) + micro-batching service (serve.svd_service).
+
+Acceptance-criteria coverage: batched results match a loop of single
+`svd_update` calls across methods, plan-cache hit behavior, and the
+svd_service micro-batching round trip.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import SvdEngine, default_engine, svd_update_batch
+from repro.core.svd_update import TruncatedSvd, svd_update, svd_update_truncated
+from repro.serve.svd_service import SvdService
+
+RNG = np.random.default_rng(11)
+
+
+def _stacked_problem(b, m, n):
+    us, ss, vs, as_, bs = [], [], [], [], []
+    for _ in range(b):
+        a_mat = RNG.uniform(1, 9, (m, n))
+        u, s, vt = np.linalg.svd(a_mat)
+        us.append(u)
+        ss.append(s)
+        vs.append(vt.T)
+        as_.append(RNG.normal(size=m))
+        bs.append(RNG.normal(size=n))
+    return tuple(jnp.asarray(np.stack(x)) for x in (us, ss, vs, as_, bs))
+
+
+def _rel_err(x, ref):
+    return float(jnp.max(jnp.abs(x - ref)) / (jnp.max(jnp.abs(ref)) + 1e-300))
+
+
+@pytest.mark.parametrize("method", ["direct", "fmm", "kernel"])
+def test_batch_matches_loop_of_singles(method):
+    """B=32 stacked updates == 32 individual svd_update calls (acceptance)."""
+    b, m, n = 32, 12, 16
+    u, s, v, a, bb = _stacked_problem(b, m, n)
+    eng = SvdEngine(method=method)
+    res = eng.update_batch(u, s, v, a, bb)
+    for i in range(b):
+        ref = svd_update(u[i], s[i], v[i], a[i], bb[i], method=method)
+        assert _rel_err(res.s[i], ref.s) < 1e-5
+        assert _rel_err(res.u[i], ref.u) < 1e-5
+        assert _rel_err(res.v[i], ref.v) < 1e-5
+
+
+@pytest.mark.parametrize("method", ["direct", "fmm"])
+def test_batch_fmm_geometry_matches_loop(method):
+    """Above the FMM size floor the batched tree plans must agree too."""
+    b, m, n = 3, 100, 128
+    u, s, v, a, bb = _stacked_problem(b, m, n)
+    res = svd_update_batch(u, s, v, a, bb, method=method)
+    for i in range(b):
+        ref = svd_update(u[i], s[i], v[i], a[i], bb[i], method=method)
+        assert _rel_err(res.s[i], ref.s) < 1e-5
+        assert _rel_err(res.v[i], ref.v) < 1e-5
+
+
+def test_batch_reconstructs_perturbed_matrix():
+    b, m, n = 8, 10, 14
+    u, s, v, a, bb = _stacked_problem(b, m, n)
+    res = SvdEngine().update_batch(u, s, v, a, bb)
+    for i in range(b):
+        a_hat = (
+            np.asarray(u[i]) @ np.diag(np.asarray(s[i])) @ np.asarray(v[i])[:, :m].T
+            + np.outer(a[i], bb[i])
+        )
+        recon = (
+            np.asarray(res.u[i])
+            @ np.diag(np.asarray(res.s[i]))
+            @ np.asarray(res.v[i])[:, :m].T
+        )
+        assert np.max(np.abs(a_hat - recon)) < 1e-9
+
+
+def test_truncated_batch_matches_loop():
+    b, m, n, r = 16, 20, 24, 5
+    t = TruncatedSvd(
+        jnp.asarray(np.stack([np.linalg.qr(RNG.normal(size=(m, r)))[0] for _ in range(b)])),
+        jnp.asarray(np.sort(np.abs(RNG.normal(size=(b, r))), axis=1)[:, ::-1].copy()),
+        jnp.asarray(np.stack([np.linalg.qr(RNG.normal(size=(n, r)))[0] for _ in range(b)])),
+    )
+    a = jnp.asarray(RNG.normal(size=(b, m)))
+    bb = jnp.asarray(RNG.normal(size=(b, n)))
+    out = SvdEngine().update_truncated_batch(t, a, bb)
+    for i in range(b):
+        ref = svd_update_truncated(TruncatedSvd(t.u[i], t.s[i], t.v[i]), a[i], bb[i])
+        assert _rel_err(out.s[i], ref.s) < 1e-8
+        assert _rel_err(out.u[i], ref.u) < 1e-8
+
+
+@pytest.mark.parametrize("method,build_fmm", [("direct", False), ("fmm", True), ("kernel", False)])
+def test_eigh_plan_apply_batch_matches_singles(method, build_fmm):
+    """Batched eigen-level plan/apply (make_plan_batch/apply_update_batch)
+    == loop of single make_plan/apply_update."""
+    from repro.core.eigh_update import apply_update, apply_update_batch, eigenvalues, make_plan, make_plan_batch
+
+    b, n = 4, 96 if build_fmm else 24  # above _FMM_MIN_N when fmm
+    d = jnp.asarray(np.sort(RNG.uniform(1, 9, (b, n)), axis=1))
+    z = jnp.asarray(RNG.normal(size=(b, n)))
+    rho = jnp.asarray(np.abs(RNG.normal(size=b)) + 0.1)
+    w = jnp.asarray(np.stack([np.linalg.qr(RNG.normal(size=(n, n)))[0] for _ in range(b)]))
+
+    plan_b = make_plan_batch(d, z, rho, rho_positive=True, build_fmm=build_fmm)
+    out_b = apply_update_batch(plan_b, w, method=method)
+    mu_b = jax.vmap(eigenvalues)(plan_b)
+    for i in range(b):
+        plan = make_plan(d[i], z[i], rho[i], rho_positive=True, build_fmm=build_fmm)
+        ref = apply_update(plan, w[i], method=method)
+        assert _rel_err(out_b[i], ref) < 1e-10
+        assert _rel_err(mu_b[i], eigenvalues(plan)) < 1e-12
+
+
+def test_plan_cache_hits():
+    eng = SvdEngine()
+    b, m, n = 4, 8, 10
+    u, s, v, a, bb = _stacked_problem(b, m, n)
+    assert eng.cache_info() == (0, 0, 0)
+    eng.update_batch(u, s, v, a, bb)
+    assert eng.cache_info().misses == 1
+    assert eng.cache_info().hits == 0
+    eng.update_batch(u, s, v, a, bb)
+    eng.update_batch(u, s, v, a, bb)
+    assert eng.cache_info().hits == 2
+    assert eng.cache_info().entries == 1
+    # a new geometry is a new entry, old entries still hit
+    u2, s2, v2, a2, bb2 = _stacked_problem(b + 1, m, n)
+    eng.update_batch(u2, s2, v2, a2, bb2)
+    assert eng.cache_info().misses == 2
+    assert eng.cache_info().entries == 2
+    eng.cache_clear()
+    assert eng.cache_info() == (0, 0, 0)
+
+
+def test_plan_cache_warmup_precompiles():
+    eng = SvdEngine()
+    info = eng.warmup(batch=4, m=8, n=10, dtype=jnp.float64)
+    assert info.entries == 1
+    info = eng.warmup(batch=4, m=8, n=10, rank=3, dtype=jnp.float64)
+    assert info.entries == 2
+    # warmup geometry == call geometry -> hit
+    u, s, v, a, bb = _stacked_problem(4, 8, 10)
+    eng.update_batch(u, s, v, a, bb)
+    assert eng.cache_info().hits == 1
+
+
+def test_batch_sharding_spreads_engine_batch():
+    """Engine with launch.mesh.batch_sharding: results unchanged, inputs
+    constrained to the mesh (single-device CPU mesh — semantics, not perf)."""
+    from repro.launch.mesh import batch_pad, batch_sharding, make_host_mesh
+
+    mesh = make_host_mesh(data=1, model=1)
+    sh = batch_sharding(mesh, "data")
+    eng = SvdEngine(sharding=sh)
+    b, m, n = 4, 8, 10
+    assert batch_pad(b, mesh, "data") == 0
+    u, s, v, a, bb = _stacked_problem(b, m, n)
+    res = eng.update_batch(u, s, v, a, bb)
+    ref = SvdEngine().update_batch(u, s, v, a, bb)
+    assert _rel_err(res.s, ref.s) == 0.0
+    assert _rel_err(res.v, ref.v) == 0.0
+
+
+def test_default_engine_shared():
+    e1 = default_engine("direct")
+    e2 = default_engine("direct")
+    assert e1 is e2
+    assert default_engine("kernel") is not e1
+
+
+def test_single_update_via_engine_matches_functional():
+    m, n = 12, 16
+    u, s, v, a, bb = _stacked_problem(1, m, n)
+    eng = SvdEngine()
+    res = eng.update(u[0], s[0], v[0], a[0], bb[0])
+    ref = svd_update(u[0], s[0], v[0], a[0], bb[0])
+    assert _rel_err(res.s, ref.s) == 0.0
+    assert _rel_err(res.v, ref.v) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# serve.svd_service micro-batching
+# ---------------------------------------------------------------------------
+
+
+def _fresh_stream(m, n, r):
+    return TruncatedSvd(
+        jnp.asarray(np.linalg.qr(RNG.normal(size=(m, r)))[0]),
+        jnp.asarray(np.sort(np.abs(RNG.normal(size=r)))[::-1].copy()),
+        jnp.asarray(np.linalg.qr(RNG.normal(size=(n, r)))[0]),
+    )
+
+
+def test_service_microbatch_roundtrip():
+    """Enqueue across many streams, flush as batched calls, states match a
+    sequential reference per stream (acceptance)."""
+    m, n, r = 14, 18, 4
+    eng = SvdEngine()
+    svc = SvdService(engine=eng, max_batch=8)
+
+    refs = {}
+    pairs = {}
+    for i in range(10):
+        sid = f"stream-{i}"
+        t = _fresh_stream(m, n, r)
+        svc.register(sid, t)
+        refs[sid] = t
+        k = 2 if i % 4 == 0 else 1  # some streams queue several pairs (FIFO)
+        pairs[sid] = [
+            (jnp.asarray(RNG.normal(size=m)), jnp.asarray(RNG.normal(size=n)))
+            for _ in range(k)
+        ]
+
+    for sid, ps in pairs.items():
+        for a, b in ps:
+            svc.enqueue(sid, a, b)
+    svc.flush()
+    assert svc.pending() == 0
+
+    for sid, ps in pairs.items():
+        ref = refs[sid]
+        for a, b in ps:
+            ref = svd_update_truncated(ref, a, b)
+        got = svc.state(sid)
+        assert _rel_err(got.s, ref.s) < 1e-8
+        assert _rel_err(got.u, ref.u) < 1e-8
+        assert _rel_err(got.v, ref.v) < 1e-8
+
+    assert svc.stats.applied == sum(len(p) for p in pairs.values())
+    assert svc.stats.max_batch >= 8  # micro-batching actually batched
+
+
+def test_service_auto_flush_and_bucketing():
+    m, n, r = 8, 9, 3
+    svc = SvdService(max_batch=4)
+    for i in range(4):
+        svc.register(f"s{i}", _fresh_stream(m, n, r))
+    for i in range(3):
+        svc.enqueue(f"s{i}", jnp.zeros(m), jnp.zeros(n))
+    assert svc.pending() == 3  # below max_batch: nothing flushed yet
+    svc.enqueue("s3", jnp.zeros(m), jnp.zeros(n))
+    assert svc.pending() == 0  # auto-flush at max_batch
+    assert svc.stats.flushes == 1
+    # mixed geometries group separately in one round
+    svc.register("wide", _fresh_stream(m, 2 * n, r))
+    svc.enqueue("s0", jnp.zeros(m), jnp.zeros(n))
+    svc.enqueue("wide", jnp.zeros(m), jnp.zeros(2 * n))
+    svc.flush()
+    assert svc.pending() == 0
+
+
+def test_service_reregister_drops_stale_queue():
+    m, n, r = 8, 9, 3
+    svc = SvdService(max_batch=16)
+    svc.register("x", _fresh_stream(m, n, r))
+    svc.enqueue("x", jnp.asarray(RNG.normal(size=m)), jnp.asarray(RNG.normal(size=n)))
+    t_new = _fresh_stream(2 * m, n, r)  # different geometry
+    svc.register("x", t_new)            # must drop the stale pending pair
+    assert svc.pending("x") == 0
+    svc.flush()
+    assert _rel_err(svc.state("x").s, t_new.s) == 0.0
+
+
+def test_service_evict_returns_flushed_state():
+    m, n, r = 8, 9, 3
+    svc = SvdService(max_batch=16)
+    t = _fresh_stream(m, n, r)
+    svc.register("x", t)
+    svc.register("bystander", _fresh_stream(m, n, r))
+    a = jnp.asarray(RNG.normal(size=m))
+    b = jnp.asarray(RNG.normal(size=n))
+    svc.enqueue("x", a, b)
+    svc.enqueue("bystander", a, b)
+    out = svc.evict("x")
+    ref = svd_update_truncated(t, a, b)
+    assert _rel_err(out.s, ref.s) < 1e-8
+    # evicting one stream must not advance anyone else's state
+    assert svc.pending("bystander") == 1
+    with pytest.raises(KeyError):
+        svc.enqueue("x", a, b)
+
+
+def test_service_flush_failure_keeps_pairs_queued():
+    """A failed engine dispatch must not lose queued updates (peek-then-pop)."""
+    m, n, r = 8, 9, 3
+    eng = SvdEngine()
+    svc = SvdService(engine=eng, max_batch=16)
+    svc.register("x", _fresh_stream(m, n, r))
+    a = jnp.asarray(RNG.normal(size=m))
+    b = jnp.asarray(RNG.normal(size=n))
+    svc.enqueue("x", a, b)
+    before = svc.state("x")
+
+    real = eng.update_truncated_batch
+    calls = {"n": 0}
+
+    def flaky(*args, **kw):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("simulated backend failure")
+        return real(*args, **kw)
+
+    eng.update_truncated_batch = flaky
+    try:
+        with pytest.raises(RuntimeError):
+            svc.flush()
+        assert svc.pending("x") == 1          # pair survived the failure
+        assert _rel_err(svc.state("x").s, before.s) == 0.0  # state untouched
+        assert svc.flush() == 1               # retry applies it
+    finally:
+        eng.update_truncated_batch = real
+    ref = svd_update_truncated(before, a, b)
+    assert _rel_err(svc.state("x").s, ref.s) < 1e-8
+
+
+def test_service_group_larger_than_max_batch_does_not_wedge():
+    """Retry accumulation can make a round group exceed max_batch — the
+    service must dispatch it (unbucketed) instead of computing negative pad."""
+    m, n, r = 8, 9, 3
+    eng = SvdEngine()
+    svc = SvdService(engine=eng, max_batch=4)
+    real = eng.update_truncated_batch
+    fail = {"on": True}
+
+    def flaky(*args, **kw):
+        if fail["on"]:
+            raise RuntimeError("transient")
+        return real(*args, **kw)
+
+    eng.update_truncated_batch = flaky
+    try:
+        for i in range(4):
+            svc.register(f"s{i}", _fresh_stream(m, n, r))
+        with pytest.raises(RuntimeError):  # auto-flush at max_batch fails
+            for i in range(4):
+                svc.enqueue(f"s{i}", jnp.zeros(m), jnp.zeros(n))
+        svc.register("s4", _fresh_stream(m, n, r))
+        with pytest.raises(RuntimeError):  # 5th stream: group now > max_batch
+            svc.enqueue("s4", jnp.zeros(m), jnp.zeros(n))
+        fail["on"] = False
+    finally:
+        eng.update_truncated_batch = real
+    assert svc.flush() == 5                # recovers, applies all 5
+    assert svc.pending() == 0
+
+
+def test_service_rejects_mismatched_pair_at_enqueue():
+    m, n, r = 8, 9, 3
+    svc = SvdService(max_batch=16)
+    svc.register("x", _fresh_stream(m, n, r))
+    with pytest.raises(ValueError, match="geometry"):
+        svc.enqueue("x", jnp.zeros(m + 1), jnp.zeros(n))
+    # a bad pair must not poison later valid traffic
+    svc.enqueue("x", jnp.zeros(m), jnp.zeros(n))
+    assert svc.flush() == 1
+
+
+def test_warmup_engine_usable_under_trace():
+    """AOT warmup must not break traced consumers (jit / lax.cond)."""
+    eng = SvdEngine()
+    b, m, n, r = 2, 8, 10, 3
+    eng.warmup(batch=b, m=m, n=n, rank=r, dtype=jnp.float64)
+    t = TruncatedSvd(
+        jnp.asarray(np.stack([np.linalg.qr(RNG.normal(size=(m, r)))[0] for _ in range(b)])),
+        jnp.asarray(np.abs(RNG.normal(size=(b, r)))),
+        jnp.asarray(np.stack([np.linalg.qr(RNG.normal(size=(n, r)))[0] for _ in range(b)])),
+    )
+    a = jnp.asarray(RNG.normal(size=(b, m)))
+    bb = jnp.asarray(RNG.normal(size=(b, n)))
+
+    out_jit = jax.jit(lambda t_, a_, b_: eng.update_truncated_batch(t_, a_, b_))(t, a, bb)
+    out_eager = eng.update_truncated_batch(t, a, bb)  # AOT path
+    assert _rel_err(out_jit.s, out_eager.s) < 1e-12
