@@ -20,8 +20,18 @@ that the default shape of the computation:
   Chebyshev-FMM plans batch as stacked tensors.
 
 * **Sharding.** An optional ``jax.sharding.Sharding`` for the batch axis
-  (build one with ``launch.mesh.batch_sharding``) is applied to the stacked
+  (build one with ``repro.dist.batch_sharding``) is applied to the stacked
   inputs, so a flush of B updates spreads over the mesh's data axis.
+
+* **Mesh-aware dispatch.** ``update_batch`` / ``update_truncated_batch``
+  accept ``mesh=`` + ``batch_axis=`` and then dispatch through
+  ``shard_map``: the batch axis is split over the mesh axis and each shard
+  runs the vmapped update — under ``method="kernel"`` one per-shard Pallas
+  Cauchy launch with the local batch folded into its grid.  The update is
+  embarrassingly parallel over the batch, so NOTHING crosses the wire
+  inside the engine; only consumers' small factor collectives do
+  (``repro.dist.collectives``).  Batches are auto-padded to the mesh axis
+  size (no-op tail entries, results sliced off).
 
 Consumers: ``optim.spectral`` / ``optim.compression`` group equal-geometry
 parameters and make one engine call per group; ``serve.svd_service``
@@ -37,6 +47,8 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
 
 from repro.core.svd_update import (
     SvdUpdateResult,
@@ -203,6 +215,58 @@ class SvdEngine:
             jax.vmap(lambda t, a, b: impl(t, a, b)), **self._batch_jit_kwargs()
         )
 
+    # -- mesh-aware (shard_map) builders ------------------------------------
+    # Per-shard: the same vmapped impl, batch split over one mesh axis. The
+    # update is independent per batch element, so there are no collectives
+    # inside — check_rep is off because shard_map's replication checker has
+    # nothing to verify here and trips on Pallas/custom_vmap internals on
+    # the kernel path.
+
+    def _build_batch_shard_map(self, mesh, axis: str) -> Callable:
+        impl = partial(
+            _svd_update_impl,
+            method=self.method,
+            fmm_p=self.fmm_p,
+            sign_fix=self.sign_fix,
+        )
+        vf = jax.vmap(lambda u, s, v, a, b: impl(u, s, v, a, b))
+        spec = PartitionSpec(axis)
+        return jax.jit(
+            shard_map(vf, mesh=mesh, in_specs=(spec,) * 5, out_specs=spec,
+                      check_rep=False)
+        )
+
+    def _build_truncated_batch_shard_map(self, mesh, axis: str) -> Callable:
+        impl = partial(_svd_update_truncated_impl, method=self.method)
+        vf = jax.vmap(lambda t, a, b: impl(t, a, b))
+        spec = PartitionSpec(axis)
+        return jax.jit(
+            shard_map(vf, mesh=mesh, in_specs=(spec,) * 3, out_specs=spec,
+                      check_rep=False)
+        )
+
+    @staticmethod
+    def _mesh_axis_size(mesh, axis: str) -> int:
+        try:
+            return dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+        except KeyError:
+            raise ValueError(
+                f"mesh has no axis {axis!r}; axes: {mesh.axis_names}"
+            ) from None
+
+    @staticmethod
+    def _pad_batch(arrays: tuple, size: int) -> tuple[tuple, int]:
+        """Pad the leading batch dim to a multiple of ``size`` by repeating
+        the last entry (a real but discarded update). Returns (padded, B)."""
+        b = arrays[0].shape[0]
+        pad = (-b) % size
+        if pad == 0:
+            return arrays, b
+        padded = tuple(
+            jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)]) for x in arrays
+        )
+        return padded, b
+
     # -- entry points -------------------------------------------------------
 
     @staticmethod
@@ -228,18 +292,30 @@ class SvdEngine:
         ent = self._entry(key, self._build_single)
         return self._call(ent, u, s, v, a, b)
 
-    def update_batch(self, u, s, v, a, b) -> SvdUpdateResult:
+    def update_batch(self, u, s, v, a, b, *, mesh=None, batch_axis: str = "data") -> SvdUpdateResult:
         """B stacked updates in one call.
 
         ``u``: (B, m, m), ``s``: (B, m), ``v``: (B, n, n), ``a``: (B, m),
         ``b``: (B, n). Returns an ``SvdUpdateResult`` whose leaves carry the
         leading batch axis. Equivalent to B independent ``svd_update`` calls.
+
+        With ``mesh`` the batch is split over ``batch_axis`` and dispatched
+        through ``shard_map`` — each device runs its local slice of the
+        batch; B is auto-padded up to the axis size and the padding sliced
+        off the result.
         """
         if u.ndim != 3:
             raise ValueError(f"update_batch expects stacked (B, m, m) u; got {u.shape}")
-        key = _geometry("batch", u, s, v, a, b)
-        ent = self._entry(key, self._build_batch)
-        return self._call(ent, *self._constrain(u, s, v, a, b))
+        if mesh is None:
+            key = _geometry("batch", u, s, v, a, b)
+            ent = self._entry(key, self._build_batch)
+            return self._call(ent, *self._constrain(u, s, v, a, b))
+        size = self._mesh_axis_size(mesh, batch_axis)
+        (u, s, v, a, b), b_orig = self._pad_batch((u, s, v, a, b), size)
+        key = ("shard", mesh, batch_axis) + _geometry("batch", u, s, v, a, b)
+        ent = self._entry(key, partial(self._build_batch_shard_map, mesh, batch_axis))
+        out = self._call(ent, u, s, v, a, b)
+        return jax.tree.map(lambda x: x[:b_orig], out)
 
     def update_truncated(self, tsvd: TruncatedSvd, a, b) -> TruncatedSvd:
         """Single streaming truncated update (plan-cached jit)."""
@@ -247,20 +323,35 @@ class SvdEngine:
         ent = self._entry(key, self._build_truncated)
         return self._call(ent, tsvd, a, b)
 
-    def update_truncated_batch(self, tsvd: TruncatedSvd, a, b) -> TruncatedSvd:
+    def update_truncated_batch(
+        self, tsvd: TruncatedSvd, a, b, *, mesh=None, batch_axis: str = "data"
+    ) -> TruncatedSvd:
         """B stacked rank-r streaming updates in one call.
 
         ``tsvd`` leaves: u (B, m, r), s (B, r), v (B, n, r); ``a``: (B, m),
-        ``b``: (B, n). Returns a stacked ``TruncatedSvd``.
+        ``b``: (B, n). Returns a stacked ``TruncatedSvd``.  With ``mesh``
+        the batch is split over ``batch_axis`` via ``shard_map`` (auto-padded
+        to the axis size, padding sliced off).
         """
         if tsvd.u.ndim != 3:
             raise ValueError(
                 f"update_truncated_batch expects stacked (B, m, r) u; got {tsvd.u.shape}"
             )
-        key = _geometry("trunc_batch", tsvd.u, tsvd.s, tsvd.v, a, b)
-        ent = self._entry(key, self._build_truncated_batch)
-        u_, s_, v_, a_, b_ = self._constrain(tsvd.u, tsvd.s, tsvd.v, a, b)
-        return self._call(ent, TruncatedSvd(u_, s_, v_), a_, b_)
+        if mesh is None:
+            key = _geometry("trunc_batch", tsvd.u, tsvd.s, tsvd.v, a, b)
+            ent = self._entry(key, self._build_truncated_batch)
+            u_, s_, v_, a_, b_ = self._constrain(tsvd.u, tsvd.s, tsvd.v, a, b)
+            return self._call(ent, TruncatedSvd(u_, s_, v_), a_, b_)
+        size = self._mesh_axis_size(mesh, batch_axis)
+        (u_, s_, v_, a_, b_), b_orig = self._pad_batch(
+            (tsvd.u, tsvd.s, tsvd.v, a, b), size
+        )
+        key = ("shard", mesh, batch_axis) + _geometry("trunc_batch", u_, s_, v_, a_, b_)
+        ent = self._entry(
+            key, partial(self._build_truncated_batch_shard_map, mesh, batch_axis)
+        )
+        out = self._call(ent, TruncatedSvd(u_, s_, v_), a_, b_)
+        return jax.tree.map(lambda x: x[:b_orig], out)
 
     # -- warmup -------------------------------------------------------------
 
@@ -345,16 +436,25 @@ def svd_update_batch(
     method: str = "direct",
     fmm_p: int = 20,
     sign_fix: bool = True,
+    mesh=None,
+    batch_axis: str = "data",
 ) -> SvdUpdateResult:
     """Functional facade over ``default_engine(...).update_batch`` — B stacked
-    Algorithm-6.1 updates in one vmapped, plan-cached call."""
+    Algorithm-6.1 updates in one vmapped, plan-cached call.  ``mesh`` splits
+    the batch over ``batch_axis`` via shard_map (see ``SvdEngine``)."""
     eng = default_engine(method, fmm_p=fmm_p, sign_fix=sign_fix)
-    return eng.update_batch(u, s, v, a, b)
+    return eng.update_batch(u, s, v, a, b, mesh=mesh, batch_axis=batch_axis)
 
 
 def svd_update_truncated_batch(
-    tsvd: TruncatedSvd, a: jax.Array, b: jax.Array, *, method: str = "direct"
+    tsvd: TruncatedSvd,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    method: str = "direct",
+    mesh=None,
+    batch_axis: str = "data",
 ) -> TruncatedSvd:
     """Functional facade over ``default_engine(...).update_truncated_batch``."""
     eng = default_engine(method)
-    return eng.update_truncated_batch(tsvd, a, b)
+    return eng.update_truncated_batch(tsvd, a, b, mesh=mesh, batch_axis=batch_axis)

@@ -69,6 +69,21 @@ class DeflationResult(NamedTuple):
     compact: jax.Array    # (n,) int32 permutation, retained-first
 
 
+def _rep_anchored_literal(val, like: jax.Array, dtype) -> jax.Array:
+    """A literal constant whose shard_map replication tracking follows ``like``.
+
+    Under ``shard_map(check_rep=True)`` literal constants carry rep ``None``
+    ("replicated over all axes") while values derived from operands carry
+    concrete axis sets; ``lax.scan`` requires the carry rep to be *equal* on
+    input and output, so a literal initial carry spuriously trips the check
+    (jax 0.4.x scan-replication error). Selecting the same literal on a
+    ``like``-derived predicate is a no-op numerically but inherits ``like``'s
+    rep, making the scan carry rep invariant.
+    """
+    c = jnp.asarray(val, dtype)
+    return lax.select(like.reshape(-1)[0] == like.reshape(-1)[0], c, c)
+
+
 def deflate(d: jax.Array, z: jax.Array, rho: jax.Array, *, rtol: float | None = None) -> DeflationResult:
     """BNS deflation for ``D + rho z z^T`` (rho > 0, d ascending).
 
@@ -108,7 +123,8 @@ def deflate(d: jax.Array, z: jax.Array, rho: jax.Array, *, rtol: float | None = 
         b_idx = jnp.asarray(i, jnp.int32)
         return (z_new, new_last), (a_idx, b_idx, c, s)
 
-    (z_merged, _), (gas, gbs, cs, ss) = lax.scan(step, (z, jnp.asarray(-1)), jnp.arange(n))
+    last0 = _rep_anchored_literal(-1, z, jnp.arange(1).dtype)  # default int dtype (x64-aware)
+    (z_merged, _), (gas, gbs, cs, ss) = lax.scan(step, (z, last0), jnp.arange(n))
 
     # deflate tiny z entries
     keep = jnp.abs(rho) * z_merged * z_merged > tol

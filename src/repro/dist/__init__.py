@@ -1,0 +1,39 @@
+"""``repro.dist`` — the distributed layer (DESIGN.md §7).
+
+One home for everything that knows about meshes and device placement:
+
+* ``dist.sharding`` — PartitionSpec rules for params / batches / decode
+  caches across all 10 archs, plus the batch-axis helpers
+  (``batch_sharding`` / ``batch_pad``) the engine and serve layers use.
+* ``dist.collectives`` — the compressed all-reduce primitives (factor
+  pmeans, truncated-SVD factor all-gather, wire-byte accounting).
+* ``dist.merge`` — hierarchical (log-depth) distributed truncated-SVD
+  merge built from the paper's rank-1 update machinery.
+
+Importing this package never touches jax device state (dry-run contract):
+everything here is a function of shapes, specs, and axis names.
+"""
+
+from repro.dist import collectives, merge, sharding
+from repro.dist.sharding import (
+    AXIS_SIZES,
+    batch_pad,
+    batch_pspecs,
+    batch_sharding,
+    cache_pspecs,
+    gather_for_compute,
+    param_pspecs,
+)
+
+__all__ = [
+    "AXIS_SIZES",
+    "batch_pad",
+    "batch_pspecs",
+    "batch_sharding",
+    "cache_pspecs",
+    "collectives",
+    "gather_for_compute",
+    "merge",
+    "param_pspecs",
+    "sharding",
+]

@@ -1,0 +1,201 @@
+"""Sharding specs: one rulebook for params, batches, and decode caches.
+
+The production mesh is ``(data=16, model=16)`` per pod, with an optional
+leading ``pod=2`` axis (``launch.mesh.make_production_mesh``).  Specs emitted
+here satisfy a single contract, checked by ``tests/test_dist.py``:
+
+    every dim a spec shards is divisible by the product of the production
+    sizes of the mesh axes assigned to it (``AXIS_SIZES``).
+
+Spec rules (shape-driven, so the same code covers all 10 archs):
+
+* **params** — 1-D leaves (norm gains, biases) replicate.  For >=2-D leaves
+  the rightmost divisible dim takes ``model`` (tensor parallelism: the
+  d_ff / head / vocab / expert-width dim in every family), and the rightmost
+  *remaining* divisible dim takes ``data`` (ZeRO/FSDP-style weight sharding;
+  gathered at use via ``gather_for_compute`` when ``cfg.fsdp_gather_params``).
+  Leaves under a stacked-layer key (``layers``, ``groups``, ...) never shard
+  their leading depth axis: ``lax.scan`` slices it every step and a sharded
+  scan axis would turn each slice into a collective.
+* **batches** — leading (global-batch) dim over ``data`` (and ``pod`` when
+  multi-pod): pure data parallelism, everything else replicated.
+* **caches** — stacked decode caches are ``(L, batch, seq, ...)``: batch dim
+  over ``data``.  Long-context cells (batch=1) cannot data-shard the batch,
+  so ``seq_shard_fallback`` shards the sequence axis instead (ring-attention
+  style placement; the seed's 500k cells fit only this way).
+
+Divisibility is checked against the *production* sizes even on smaller host
+meshes: a dim divisible by 16 is divisible by every power of two below it,
+and jit/GSPMD tolerates the (never exercised) uneven remainder cases.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "AXIS_SIZES",
+    "param_pspecs",
+    "batch_pspecs",
+    "cache_pspecs",
+    "gather_for_compute",
+    "batch_sharding",
+    "batch_pad",
+]
+
+
+#: Production mesh axis sizes — the divisibility contract for all specs.
+AXIS_SIZES: dict[str, int] = {"pod": 2, "data": 16, "model": 16}
+
+#: Pytree keys whose immediate children are layer stacks iterated by
+#: ``lax.scan`` — their leading depth axis must never be sharded.
+_STACKED_KEYS = frozenset(
+    {"layers", "groups", "tail", "blocks", "enc_layers", "dec_layers"}
+)
+
+
+def _axis_divisor(ax) -> int:
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    return math.prod(AXIS_SIZES[a] for a in axes)
+
+
+def _dim_divides(dim: int, ax) -> bool:
+    return dim % _axis_divisor(ax) == 0
+
+
+def _leaf_param_spec(shape: tuple, *, stacked: bool) -> P:
+    """Model/data assignment for one parameter leaf (see module docstring)."""
+    nd = len(shape)
+    if nd < 2:
+        return P()
+    axes: list = [None] * nd
+    first = 1 if stacked else 0  # protect the scan depth axis
+
+    # tensor-parallel axis: rightmost divisible dim
+    for i in (nd - 1, nd - 2):
+        if i >= first and _dim_divides(shape[i], "model"):
+            axes[i] = "model"
+            break
+    # FSDP/data axis: rightmost remaining divisible dim
+    for i in range(nd - 1, first - 1, -1):
+        if axes[i] is None and _dim_divides(shape[i], "data"):
+            axes[i] = "data"
+            break
+    while axes and axes[-1] is None:
+        axes.pop()
+    return P(*axes)
+
+
+def param_pspecs(tree):
+    """PartitionSpecs for a parameter pytree (arrays or ShapeDtypeStructs).
+
+    Structure-preserving: ``jax.tree.map(NamedSharding(mesh, .), specs)``
+    composes with ``jit(in_shardings=...)``; ``train.elastic.reshard`` uses
+    the same specs for any mesh shape the elastic planner picks.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for path, leaf in flat:
+        keys = {getattr(p, "key", None) for p in path}
+        specs.append(
+            _leaf_param_spec(tuple(leaf.shape), stacked=bool(keys & _STACKED_KEYS))
+        )
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _data_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else "data"
+
+
+def batch_pspecs(batch, *, multi_pod: bool = False):
+    """Data-parallel specs for an input batch: leading dim over ``data``
+    (plus ``pod`` when multi-pod), everything else replicated."""
+    ax = _data_axes(multi_pod)
+
+    def spec(leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        return P(ax, *([None] * (nd - 1)))
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_pspecs(
+    cache,
+    *,
+    multi_pod: bool = False,
+    long_context: bool = False,
+    seq_shard_fallback: bool = True,
+):
+    """Specs for stacked decode caches / recurrent states ``(L, batch, ...)``.
+
+    Default: batch axis over ``data``.  ``long_context`` (batch=1) cells
+    shard the largest trailing axis (the sequence) instead when
+    ``seq_shard_fallback`` — otherwise the cache replicates.
+    """
+    ax = _data_axes(multi_pod)
+
+    def spec(leaf):
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        if nd < 2:
+            return P()
+        bdim = 1 if nd >= 3 else 0  # leading axis is the layer stack
+        axes: list = [None] * nd
+        if not long_context and _dim_divides(shape[bdim], ax):
+            axes[bdim] = ax
+        elif long_context and seq_shard_fallback and nd > bdim + 1:
+            sdim = max(range(bdim + 1, nd), key=lambda i: shape[i])
+            if _dim_divides(shape[sdim], ax):
+                axes[sdim] = ax
+        while axes and axes[-1] is None:
+            axes.pop()
+        return P(*axes)
+
+    return jax.tree.map(spec, cache)
+
+
+def gather_for_compute(params, compute_dtype):
+    """ZeRO-3 gather-at-use: cast to the compute dtype and constrain every
+    leaf to replicated, so XLA all-gathers FSDP-sharded weights right where
+    they are consumed (and frees them after).  No-op outside a mesh context.
+    """
+    cd = jnp.dtype(compute_dtype)
+
+    def g(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            x = x.astype(cd)
+        try:
+            return jax.lax.with_sharding_constraint(x, P())
+        except (ValueError, RuntimeError):
+            return x
+
+    return jax.tree.map(g, params)
+
+
+# ---------------------------------------------------------------------------
+# Batch-axis helpers for the engine / serve layers
+# (moved here from launch.mesh — repro.dist is the one sharding home).
+# ---------------------------------------------------------------------------
+
+
+def batch_sharding(mesh, axis: str = "data") -> NamedSharding:
+    """Sharding that splits a leading batch axis over one mesh axis.
+
+    This is what ``core.engine.SvdEngine`` / ``serve.svd_service`` take to
+    spread a flush of B stacked rank-1 updates across the data axis: batch
+    dim sharded, every per-update dim replicated.
+    """
+    return NamedSharding(mesh, P(axis))
+
+
+def batch_pad(b: int, mesh, axis: str = "data") -> int:
+    """Rows of padding needed to make a batch of ``b`` divisible by the mesh
+    axis (batched updates pad with no-op rank-1 pairs, results discarded)."""
+    k = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    return (-b) % k

@@ -26,20 +26,7 @@ def make_host_mesh(data: int | None = None, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
-def batch_sharding(mesh, axis: str = "data") -> jax.sharding.NamedSharding:
-    """Sharding that splits a leading batch axis over one mesh axis.
-
-    This is what ``core.engine.SvdEngine`` / ``serve.svd_service`` take to
-    spread a flush of B stacked rank-1 updates across the data axis: batch
-    dim sharded, every per-update dim replicated.
-    """
-    from jax.sharding import PartitionSpec
-
-    return jax.sharding.NamedSharding(mesh, PartitionSpec(axis))
-
-
-def batch_pad(b: int, mesh, axis: str = "data") -> int:
-    """Rows of padding needed to make a batch of ``b`` divisible by the mesh
-    axis (batched updates pad with no-op rank-1 pairs, results discarded)."""
-    k = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
-    return (-b) % k
+# DEPRECATED re-exports: ``batch_sharding`` / ``batch_pad`` moved to
+# ``repro.dist.sharding`` (the one sharding home) — import them from
+# ``repro.dist``. Kept here so existing callers keep working.
+from repro.dist.sharding import batch_pad, batch_sharding  # noqa: E402, F401

@@ -34,9 +34,11 @@ from repro.core.engine import (
     unstack_tree,
 )
 from repro.core.svd_update import TruncatedSvd
+from repro.dist import collectives, merge as dist_merge
 
 __all__ = [
     "CompressionState",
+    "agree_basis",
     "compression_init",
     "compress_decompress",
     "compress_decompress_batch",
@@ -101,14 +103,14 @@ def compress_decompress_batch(
         engine = default_engine(method)
     g = grads.astype(states.error.dtype) + states.error           # (B, m, n)
 
+    # the ONLY wire traffic: two factor pmeans (dist.collectives) — never
+    # the dense (B, m, n) gradient
     p = jnp.einsum("bmn,bnr->bmr", g, states.v_basis)
-    if axis_name is not None:
-        p = jax.lax.pmean(p, axis_name)
+    p = collectives.pmean_factor(p, axis_name)
     p_hat = _orthonormalize(p)                                     # batched QR
 
     q = jnp.einsum("bmn,bmr->bnr", g, p_hat)
-    if axis_name is not None:
-        q = jax.lax.pmean(q, axis_name)
+    q = collectives.pmean_factor(q, axis_name)
 
     g_hat = jnp.einsum("bmr,bnr->bmn", p_hat, q)
     err = g - g_hat
@@ -138,6 +140,46 @@ def refresh_basis(state: CompressionState) -> CompressionState:
     memory; call every ~100 steps to escape warm-start cycling)."""
     return CompressionState(v_basis=state.tracker.v, error=state.error,
                             tracker=state.tracker)
+
+
+def agree_basis(state: CompressionState, *, axis_name, rank: int | None = None,
+                engine: SvdEngine | None = None,
+                method: str = "direct") -> CompressionState:
+    """Cross-DP basis agreement (call under shard_map, alongside
+    ``refresh_basis``'s cadence).
+
+    Workers' trackers drift apart between refreshes (error feedback is
+    per-worker).  This merges all per-worker trackers with the hierarchical
+    distributed truncated-SVD merge (``dist.merge``): treat worker trackers
+    as SVDs of the row-stacked per-worker gradient sketches, all_gather the
+    small factors, log-depth combine.  Every worker ends with the SAME
+    consensus ``v_basis`` (the merged right basis — the span that matters
+    for compression), while the tracker becomes the worker's own slice of
+    the consensus: the merged factors restricted to its row block,
+    re-factorized (QR of the block + r x r SVD, both O(m r^2)) so the
+    tracker keeps the orthonormal-basis invariant the Brand truncated
+    update requires.  Under shard_map this makes ``tracker.u`` PER-WORKER
+    (spec it like the error buffer); ``tracker.s``/``tracker.v`` and
+    ``v_basis`` stay replicated only when workers' row blocks happen to
+    match — treat the whole post-agreement tracker as per-worker state.
+    """
+    tr = state.tracker
+    m = tr.u.shape[0]
+    merged = dist_merge.distributed_merge(
+        tr, axis_name, rank=rank, engine=engine, method=method
+    )
+    if axis_name is None:
+        u_block = merged.u
+    else:
+        idx = jax.lax.axis_index(axis_name)
+        u_block = jax.lax.dynamic_slice_in_dim(merged.u, idx * m, m, axis=0)
+    # local row block: M_w ~ u_block diag(s) v^T with u_block NOT orthonormal
+    # (its columns carry only this worker's share of the mass). Re-factorize:
+    # u_block = Q R; R diag(s) = P Sigma W^T  =>  M_w ~ (Q P) Sigma (v W)^T.
+    q, rmat = jnp.linalg.qr(u_block)
+    p, sigma, wt = jnp.linalg.svd(rmat * merged.s[None, :], full_matrices=False)
+    tracker = TruncatedSvd(u=q @ p, s=sigma, v=merged.v @ wt.T)
+    return CompressionState(v_basis=merged.v, error=state.error, tracker=tracker)
 
 
 def compressed_allreduce(states, grads, *, axis_name, method: str = "direct",

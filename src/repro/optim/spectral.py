@@ -100,6 +100,8 @@ def spectral_update_basis_grouped(
     decay: float = 0.99,
     method: str = "direct",
     engine: SvdEngine | None = None,
+    mesh=None,
+    batch_axis: str = "data",
 ) -> tuple[SpectralState, ...]:
     """Batched basis update: group equal-geometry parameters, one engine call
     per group.
@@ -107,7 +109,8 @@ def spectral_update_basis_grouped(
     ``states[i]`` / ``grads[i]`` pair up; parameters sharing (m, n, rank,
     dtype) are stacked along a batch axis and their trackers updated by a
     single ``SvdEngine.update_truncated_batch`` — B rank-1 updates for one
-    plan/dispatch instead of B Python-loop iterations.
+    plan/dispatch instead of B Python-loop iterations.  ``mesh`` spreads each
+    group's batch over ``batch_axis`` via the engine's shard_map dispatch.
     """
     if len(states) != len(grads):
         raise ValueError("states and grads must pair up")
@@ -128,7 +131,8 @@ def spectral_update_basis_grouped(
         tr, a_vec, b_vec, v_new = jax.vmap(partial(_rank1_of_grad, decay=decay))(
             stacked, g_stack
         )
-        tr = engine.update_truncated_batch(tr, a_vec, b_vec)
+        tr = engine.update_truncated_batch(tr, a_vec, b_vec, mesh=mesh,
+                                           batch_axis=batch_axis)
         batched = SpectralState(tracker=tr, power_v=v_new, step=stacked.step + 1)
         for j, i in enumerate(idxs):
             out[i] = unstack_tree(batched, j)

@@ -19,8 +19,10 @@ flushes *one batched engine call* per round:
 * Micro-batching: ``enqueue`` auto-flushes once ``max_batch`` streams have
   a pending pair. Batches are padded up to bucket sizes (powers of two) so
   the engine's plan cache sees a handful of geometries, not every B.
-* Sharding: give the engine a ``launch.mesh.batch_sharding(mesh)`` and the
+* Sharding: give the engine a ``repro.dist.batch_sharding(mesh)`` and the
   stacked batch axis spreads over the mesh's data axis.
+* Multi-worker: per-worker shard streams combine into one global truncated
+  SVD via ``merge_streams`` (the ``repro.dist.merge`` log-depth tree).
 
 The LM engine (``serve.engine``) serves tokens; this serves spectra.
 """
@@ -43,6 +45,7 @@ from repro.core.engine import (
     unstack_tree,
 )
 from repro.core.svd_update import TruncatedSvd
+from repro.dist.merge import merge_tree
 
 __all__ = ["SvdService", "SvdServiceStats"]
 
@@ -113,6 +116,48 @@ class SvdService:
         """Current state — pending (unflushed) pairs are NOT yet applied."""
         with self._lock:
             return self._streams[stream_id]
+
+    def merge_streams(
+        self,
+        stream_ids,
+        *,
+        target: str | None = None,
+        rank: int | None = None,
+    ) -> TruncatedSvd:
+        """Hierarchically merge several streams into one truncated SVD.
+
+        The multi-worker story: each worker feeds its own stream (a shard
+        tracker over its row block of a logically-shared matrix — per-tenant
+        gradient sketches, federated covariance shards) and the service
+        periodically combines them with the log-depth rank-1-update merge
+        (``repro.dist.merge.merge_tree``) — row blocks concatenate in
+        ``stream_ids`` order.  Each stream's OWN pending pairs are applied
+        first (the merge must see current states; other streams' queues are
+        untouched).  With ``target`` the result is registered as a new
+        stream; the source streams keep evolving independently.
+
+        The snapshot (queue drain) happens under the service lock; the
+        log-depth merge itself — including its first-call jit compile —
+        runs OUTSIDE it, so concurrent ``enqueue``/``flush`` traffic on
+        other streams is never stalled.  The merge reflects the states as
+        of the snapshot.
+        """
+        with self._lock:
+            states = []
+            for sid in stream_ids:
+                state = self._streams[sid]
+                queue = self._pending[sid]
+                while queue:
+                    a, b = queue.popleft()
+                    state = self.engine.update_truncated(state, a, b)
+                    self.stats.applied += 1
+                self._streams[sid] = state
+                states.append(state)
+        merged = merge_tree(states, rank=rank, engine=self.engine)
+        if target is not None:
+            with self._lock:
+                self.register(target, merged)
+        return merged
 
     def pending(self, stream_id: str | None = None) -> int:
         with self._lock:

@@ -104,7 +104,10 @@ def train(
         from repro.dist import sharding as sh
 
         p_specs = sh.param_pspecs(params)
-        b_specs = {"tokens": P("data", None), "labels": P("data", None)}
+        b_specs = sh.batch_pspecs({
+            "tokens": jax.ShapeDtypeStruct((batch_size, seq_len), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch_size, seq_len), jnp.int32),
+        })
 
         def ns(t):
             return jax.tree.map(lambda s: NamedSharding(mesh, s), t,
