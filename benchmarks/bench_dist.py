@@ -33,6 +33,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import emit, time_fn
+from repro.api import SvdState
 from repro.core.engine import SvdEngine
 from repro.core.svd_update import TruncatedSvd
 from repro.dist.collectives import factor_wire_bytes
@@ -110,7 +111,7 @@ def bench_wire(mesh) -> dict:
         compressed, mesh=mesh,
         in_specs=(P("data"), P()),
         out_specs=(P("data"), CompressionState(
-            v_basis=P(), error=P("data"), tracker=TruncatedSvd(P(), P(), P()))),
+            v_basis=P(), error=P("data"), tracker=SvdState(P(), P(), P()))),
     )
 
     hlo_dense = _hlo_collective_bytes(dense_fn, g_all)

@@ -25,7 +25,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core.svd_update import TruncatedSvd
+from repro.api import SvdState
 from repro.optim.compression import (
     CompressionState,
     compression_init,
@@ -70,7 +70,7 @@ def main():
         return w2[None], comp2._replace(error=comp2.error[None])
 
     comp_specs = CompressionState(v_basis=P(), error=P("data"),
-                                  tracker=TruncatedSvd(P(), P(), P()))
+                                  tracker=SvdState(P(), P(), P()))
     comp_fn = jax.jit(shard_map(
         comp_step, mesh=mesh,
         in_specs=(P(), comp_specs._replace(error=P("data")), P("data"), P("data")),

@@ -1,13 +1,14 @@
 """Streaming SVD maintenance — the paper's motivating big-data scenario.
 
 A rank-r sketch of a user x item interaction matrix is maintained under a
-stream of rank-1 observations (each event adds w * e_u v_item^T). Every event
-triggers ``svd_update_truncated`` (Brand augmentation + the paper's
-diagonal-plus-rank-1 core); we compare against periodically recomputing a
-fresh SVD — dominant singular values track to ~1e-8 relative (truncation
-inherently discards rank-(r+1) mass, so exact equality is impossible for any
-streaming method) while the per-event cost is O((m+n) r + r^2 p) instead of
-O(m n min(m,n)).
+stream of rank-1 observations (each event adds w * e_u v_item^T). Every
+event is one ``api.update`` on a truncated ``SvdState`` (Brand augmentation
++ the paper's diagonal-plus-rank-1 core — geometry picks the truncated
+route; no method name threading). We compare against periodically
+recomputing a fresh SVD — dominant singular values track to ~1e-8 relative
+(truncation inherently discards rank-(r+1) mass, so exact equality is
+impossible for any streaming method) while the per-event cost is
+O((m+n) r + r^2 p) instead of O(m n min(m,n)).
 
 Run:  PYTHONPATH=src python examples/streaming_svd.py
 """
@@ -21,7 +22,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import TruncatedSvd, svd_update_truncated
+from repro import api
 
 M_USERS, N_ITEMS, RANK, EVENTS = 600, 400, 12, 200
 
@@ -34,27 +35,27 @@ def main():
     v_true = rng.normal(size=(N_ITEMS, 4))
 
     dense = np.zeros((M_USERS, N_ITEMS))
-    t = TruncatedSvd(
-        u=jnp.asarray(np.linalg.qr(rng.normal(size=(M_USERS, RANK)))[0]),
-        s=jnp.zeros((RANK,)),
-        v=jnp.asarray(np.linalg.qr(rng.normal(size=(N_ITEMS, RANK)))[0]),
+    t = api.SvdState.from_factors(
+        np.linalg.qr(rng.normal(size=(M_USERS, RANK)))[0],
+        np.zeros((RANK,)),
+        np.linalg.qr(rng.normal(size=(N_ITEMS, RANK)))[0],
     )
 
-    update = jax.jit(svd_update_truncated)
+    policy = api.UpdatePolicy()            # auto: the (r+1)-sized core runs direct
     t0 = time.perf_counter()
     for step in range(EVENTS):
         # one "interaction batch": a user factor bumps an item direction
         a = u_true @ rng.normal(size=4) + 0.1 * rng.normal(size=M_USERS)
         b = v_true @ rng.normal(size=4) + 0.1 * rng.normal(size=N_ITEMS)
         dense += np.outer(a, b)
-        t = update(t, jnp.asarray(a), jnp.asarray(b))
+        t = api.update(t, jnp.asarray(a), jnp.asarray(b), policy)
     dt = time.perf_counter() - t0
 
     sv_stream = np.asarray(t.s)
     sv_true = np.linalg.svd(dense, compute_uv=False)[:RANK]
     rel = np.abs(sv_stream - sv_true) / sv_true[0]
     print(f"{EVENTS} rank-1 events in {dt:.2f}s "
-          f"({dt / EVENTS * 1e3:.2f} ms/event, jit, CPU)")
+          f"({dt / EVENTS * 1e3:.2f} ms/event, plan-cached engine, CPU)")
     print("top-5 singular values (streamed) :", np.round(sv_stream[:5], 6))
     print("top-5 singular values (recompute):", np.round(sv_true[:5], 6))
     print(f"max relative deviation over rank-{RANK}: {rel.max():.2e}")

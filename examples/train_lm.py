@@ -47,12 +47,18 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--spectral-rank", type=int, default=0,
+                    help=">0: streaming-SVD low-rank moment projection")
+    ap.add_argument("--basis-refresh-every", type=int, default=0,
+                    help=">0: agree/re-factorize spectral bases every N steps")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.arch else model_for_scale(args.scale)
     run = RunConfig(
         model=cfg,
-        optimizer=OptimizerConfig(lr=1e-3, warmup_steps=20, total_steps=max(args.steps, 100)),
+        optimizer=OptimizerConfig(lr=1e-3, warmup_steps=20, total_steps=max(args.steps, 100),
+                                  spectral_rank=args.spectral_rank,
+                                  basis_refresh_every=args.basis_refresh_every),
         steps=args.steps,
         log_every=10,
         checkpoint_every=25,

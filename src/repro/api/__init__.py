@@ -1,0 +1,34 @@
+"""``repro.api`` — the system's single public surface (DESIGN.md §8).
+
+One state object, one policy object, two entry points:
+
+    from repro import api
+
+    state  = api.SvdState.from_dense(a_mat)            # or .from_factors(u, s, v)
+    policy = api.UpdatePolicy(method="fmm", fmm_p=20)
+    state  = api.update(state, a, b, policy)           # SVD of A + a b^T
+
+    trackers = api.update_many(trackers, A_vecs, B_vecs, policy)   # grouped/batched
+
+Everything underneath — ``core.svd_update`` (Algorithm 6.1),
+``core.engine`` (plan-cached batched executables), the Pallas kernels and
+the ``repro.dist`` shard_map routes — is implementation; the old
+module-level call shapes (``svd_update``, ``svd_update_truncated``,
+``svd_update_batch``, ``svd_update_truncated_batch``) remain as deprecated
+shims that forward here.
+"""
+
+from repro.api.policy import METHODS, UpdatePolicy
+from repro.api.state import SvdState, as_state
+from repro.api.update import engine_for, update, update_many, warmup
+
+__all__ = [
+    "METHODS",
+    "SvdState",
+    "UpdatePolicy",
+    "as_state",
+    "engine_for",
+    "update",
+    "update_many",
+    "warmup",
+]

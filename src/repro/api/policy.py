@@ -1,0 +1,111 @@
+"""``UpdatePolicy`` — every tuning knob of a rank-1 SVD update, in one frozen
+hashable object (DESIGN.md §8).
+
+Before this layer, callers hand-threaded ``method=``, ``fmm_p=``, ``mesh=``,
+``batch_axis=`` and truncation decisions through optim, serve, dist and
+train.  A policy captures all of them once; ``repro.api.update`` dispatches
+from *state geometry + policy*, and the policy's numerics fields fold into
+the engine plan-cache key (``core.engine.default_engine``), so policy-equal
+calls share one compiled plan — equal policies can never recompile.
+
+Hashability is load-bearing: policies are dict keys for engine lookup and
+legal ``static_argnums`` for jitted consumers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.core.eigh_update import _FMM_MIN_N  # auto-resolution matches core's floor
+
+__all__ = ["UpdatePolicy", "METHODS", "policy_from_legacy"]
+
+# "pallas" is the public name for the Pallas Cauchy-kernel route (engine name
+# "kernel" is kept as an alias).  "fast" (Gerasoulis FAST, core.fast) is part
+# of the enum for completeness but is a host-side numpy benchmark baseline —
+# it cannot run inside the jitted engine and dispatch rejects it with a
+# pointer to benchmarks/framework_bench.py.
+METHODS = ("auto", "direct", "fmm", "fast", "pallas", "kernel")
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdatePolicy:
+    """Declarative description of HOW a rank-1 update should run.
+
+    Numerics:
+      method       auto | direct | fmm | pallas (| kernel alias | fast: bench only)
+      fmm_p        Chebyshev interpolation order of the FMM route
+      sign_fix     reconcile left/right singular-vector signs (paper gap)
+      deflate_rtol deflation tolerance override (None = core default)
+      precision    jax matmul precision for the update ("highest", ...; None = default)
+
+    Placement:
+      mesh         jax.sharding.Mesh to spread a batched update over (None = local)
+      batch_axis   mesh axis name carrying the batch
+
+    Truncation rule:
+      truncate_to  keep only the top-r triplets of every result (None = keep all)
+    """
+
+    method: str = "auto"
+    fmm_p: int = 20
+    sign_fix: bool = True
+    deflate_rtol: float | None = None
+    precision: str | None = None
+    mesh: Any = None
+    batch_axis: str = "data"
+    truncate_to: int | None = None
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(f"unknown method {self.method!r}; one of {METHODS}")
+        if self.truncate_to is not None and self.truncate_to < 1:
+            raise ValueError(f"truncate_to must be >= 1; got {self.truncate_to}")
+
+    def replace(self, **kw) -> "UpdatePolicy":
+        return dataclasses.replace(self, **kw)
+
+    # -- engine folding -----------------------------------------------------
+
+    def resolve_method(self, problem_n: int) -> str:
+        """Concrete engine method for a problem of secular size ``problem_n``
+        (``n`` for full updates, ``rank + 1`` for truncated ones)."""
+        if self.method == "fast":
+            raise NotImplementedError(
+                "method='fast' (Gerasoulis FAST) is the host-side numpy "
+                "benchmark baseline — see benchmarks/framework_bench.py; it "
+                "is not a jittable engine route. Use auto/direct/fmm/pallas."
+            )
+        if self.method == "pallas":
+            return "kernel"
+        if self.method == "auto":
+            # FMM pays off only above the tree floor; tiny problems (incl.
+            # every truncated (r+1)-sized core) run the stable direct route.
+            return "fmm" if problem_n >= _FMM_MIN_N else "direct"
+        return self.method
+
+    def engine_key(self, problem_n: int) -> tuple:
+        """The (method, fmm_p, sign_fix, deflate_rtol, precision) tuple that
+        keys ``core.engine.default_engine`` — the policy's plan-cache fold."""
+        return (
+            self.resolve_method(problem_n),
+            self.fmm_p,
+            self.sign_fix,
+            self.deflate_rtol,
+            self.precision,
+        )
+
+
+def policy_from_legacy(
+    policy: UpdatePolicy | None,
+    method: str = "direct",
+    mesh: Any = None,
+    batch_axis: str = "data",
+) -> UpdatePolicy:
+    """Back-compat fold: consumers that still accept the pre-api ``method=``
+    / ``mesh=`` / ``batch_axis=`` kwargs turn them into a policy here — one
+    definition of the legacy-to-policy mapping for every layer."""
+    if policy is not None:
+        return policy
+    return UpdatePolicy(method=method, mesh=mesh, batch_axis=batch_axis)

@@ -1,0 +1,193 @@
+"""``SvdState`` — the one SVD container every update path speaks (DESIGN.md §8).
+
+The paper's operation is "given an SVD, absorb a rank-1 perturbation". The
+codebase previously carried that state in two shapes — ``SvdUpdateResult``
+(full: square bases + eigen diagnostics) and ``TruncatedSvd`` (rank-r
+factors) — and every consumer picked a call path by container type.
+``SvdState`` unifies them:
+
+* ``u: (..., m, k)``, ``s: (..., k)``, ``v: (..., n, k)`` — ``k == m`` (with
+  square ``v``) is the *full* paper state whose reconstruction uses
+  ``v[:, :m]``; ``k < min(m, n)`` is the truncated streaming state.  A
+  leading batch axis (``u.ndim == 3``) marks a *stacked* state of B
+  independent problems — the geometry the batch-first engine dispatches on.
+* ``d_left`` / ``d_right`` — the optional eigen-update diagnostics a full
+  Algorithm-6.1 update produces (``None`` on truncated / constructed states;
+  ``None`` leaves vanish from the pytree, so a diagnostics-free ``SvdState``
+  has exactly the three array leaves ``TruncatedSvd`` had).
+* ``mesh`` — optional static placement hint (``jax.sharding.Mesh``): where a
+  batched update of this state should spread its batch axis when the policy
+  itself does not name a mesh.  Metadata, not a leaf.
+
+It is a frozen, registered-pytree dataclass: it jits, vmaps, shard_maps and
+stacks (``jax.tree.map``) like the NamedTuples it replaces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SvdState", "as_state"]
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["u", "s", "v", "d_left", "d_right"],
+    meta_fields=["mesh"],
+)
+@dataclasses.dataclass(frozen=True)
+class SvdState:
+    """Immutable SVD state: ``A ≈ u @ diag(s) @ v[..., :k].T`` (see module doc)."""
+
+    u: jax.Array                    # (..., m, k) left singular vectors
+    s: jax.Array                    # (..., k)    singular values, descending
+    v: jax.Array                    # (..., n, k) right singular vectors
+    d_left: jax.Array | None = None   # (..., m) eigenvalues of (A)(A)^T (full updates)
+    d_right: jax.Array | None = None  # (..., n) eigenvalues of (A)^T(A) (full updates)
+    mesh: Any = None                  # optional jax.sharding.Mesh placement hint
+
+    # -- geometry -----------------------------------------------------------
+
+    @property
+    def m(self) -> int:
+        return self.u.shape[-2]
+
+    @property
+    def n(self) -> int:
+        return self.v.shape[-2]
+
+    @property
+    def rank(self) -> int:
+        return self.s.shape[-1]
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.m, self.n)
+
+    @property
+    def dtype(self):
+        return self.u.dtype
+
+    @property
+    def is_full(self) -> bool:
+        """Paper-shaped full state: square bases, ``s`` of length ``m``."""
+        return (
+            self.u.shape[-1] == self.u.shape[-2]
+            and self.v.shape[-1] == self.v.shape[-2]
+            and self.s.shape[-1] == self.u.shape[-2]
+        )
+
+    @property
+    def is_batched(self) -> bool:
+        """True when the leaves carry a leading batch axis of B problems."""
+        return self.u.ndim == 3
+
+    @property
+    def batch(self) -> int | None:
+        return self.u.shape[0] if self.is_batched else None
+
+    @property
+    def geometry(self) -> tuple:
+        """Batching-group key: states sharing it stack into one engine call."""
+        return (self.m, self.n, self.rank, jnp.result_type(self.u), self.is_full)
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def from_dense(cls, x, rank: int | None = None, *, mesh: Any = None) -> "SvdState":
+        """SVD of a dense matrix.
+
+        ``rank=None`` builds the full paper state (``u (m, m)``, ``s (m,)``,
+        ``v (n, n)``; requires ``m <= n``); an integer builds the rank-r
+        truncated streaming state.
+        """
+        x = jnp.asarray(x)
+        if x.ndim != 2:
+            raise ValueError(f"from_dense expects a 2-D matrix; got {x.shape}")
+        m, n = x.shape
+        if rank is None:
+            if m > n:
+                raise ValueError(
+                    "full SvdState requires m <= n; transpose the problem "
+                    "(the paper's convention) or pass rank= for a truncated state"
+                )
+            u, s, vt = jnp.linalg.svd(x, full_matrices=True)
+            return cls(u=u, s=s, v=vt.T, mesh=mesh)
+        if rank > min(m, n):
+            raise ValueError(f"rank {rank} exceeds min(m, n) = {min(m, n)}")
+        u, s, vt = jnp.linalg.svd(x, full_matrices=False)
+        return cls(u=u[:, :rank], s=s[:rank], v=vt[:rank].T, mesh=mesh)
+
+    @classmethod
+    def from_factors(cls, u, s, v, *, mesh: Any = None) -> "SvdState":
+        """Wrap existing factors (full or truncated, stacked or single)."""
+        u, s, v = jnp.asarray(u), jnp.asarray(s), jnp.asarray(v)
+        if u.ndim != v.ndim or u.ndim != s.ndim + 1 or u.ndim not in (2, 3):
+            raise ValueError(
+                f"inconsistent factor ranks: u {u.shape}, s {s.shape}, v {v.shape}"
+            )
+        # u always carries one column per singular value (full states have
+        # len(s) == m == u columns); only v gets the square exemption (full
+        # states: v (n, n) against s (m,))
+        if u.shape[-1] != s.shape[-1]:
+            raise ValueError(
+                f"u has {u.shape[-1]} columns but s carries {s.shape[-1]} values"
+            )
+        if v.shape[-1] != s.shape[-1] and v.shape[-1] != v.shape[-2]:
+            raise ValueError(
+                f"v has {v.shape[-1]} columns but s carries {s.shape[-1]} values "
+                f"(did you pass vt from np.linalg.svd instead of v = vt.T?)"
+            )
+        return cls(u=u, s=s, v=v, mesh=mesh)
+
+    # -- transforms ---------------------------------------------------------
+
+    def replace(self, **kw) -> "SvdState":
+        return dataclasses.replace(self, **kw)
+
+    def truncate(self, rank: int) -> "SvdState":
+        """Keep the top-``rank`` triplets (drops eigen diagnostics)."""
+        if rank > self.rank:
+            raise ValueError(f"cannot truncate rank {self.rank} state to {rank}")
+        return SvdState(
+            u=self.u[..., :, :rank],
+            s=self.s[..., :rank],
+            v=self.v[..., :, :rank],
+            mesh=self.mesh,
+        )
+
+    def materialize(self) -> jax.Array:
+        """Dense ``A = u @ diag(s) @ v_k^T`` (full states use ``v[:, :m]``)."""
+        v = self.v[..., :, : self.rank]
+        return jnp.einsum("...mk,...k,...nk->...mn", self.u, self.s, v)
+
+
+def like_container(tmpl, u, s, v):
+    """Rebuild ``(u, s, v)`` factors in the container type of ``tmpl``
+    (``SvdState`` or legacy ``TruncatedSvd``) — pytree structure (shard_map
+    spec trees, checkpoints) is caller-owned, so layers that transform a
+    caller-supplied container must hand the same type back."""
+    return type(tmpl)(u, s, v)
+
+
+def as_state(obj) -> SvdState:
+    """Coerce any SVD container (``SvdState``, ``TruncatedSvd``,
+    ``SvdUpdateResult``, or a plain ``(u, s, v)`` triple) to ``SvdState``."""
+    if isinstance(obj, SvdState):
+        return obj
+    u = getattr(obj, "u", None)
+    if u is not None:
+        return SvdState(
+            u=obj.u,
+            s=obj.s,
+            v=obj.v,
+            d_left=getattr(obj, "d_left", None),
+            d_right=getattr(obj, "d_right", None),
+        )
+    u, s, v = obj
+    return SvdState.from_factors(u, s, v)

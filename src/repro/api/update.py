@@ -1,0 +1,168 @@
+"""``repro.api.update`` / ``update_many`` — the single entry point for every
+rank-1 SVD update path (DESIGN.md §8).
+
+Dispatch is a pure function of *state geometry + policy*:
+
+    state.is_full   state.is_batched   policy.mesh     route
+    -------------   ----------------   -----------     ------------------------------
+    yes             no                 (ignored)       engine.update            (single)
+    yes             yes                None            engine.update_batch      (vmap)
+    yes             yes                Mesh            shard_map'd batched update
+    no              no                 (ignored)       engine.update_truncated  (Brand)
+    no              yes                None            engine.update_truncated_batch
+    no              yes                Mesh            shard_map'd truncated batch
+
+All routes resolve to the same plan-cached ``core.engine.SvdEngine``
+executables the old call shapes used (``default_engine`` keyed by the
+policy's numerics fields), so results are bit-identical to the pre-api
+paths and policy-equal calls never recompile.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.policy import UpdatePolicy
+from repro.api.state import SvdState, as_state
+from repro.core.engine import (
+    SvdEngine,
+    default_engine,
+    group_indices,
+    stack_trees,
+    unstack_tree,
+)
+from repro.core.svd_update import TruncatedSvd
+
+__all__ = ["engine_for", "update", "update_many", "warmup"]
+
+_DEFAULT_POLICY = UpdatePolicy()
+
+
+def engine_from_key(policy: UpdatePolicy, problem_n: int) -> SvdEngine:
+    """The ONE place a policy's ``engine_key`` unpacks into ``default_engine``
+    — every layer (api, dist.merge, serve) resolves through here, so the
+    shared-plan-cache invariant ("equal policies never recompile") has a
+    single definition."""
+    method, fmm_p, sign_fix, deflate_rtol, precision = policy.engine_key(problem_n)
+    return default_engine(
+        method,
+        fmm_p=fmm_p,
+        sign_fix=sign_fix,
+        deflate_rtol=deflate_rtol,
+        precision=precision,
+    )
+
+
+def engine_for(policy: UpdatePolicy, state: SvdState) -> SvdEngine:
+    """The shared plan-cached engine a (policy, state-geometry) pair runs on.
+
+    Two equal policies — or a policy and a legacy caller with the same
+    knobs — return the SAME engine instance, hence one plan cache.
+    """
+    return engine_from_key(policy, state.n if state.is_full else state.rank + 1)
+
+
+def _finish(state: SvdState, out: SvdState, policy: UpdatePolicy) -> SvdState:
+    if policy.truncate_to is not None and policy.truncate_to < out.rank:
+        out = out.truncate(policy.truncate_to)
+    return out
+
+
+def update(state, a, b, policy: UpdatePolicy | None = None) -> SvdState:
+    """SVD of ``state + a b^T`` under ``policy`` — full, truncated, single or
+    stacked, local or mesh-sharded, decided by geometry (module doc table).
+
+    ``state``: any SVD container (``SvdState`` preferred; ``TruncatedSvd`` /
+    ``SvdUpdateResult`` / ``(u, s, v)`` are coerced).  ``a``: (..., m),
+    ``b``: (..., n), with the leading batch axis iff the state is stacked.
+    Returns an ``SvdState`` (full states keep eigen diagnostics).
+    """
+    policy = policy if policy is not None else _DEFAULT_POLICY
+    st = as_state(state)
+    eng = engine_for(policy, st)
+    mesh = policy.mesh if policy.mesh is not None else st.mesh
+    if st.is_full:
+        if st.is_batched:
+            res = eng.update_batch(st.u, st.s, st.v, a, b, mesh=mesh,
+                                   batch_axis=policy.batch_axis)
+        else:
+            res = eng.update(st.u, st.s, st.v, a, b)
+        out = SvdState(u=res.u, s=res.s, v=res.v, d_left=res.d_left,
+                       d_right=res.d_right, mesh=st.mesh)
+    else:
+        t = TruncatedSvd(u=st.u, s=st.s, v=st.v)
+        if st.is_batched:
+            t2 = eng.update_truncated_batch(t, a, b, mesh=mesh,
+                                            batch_axis=policy.batch_axis)
+        else:
+            t2 = eng.update_truncated(t, a, b)
+        out = SvdState(u=t2.u, s=t2.s, v=t2.v, mesh=st.mesh)
+    return _finish(st, out, policy)
+
+
+def update_many(
+    states: Sequence,
+    A,
+    B,
+    policy: UpdatePolicy | None = None,
+) -> tuple[SvdState, ...]:
+    """Many independent rank-1 updates in as few engine calls as possible.
+
+    ``states[i]`` absorbs ``A[i] B[i]^T``.  States sharing a geometry
+    ``(m, n, rank, dtype, fullness)`` are stacked along a batch axis and
+    dispatched as ONE batched (possibly mesh-sharded) call through
+    ``update``; results come back unstacked, in input order.  This is the
+    generalized form of the grouped-update loops optim/serve carried by
+    hand.
+    """
+    policy = policy if policy is not None else _DEFAULT_POLICY
+    sts = [as_state(s) for s in states]
+    if len(sts) != len(A) or len(sts) != len(B):
+        raise ValueError(
+            f"states/A/B must pair up: {len(sts)} states, {len(A)} a-vectors, "
+            f"{len(B)} b-vectors"
+        )
+    for i, st in enumerate(sts):
+        if st.is_batched:
+            raise ValueError(
+                f"update_many takes unbatched states; state {i} is stacked "
+                f"(u {st.u.shape}) — call update() on it directly"
+            )
+
+    out: list[SvdState | None] = [None] * len(sts)
+    for idxs in group_indices([st.geometry for st in sts]).values():
+        if len(idxs) == 1:
+            i = idxs[0]
+            out[i] = update(sts[i], A[i], B[i], policy)
+            continue
+        # drop diagnostics before stacking: members may differ in whether
+        # they carry d_left/d_right, and batched dispatch recomputes them
+        stacked = stack_trees(
+            [SvdState(u=sts[i].u, s=sts[i].s, v=sts[i].v) for i in idxs]
+        )
+        a_stack = jnp.stack([jnp.asarray(A[i]) for i in idxs])
+        b_stack = jnp.stack([jnp.asarray(B[i]) for i in idxs])
+        batched = update(stacked, a_stack, b_stack, policy)
+        for j, i in enumerate(idxs):
+            out[i] = unstack_tree(batched, j).replace(mesh=sts[i].mesh)
+    return tuple(out)
+
+
+def warmup(
+    policy: UpdatePolicy,
+    *,
+    m: int,
+    n: int,
+    batch: int | None = None,
+    rank: int | None = None,
+    dtype=jnp.float32,
+):
+    """AOT-compile the executable a (policy, geometry) pair will use, before
+    traffic arrives (serving cold-start control).  ``rank=None`` warms the
+    full route, else the truncated one; ``batch=None`` warms single-instance.
+    """
+    eng = engine_from_key(policy, n if rank is None else rank + 1)
+    return eng.warmup(batch=batch, m=m, n=n, rank=rank, dtype=dtype)

@@ -136,6 +136,7 @@ class OptimizerConfig:
     # paper-technique features
     spectral_rank: int = 0       # >0: streaming-SVD low-rank moment projection
     compress_rank: int = 0       # >0: low-rank DP gradient compression
+    basis_refresh_every: int = 0 # >0: agree/re-factorize spectral bases every N steps
 
 
 @dataclass(frozen=True)

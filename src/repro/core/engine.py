@@ -55,6 +55,7 @@ from repro.core.svd_update import (
     TruncatedSvd,
     _svd_update_impl,
     _svd_update_truncated_impl,
+    _warn_deprecated,
 )
 
 __all__ = [
@@ -136,6 +137,8 @@ class SvdEngine:
         method: str = "direct",
         fmm_p: int = 20,
         sign_fix: bool = True,
+        deflate_rtol: float | None = None,
+        precision: str | None = None,
         sharding: jax.sharding.Sharding | None = None,
     ):
         if method not in ("direct", "fmm", "kernel"):
@@ -143,6 +146,8 @@ class SvdEngine:
         self.method = method
         self.fmm_p = fmm_p
         self.sign_fix = sign_fix
+        self.deflate_rtol = deflate_rtol
+        self.precision = precision
         self.sharding = sharding
         self._cache: dict[tuple, _CacheEntry] = {}
         self._hits = 0
@@ -179,14 +184,39 @@ class SvdEngine:
 
     # -- builders -----------------------------------------------------------
 
-    def _build_single(self) -> Callable:
+    def _with_precision(self, fn: Callable) -> Callable:
+        """Wrap an impl so tracing runs under the configured matmul precision."""
+        if self.precision is None:
+            return fn
+        prec = self.precision
+
+        def wrapped(*args):
+            with jax.default_matmul_precision(prec):
+                return fn(*args)
+
+        return wrapped
+
+    def _full_impl(self) -> Callable:
         impl = partial(
             _svd_update_impl,
             method=self.method,
             fmm_p=self.fmm_p,
             sign_fix=self.sign_fix,
+            deflate_rtol=self.deflate_rtol,
         )
-        return jax.jit(lambda u, s, v, a, b: impl(u, s, v, a, b))
+        return self._with_precision(lambda u, s, v, a, b: impl(u, s, v, a, b))
+
+    def _trunc_impl(self) -> Callable:
+        impl = partial(
+            _svd_update_truncated_impl,
+            method=self.method,
+            fmm_p=self.fmm_p,
+            deflate_rtol=self.deflate_rtol,
+        )
+        return self._with_precision(lambda t, a, b: impl(t, a, b))
+
+    def _build_single(self) -> Callable:
+        return jax.jit(self._full_impl())
 
     def _batch_jit_kwargs(self) -> dict:
         # Batched builders bake the batch sharding into the jit, so AOT
@@ -194,26 +224,13 @@ class SvdEngine:
         return {} if self.sharding is None else {"in_shardings": self.sharding}
 
     def _build_batch(self) -> Callable:
-        impl = partial(
-            _svd_update_impl,
-            method=self.method,
-            fmm_p=self.fmm_p,
-            sign_fix=self.sign_fix,
-        )
-        return jax.jit(
-            jax.vmap(lambda u, s, v, a, b: impl(u, s, v, a, b)),
-            **self._batch_jit_kwargs(),
-        )
+        return jax.jit(jax.vmap(self._full_impl()), **self._batch_jit_kwargs())
 
     def _build_truncated(self) -> Callable:
-        impl = partial(_svd_update_truncated_impl, method=self.method)
-        return jax.jit(lambda t, a, b: impl(t, a, b))
+        return jax.jit(self._trunc_impl())
 
     def _build_truncated_batch(self) -> Callable:
-        impl = partial(_svd_update_truncated_impl, method=self.method)
-        return jax.jit(
-            jax.vmap(lambda t, a, b: impl(t, a, b)), **self._batch_jit_kwargs()
-        )
+        return jax.jit(jax.vmap(self._trunc_impl()), **self._batch_jit_kwargs())
 
     # -- mesh-aware (shard_map) builders ------------------------------------
     # Per-shard: the same vmapped impl, batch split over one mesh axis. The
@@ -223,13 +240,7 @@ class SvdEngine:
     # the kernel path.
 
     def _build_batch_shard_map(self, mesh, axis: str) -> Callable:
-        impl = partial(
-            _svd_update_impl,
-            method=self.method,
-            fmm_p=self.fmm_p,
-            sign_fix=self.sign_fix,
-        )
-        vf = jax.vmap(lambda u, s, v, a, b: impl(u, s, v, a, b))
+        vf = jax.vmap(self._full_impl())
         spec = PartitionSpec(axis)
         return jax.jit(
             shard_map(vf, mesh=mesh, in_specs=(spec,) * 5, out_specs=spec,
@@ -237,8 +248,7 @@ class SvdEngine:
         )
 
     def _build_truncated_batch_shard_map(self, mesh, axis: str) -> Callable:
-        impl = partial(_svd_update_truncated_impl, method=self.method)
-        vf = jax.vmap(lambda t, a, b: impl(t, a, b))
+        vf = jax.vmap(self._trunc_impl())
         spec = PartitionSpec(axis)
         return jax.jit(
             shard_map(vf, mesh=mesh, in_specs=(spec,) * 3, out_specs=spec,
@@ -414,14 +424,25 @@ _default_lock = threading.Lock()
 
 
 def default_engine(
-    method: str = "direct", *, fmm_p: int = 20, sign_fix: bool = True
+    method: str = "direct",
+    *,
+    fmm_p: int = 20,
+    sign_fix: bool = True,
+    deflate_rtol: float | None = None,
+    precision: str | None = None,
 ) -> SvdEngine:
-    """Process-wide shared engine for a configuration (shared plan cache)."""
-    key = (method, fmm_p, sign_fix)
+    """Process-wide shared engine for a configuration (shared plan cache).
+
+    The key covers every numerics knob an ``repro.api.UpdatePolicy`` carries,
+    so policy-equal callers (old facades, the api layer, consumers) land on
+    the SAME engine instance and plan cache — policy folds into the cache key.
+    """
+    key = (method, fmm_p, sign_fix, deflate_rtol, precision)
     with _default_lock:
         eng = _default_engines.get(key)
         if eng is None:
-            eng = SvdEngine(method=method, fmm_p=fmm_p, sign_fix=sign_fix)
+            eng = SvdEngine(method=method, fmm_p=fmm_p, sign_fix=sign_fix,
+                            deflate_rtol=deflate_rtol, precision=precision)
             _default_engines[key] = eng
         return eng
 
@@ -439,9 +460,12 @@ def svd_update_batch(
     mesh=None,
     batch_axis: str = "data",
 ) -> SvdUpdateResult:
-    """Functional facade over ``default_engine(...).update_batch`` — B stacked
-    Algorithm-6.1 updates in one vmapped, plan-cached call.  ``mesh`` splits
-    the batch over ``batch_axis`` via shard_map (see ``SvdEngine``)."""
+    """DEPRECATED shim — use ``repro.api.update`` on a stacked ``SvdState``
+    (or ``repro.api.update_many``) with ``UpdatePolicy(mesh=..., ...)``.
+
+    B stacked Algorithm-6.1 updates in one vmapped, plan-cached call."""
+    _warn_deprecated("repro.core.engine.svd_update_batch",
+                     "repro.api.update on a batched SvdState")
     eng = default_engine(method, fmm_p=fmm_p, sign_fix=sign_fix)
     return eng.update_batch(u, s, v, a, b, mesh=mesh, batch_axis=batch_axis)
 
@@ -455,6 +479,9 @@ def svd_update_truncated_batch(
     mesh=None,
     batch_axis: str = "data",
 ) -> TruncatedSvd:
-    """Functional facade over ``default_engine(...).update_truncated_batch``."""
+    """DEPRECATED shim — use ``repro.api.update`` on a batched truncated
+    ``SvdState`` (or ``repro.api.update_many``)."""
+    _warn_deprecated("repro.core.engine.svd_update_truncated_batch",
+                     "repro.api.update on a batched truncated SvdState")
     eng = default_engine(method)
     return eng.update_truncated_batch(tsvd, a, b, mesh=mesh, batch_axis=batch_axis)

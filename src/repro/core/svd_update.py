@@ -19,6 +19,7 @@ independently and never reconciles signs).
 
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import NamedTuple
 
@@ -28,6 +29,21 @@ import jax.numpy as jnp
 from repro.core.eigh_update import apply_update, eigenvalues, make_plan, materialize_q
 
 __all__ = ["SvdUpdateResult", "TruncatedSvd", "svd_update", "svd_update_truncated"]
+
+
+def _warn_deprecated(old: str, new: str) -> None:
+    """Deprecation for the pre-``repro.api`` call shapes.
+
+    ``stacklevel=3`` attributes the warning to the *caller* of the shim (the
+    shims are thin wrappers), so the CI filter that errors on
+    DeprecationWarning from ``repro``/``examples`` modules catches internal
+    regressions while external/test callers only see a warning.
+    """
+    warnings.warn(
+        f"{old} is deprecated; use {new} instead (see repro.api)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 class SvdUpdateResult(NamedTuple):
@@ -56,7 +72,8 @@ def _rank2_symmetric_split(beta):
     return rho_pos, rho_neg, q_pos, q_neg
 
 
-def _double_update(q0, d0, w1, w2, rho_pos, rho_neg, *, method, fmm_p, want_g):
+def _double_update(q0, d0, w1, w2, rho_pos, rho_neg, *, method, fmm_p, want_g,
+                   deflate_rtol=None):
     """Two chained symmetric rank-1 eigen-updates of Q0 diag(d0) Q0^T.
 
     Returns (d_final ascending, Q_final, G) with Q_final = Q0 @ G and G
@@ -64,12 +81,14 @@ def _double_update(q0, d0, w1, w2, rho_pos, rho_neg, *, method, fmm_p, want_g):
     """
     build_fmm = method == "fmm"
     z1 = q0.T @ w1
-    plan1 = make_plan(d0, z1, rho_pos, rho_positive=True, build_fmm=build_fmm, fmm_p=fmm_p)
+    plan1 = make_plan(d0, z1, rho_pos, rho_positive=True, build_fmm=build_fmm, fmm_p=fmm_p,
+                      deflate_rtol=deflate_rtol)
     q1 = apply_update(plan1, q0, method=method)
     d1 = eigenvalues(plan1)
 
     z2 = q1.T @ w2
-    plan2 = make_plan(d1, z2, rho_neg, rho_positive=False, build_fmm=build_fmm, fmm_p=fmm_p)
+    plan2 = make_plan(d1, z2, rho_neg, rho_positive=False, build_fmm=build_fmm, fmm_p=fmm_p,
+                      deflate_rtol=deflate_rtol)
     q2 = apply_update(plan2, q1, method=method)
     d2 = eigenvalues(plan2)
 
@@ -90,6 +109,7 @@ def _svd_update_impl(
     method: str = "direct",
     fmm_p: int = 20,
     sign_fix: bool = True,
+    deflate_rtol: float | None = None,
 ) -> SvdUpdateResult:
     """Unjitted Algorithm 6.1 body — pure, static-shape, and vmap-clean.
 
@@ -127,10 +147,12 @@ def _svd_update_impl(
 
     # STEPS 4-7 — chained eigen-updates
     d_left, u_n, g_u = _double_update(
-        u, d_u, a1, b1, rho1, rho2, method=method, fmm_p=fmm_p, want_g=sign_fix
+        u, d_u, a1, b1, rho1, rho2, method=method, fmm_p=fmm_p, want_g=sign_fix,
+        deflate_rtol=deflate_rtol,
     )
     d_right, v_n, g_v = _double_update(
-        v, d_v, a2, b2, rho3, rho4, method=method, fmm_p=fmm_p, want_g=sign_fix
+        v, d_v, a2, b2, rho3, rho4, method=method, fmm_p=fmm_p, want_g=sign_fix,
+        deflate_rtol=deflate_rtol,
     )
 
     # STEP 8 — singular values, descending order
@@ -158,6 +180,21 @@ def _svd_update_impl(
 
 
 @partial(jax.jit, static_argnames=("method", "fmm_p", "sign_fix"))
+def _svd_update_jit(
+    u: jax.Array,
+    s: jax.Array,
+    v: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    method: str = "direct",
+    fmm_p: int = 20,
+    sign_fix: bool = True,
+) -> SvdUpdateResult:
+    """Jitted single-instance Algorithm 6.1 (implementation layer, no warning)."""
+    return _svd_update_impl(u, s, v, a, b, method=method, fmm_p=fmm_p, sign_fix=sign_fix)
+
+
 def svd_update(
     u: jax.Array,
     s: jax.Array,
@@ -169,15 +206,14 @@ def svd_update(
     fmm_p: int = 20,
     sign_fix: bool = True,
 ) -> SvdUpdateResult:
-    """SVD of ``u @ diag(s) @ v[:, :m].T + a b^T``  (Algorithm 6.1).
+    """DEPRECATED shim — use ``repro.api.update`` with an ``UpdatePolicy``.
 
+    SVD of ``u @ diag(s) @ v[:, :m].T + a b^T``  (Algorithm 6.1).
     ``u``: (m, m), ``s``: (m,) (any order, >= 0), ``v``: (n, n), m <= n.
     Returned s_n is descending; reconstruction uses v[:, :m].
-
-    Single-instance entry point. For many updates of the same geometry use
-    ``core.engine.svd_update_batch`` (one vmapped call, plan paid once).
     """
-    return _svd_update_impl(u, s, v, a, b, method=method, fmm_p=fmm_p, sign_fix=sign_fix)
+    _warn_deprecated("repro.core.svd_update", "repro.api.update(SvdState, a, b, policy)")
+    return _svd_update_jit(u, s, v, a, b, method=method, fmm_p=fmm_p, sign_fix=sign_fix)
 
 
 # ---------------------------------------------------------------------------
@@ -192,10 +228,19 @@ class TruncatedSvd(NamedTuple):
 
 
 def _svd_update_truncated_impl(
-    tsvd: TruncatedSvd, a: jax.Array, b: jax.Array, *, method: str = "direct"
+    tsvd: TruncatedSvd,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    method: str = "direct",
+    fmm_p: int = 20,
+    deflate_rtol: float | None = None,
 ) -> TruncatedSvd:
-    """Unjitted truncated-update body (vmap-clean, see ``core.engine``)."""
-    u, s, v = tsvd
+    """Unjitted truncated-update body (vmap-clean, see ``core.engine``).
+
+    Accepts any (u, s, v)-carrying container (``TruncatedSvd`` or an
+    ``repro.api.SvdState``); returns ``TruncatedSvd``."""
+    u, s, v = tsvd.u, tsvd.s, tsvd.v
     m, r = u.shape
     n = v.shape[0]
     dt = u.dtype
@@ -219,7 +264,8 @@ def _svd_update_truncated_impl(
     ak = jnp.concatenate([p_vec, ra[None]])
     bk = jnp.concatenate([q_vec, rb[None]])
     eye = jnp.eye(r + 1, dtype=dt)
-    res = _svd_update_impl(eye, s_aug, eye, ak, bk, method=method, sign_fix=True)
+    res = _svd_update_impl(eye, s_aug, eye, ak, bk, method=method, fmm_p=fmm_p,
+                           sign_fix=True, deflate_rtol=deflate_rtol)
 
     u_aug = jnp.concatenate([u, p_unit[:, None]], axis=1)   # (m, r+1)
     v_aug = jnp.concatenate([v, q_unit[:, None]], axis=1)   # (n, r+1)
@@ -229,16 +275,24 @@ def _svd_update_truncated_impl(
 
 
 @partial(jax.jit, static_argnames=("method",))
+def _svd_update_truncated_jit(
+    tsvd: TruncatedSvd, a: jax.Array, b: jax.Array, *, method: str = "direct"
+) -> TruncatedSvd:
+    """Jitted single-instance truncated update (implementation layer)."""
+    return _svd_update_truncated_impl(tsvd, a, b, method=method)
+
+
 def svd_update_truncated(
     tsvd: TruncatedSvd, a: jax.Array, b: jax.Array, *, method: str = "direct"
 ) -> TruncatedSvd:
-    """Rank-r streaming SVD update:  best rank-r SVD of U S V^T + a b^T.
+    """DEPRECATED shim — use ``repro.api.update`` on a truncated ``SvdState``.
 
+    Rank-r streaming SVD update:  best rank-r SVD of U S V^T + a b^T.
     Brand-style subspace augmentation reduces the update to an (r+1)x(r+1)
     diagonal-plus-rank-1 problem solved *exactly* by the paper's machinery
     (svd_update with identity bases); the result is truncated back to rank r.
-    This is the primitive behind the spectral optimizer / gradient-compression
-    features (DESIGN.md §3). Batched counterpart:
-    ``core.engine.svd_update_truncated_batch``.
     """
-    return _svd_update_truncated_impl(tsvd, a, b, method=method)
+    _warn_deprecated(
+        "repro.core.svd_update_truncated", "repro.api.update(SvdState, a, b, policy)"
+    )
+    return _svd_update_truncated_jit(tsvd, a, b, method=method)

@@ -17,7 +17,7 @@ so the whole merge reduces to the SVD of the small ``(r_a + r_b, n)`` core
 
     K <- K + (s_i e_{r_a + i}) v_i^T        (i = 1..r_b),
 
-each step an ``SvdEngine.update_truncated`` call (Brand augmentation +
+each step a truncated-update engine call (Brand augmentation +
 Algorithm 6.1; fast truncated updating in the spirit of Deng et al.,
 arXiv:2401.09703).  Every intermediate state ``K_j`` keeps rank r: since
 ``K_j``'s rows are a subset of ``K``'s, ``rank(K_j) <= rank(K)``, so for a
@@ -27,10 +27,17 @@ for general matrices it is the streaming near-optimal approximation with the
 usual hierarchical-merge error (Iwen & Ong Thm 3).
 
 ``merge_tree`` reduces a shard list pairwise in log depth, batching all the
-pairs of a level through ONE ``update_truncated_batch`` engine call per
-rank-1 step.  ``distributed_merge`` is the shard_map form: ``all_gather`` of
-the small factors (``r*(m+n+1)`` floats per worker — the only wire traffic),
-then the same tree merge runs replicated on every worker.
+pairs of a level through ONE batched engine call per rank-1 step.  When the
+shards share one geometry, a non-power-of-two shard count is padded with
+zero shards (``s = 0``; the zero rows fall at the bottom and are sliced off
+the final left factor), so every level pairs equal geometries and runs the
+batched path — no sequential ``merge_pair`` fallback.  ``distributed_merge``
+is the shard_map form: ``all_gather`` of the small factors
+(``r*(m+n+1)`` floats per worker — the only wire traffic), then the same
+tree merge runs replicated on every worker.
+
+Shards may be ``repro.api.SvdState`` or legacy ``TruncatedSvd`` containers;
+the result comes back in the container type of the first shard.
 """
 
 from __future__ import annotations
@@ -38,11 +45,29 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import SvdEngine, default_engine, stack_trees, unstack_tree
+from repro.api import UpdatePolicy
+from repro.api.policy import policy_from_legacy
+from repro.api.state import like_container as _like
+from repro.api.update import engine_from_key
+from repro.core.engine import SvdEngine, stack_trees, unstack_tree
 from repro.core.svd_update import TruncatedSvd
 from repro.dist.collectives import all_gather_tsvd
 
 __all__ = ["merge_pair", "merge_tree", "distributed_merge"]
+
+
+def _engine_from(
+    engine: SvdEngine | None,
+    policy: UpdatePolicy | None,
+    method: str,
+    rank: int,
+) -> SvdEngine:
+    """Engine for the merge's truncated core updates: explicit ``engine`` >
+    ``policy`` > legacy ``method`` string — all landing on the shared
+    policy-keyed ``default_engine`` caches."""
+    if engine is not None:
+        return engine
+    return engine_from_key(policy_from_legacy(policy, method), rank + 1)
 
 
 def _merge_cores_batched(
@@ -73,23 +98,23 @@ def _merge_cores_batched(
     return core
 
 
-def _combine_bases(a: TruncatedSvd, b: TruncatedSvd, core: TruncatedSvd,
-                   rank: int) -> TruncatedSvd:
+def _combine_bases(a, b, core: TruncatedSvd, rank: int):
     """Lift the core SVD back through the block-diagonal left bases."""
     r_a = a.s.shape[0]
     uk = core.u[:, :rank]
     u = jnp.concatenate([a.u @ uk[:r_a], b.u @ uk[r_a:]], axis=0)
-    return TruncatedSvd(u=u, s=core.s[:rank], v=core.v[:, :rank])
+    return _like(a, u, core.s[:rank], core.v[:, :rank])
 
 
 def merge_pair(
-    a: TruncatedSvd,
-    b: TruncatedSvd,
+    a,
+    b,
     *,
     rank: int | None = None,
     engine: SvdEngine | None = None,
     method: str = "direct",
-) -> TruncatedSvd:
+    policy: UpdatePolicy | None = None,
+):
     """Rank-``rank`` truncated SVD of the row concatenation ``[A; B]``.
 
     ``rank`` defaults to (and may not exceed) ``r_a``, the rank carried by
@@ -102,8 +127,6 @@ def merge_pair(
             f"row-concatenated shards must share the column space: "
             f"n={a.v.shape[0]} vs {b.v.shape[0]}"
         )
-    if engine is None:
-        engine = default_engine(method)
     r_a = a.s.shape[0]
     r = rank if rank is not None else r_a
     if r > r_a:
@@ -111,10 +134,39 @@ def merge_pair(
             f"merge rank {r} exceeds the left shard's rank {r_a}; the core "
             f"state carries rank r_a — order the higher-rank shard first"
         )
-    a_stack = jax.tree.map(lambda x: x[None], a)
-    b_stack = jax.tree.map(lambda x: x[None], b)
+    engine = _engine_from(engine, policy, method, r_a)
+    a_stack = jax.tree.map(lambda x: x[None], TruncatedSvd(a.u, a.s, a.v))
+    b_stack = jax.tree.map(lambda x: x[None], TruncatedSvd(b.u, b.s, b.v))
     core = unstack_tree(_merge_cores_batched(a_stack, b_stack, engine), 0)
     return _combine_bases(a, b, core, r)
+
+
+def _pad_to_pow2(shards: list) -> tuple[list, int]:
+    """Append zero shards (``s = 0``, zero left rows, the last shard's
+    orthonormal ``v``) until the count is a power of two.
+
+    Only possible when all shards share one geometry; a zero shard is the
+    exact SVD of an all-zero row block, so ``[M_1; ...; M_W; 0; ...; 0]``
+    has the same singular values/right basis as ``M`` and the padded rows —
+    appended at the END, so they stay at the bottom through every ordered
+    pairwise level — are sliced off the final left factor by the caller.
+    Returns (padded shard list, number of real rows).
+    """
+    w = len(shards)
+    real_rows = sum(int(t.u.shape[0]) for t in shards)
+    target = 1
+    while target < w:
+        target <<= 1
+    if target == w:
+        return shards, real_rows
+    tmpl = shards[-1]
+    zero = _like(
+        tmpl,
+        jnp.zeros_like(tmpl.u),
+        jnp.zeros_like(tmpl.s),
+        tmpl.v,  # any orthonormal basis keeps the Brand invariant
+    )
+    return shards + [zero] * (target - w), real_rows
 
 
 def merge_tree(
@@ -123,20 +175,22 @@ def merge_tree(
     rank: int | None = None,
     engine: SvdEngine | None = None,
     method: str = "direct",
-) -> TruncatedSvd:
+    policy: UpdatePolicy | None = None,
+):
     """Log-depth pairwise merge of row-partitioned truncated SVDs.
 
     ``shards`` are ordered row blocks.  Each level pairs neighbors
     (preserving row order) and merges all equal-geometry pairs through one
-    batched engine call per rank-1 step; an odd tail shard rides up a level
-    unchanged.  Depth is ``ceil(log2 W)`` — the reduction shape that keeps a
-    1000-worker merge at ~10 sequential rounds.
+    batched engine call per rank-1 step; equal-geometry shard lists of
+    non-power-of-two length are padded with zero shards so EVERY level runs
+    the batched path (the padding's zero rows are sliced off the result).
+    Genuinely mixed geometries fall back to pairwise ``merge_pair`` with an
+    odd tail riding up a level.  Depth is ``ceil(log2 W)`` — the reduction
+    shape that keeps a 1000-worker merge at ~10 sequential rounds.
     """
     shards = list(shards)
     if not shards:
         raise ValueError("merge_tree needs at least one shard")
-    if engine is None:
-        engine = default_engine(method)
     r_min = min(int(t.s.shape[0]) for t in shards)
     if rank is None:
         rank = r_min
@@ -145,6 +199,13 @@ def merge_tree(
             f"merge rank {rank} exceeds the smallest shard rank {r_min}; "
             f"the pairwise core state cannot carry more than the shard rank"
         )
+    engine = _engine_from(engine, policy, method, r_min)
+
+    real_rows = None
+    if len(shards) > 1:
+        geoms = {(t.u.shape, t.s.shape, t.v.shape) for t in shards}
+        if len(geoms) == 1:
+            shards, real_rows = _pad_to_pow2(shards)
 
     while len(shards) > 1:
         pairs = [(shards[i], shards[i + 1]) for i in range(0, len(shards) - 1, 2)]
@@ -152,27 +213,32 @@ def merge_tree(
         geoms = {(p[0].u.shape, p[1].u.shape) for p in pairs}
         merged: list = []
         if len(geoms) == 1:
-            a_stack = stack_trees([p[0] for p in pairs])
-            b_stack = stack_trees([p[1] for p in pairs])
+            a_stack = stack_trees([TruncatedSvd(p[0].u, p[0].s, p[0].v) for p in pairs])
+            b_stack = stack_trees([TruncatedSvd(p[1].u, p[1].s, p[1].v) for p in pairs])
             cores = _merge_cores_batched(a_stack, b_stack, engine)
             merged = [
                 _combine_bases(p[0], p[1], unstack_tree(cores, j), rank)
                 for j, p in enumerate(pairs)
             ]
-        else:  # unequal shard heights (odd tails): merge pairwise
+        else:  # genuinely unequal shard heights: merge pairwise
             merged = [merge_pair(x, y, rank=rank, engine=engine) for x, y in pairs]
         shards = merged + tail
-    return shards[0]
+
+    out = shards[0]
+    if real_rows is not None and out.u.shape[0] != real_rows:
+        out = _like(out, out.u[:real_rows], out.s, out.v)
+    return out
 
 
 def distributed_merge(
-    local: TruncatedSvd,
+    local,
     axis_name,
     *,
     rank: int | None = None,
     engine: SvdEngine | None = None,
     method: str = "direct",
-) -> TruncatedSvd:
+    policy: UpdatePolicy | None = None,
+):
     """Merge per-worker truncated SVDs across a mesh axis (call under
     ``shard_map``).
 
@@ -186,4 +252,4 @@ def distributed_merge(
     gathered = all_gather_tsvd(local, axis_name)
     n_workers = gathered.u.shape[0]
     shards = [unstack_tree(gathered, i) for i in range(n_workers)]
-    return merge_tree(shards, rank=rank, engine=engine, method=method)
+    return merge_tree(shards, rank=rank, engine=engine, method=method, policy=policy)

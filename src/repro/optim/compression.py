@@ -2,8 +2,8 @@
 
 PowerSGD-shaped compressed DP with the paper's streaming-SVD twist: each 2-D
 gradient is compressed against a rank-r right basis V_r maintained by the
-rank-1 SVD update core, with error feedback so compression error accumulates
-into the next step instead of being lost.
+rank-1 SVD update core (driven through ``repro.api``), with error feedback so
+compression error accumulates into the next step instead of being lost.
 
 Per layer and step (inside shard_map over the data axis):
   1. G_fb = G + E                                 (error feedback)
@@ -16,6 +16,11 @@ Per layer and step (inside shard_map over the data axis):
 Wire bytes per layer: r (m + n) * 4 instead of m n * 4 — the compression
 ratio reported in EXPERIMENTS.md. The all-reduce itself uses jax.lax.psum
 under shard_map, so the dry-run HLO shows the small collectives.
+
+Tracker containers are preserved: a ``CompressionState`` built with a
+``TruncatedSvd`` tracker (e.g. a hand-written shard_map spec tree) keeps
+that pytree structure through every update; new code should use
+``api.SvdState``.
 """
 
 from __future__ import annotations
@@ -25,20 +30,22 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.api import UpdatePolicy, as_state, update as api_update
+from repro.api.policy import policy_from_legacy as _policy_for
+from repro.api.state import like_container as _like
 from repro.core.engine import (
     SvdEngine,
-    default_engine,
     group_indices,
     stack_trees,
     truncated_geometry,
     unstack_tree,
 )
-from repro.core.svd_update import TruncatedSvd
-from repro.dist import collectives, merge as dist_merge
+from repro.dist import merge as dist_merge
 
 __all__ = [
     "CompressionState",
     "agree_basis",
+    "agree_tracker",
     "compression_init",
     "compress_decompress",
     "compress_decompress_batch",
@@ -47,11 +54,14 @@ __all__ = [
     "wire_bytes",
 ]
 
+from repro.api import SvdState
+from repro.dist import collectives
+
 
 class CompressionState(NamedTuple):
     v_basis: jax.Array     # (n, r) right basis (orthonormal-ish)
     error: jax.Array       # (m, n) error feedback buffer
-    tracker: TruncatedSvd  # streaming SVD keeping the basis fresh
+    tracker: SvdState      # streaming SVD keeping the basis fresh
 
 
 def compression_init(key, m: int, n: int, rank: int, dtype=jnp.float32) -> CompressionState:
@@ -61,7 +71,7 @@ def compression_init(key, m: int, n: int, rank: int, dtype=jnp.float32) -> Compr
     return CompressionState(
         v_basis=v0,
         error=jnp.zeros((m, n), dtype),
-        tracker=TruncatedSvd(u=u0, s=jnp.zeros((rank,), dtype), v=v0),
+        tracker=SvdState(u=u0, s=jnp.zeros((rank,), dtype), v=v0),
     )
 
 
@@ -71,14 +81,16 @@ def _orthonormalize(p):
 
 
 def compress_decompress(state: CompressionState, grad: jax.Array, *, axis_name=None,
-                        update_basis: bool = True, method: str = "direct"):
+                        update_basis: bool = True, method: str = "direct",
+                        policy: UpdatePolicy | None = None):
     """Returns (g_hat, new_state). With ``axis_name`` the two factors are
     psum-averaged across the DP axis (call under shard_map).
 
     Thin wrapper over the B=1 batched path — one algorithm, one tuning."""
     s_stack = jax.tree.map(lambda x: x[None], state)
     gh, s2 = compress_decompress_batch(
-        s_stack, grad[None], axis_name=axis_name, update_basis=update_basis, method=method
+        s_stack, grad[None], axis_name=axis_name, update_basis=update_basis,
+        method=method, policy=policy,
     )
     return gh[0], unstack_tree(s2, 0)
 
@@ -91,16 +103,17 @@ def compress_decompress_batch(
     update_basis: bool = True,
     engine: SvdEngine | None = None,
     method: str = "direct",
+    policy: UpdatePolicy | None = None,
 ):
     """Batched ``compress_decompress``: stacked states + grads of shape
-    (B, m, n), one engine call for all B tracker updates.
+    (B, m, n), one batched api dispatch for all B tracker updates.
 
     The projections/orthonormalizations are batched einsums/QR; the
     collectives still cross only ``axis_name`` (the batch axis stays local),
     so this composes with shard_map exactly like the single-leaf version.
+    ``engine`` (legacy) overrides the policy-derived engine.
     """
-    if engine is None:
-        engine = default_engine(method)
+    pol = _policy_for(policy, method)
     g = grads.astype(states.error.dtype) + states.error           # (B, m, n)
 
     # the ONLY wire traffic: two factor pmeans (dist.collectives) — never
@@ -124,13 +137,22 @@ def compress_decompress_batch(
         # long-horizon memory: the paper's streaming SVD absorbs the dominant
         # rank-1 of each step's compressed gradient. Exposed via
         # ``refresh_basis`` (periodic reset) and spectral diagnostics — this
-        # is where core.svd_update is load-bearing in the compressor.
+        # is where the rank-1 update core is load-bearing in the compressor.
         sigma = jnp.linalg.norm(q[:, :, 0], axis=1)                # (B,)
         u1 = p_hat[:, :, 0]                                        # (B, m)
         v1 = q[:, :, 0] / (sigma + 1e-30)[:, None]                 # (B, n)
         scale = jnp.sqrt(sigma)[:, None]
-        tracker = TruncatedSvd(tracker.u, tracker.s * 0.99, tracker.v)
-        tracker = engine.update_truncated_batch(tracker, u1 * scale, v1 * scale)
+        decayed = as_state(tracker).replace(s=tracker.s * 0.99)
+        if engine is not None:
+            from repro.core.svd_update import TruncatedSvd
+
+            t2 = engine.update_truncated_batch(
+                TruncatedSvd(decayed.u, decayed.s, decayed.v),
+                u1 * scale, v1 * scale,
+            )
+        else:
+            t2 = api_update(decayed, u1 * scale, v1 * scale, pol)
+        tracker = _like(tracker, t2.u, t2.s, t2.v)
 
     return g_hat, CompressionState(v_basis=v_basis, error=err, tracker=tracker)
 
@@ -142,57 +164,79 @@ def refresh_basis(state: CompressionState) -> CompressionState:
                             tracker=state.tracker)
 
 
-def agree_basis(state: CompressionState, *, axis_name, rank: int | None = None,
-                engine: SvdEngine | None = None,
-                method: str = "direct") -> CompressionState:
-    """Cross-DP basis agreement (call under shard_map, alongside
-    ``refresh_basis``'s cadence).
+def agree_tracker(tracker, *, axis_name, rank: int | None = None,
+                  policy: UpdatePolicy | None = None, method: str = "direct",
+                  engine: SvdEngine | None = None):
+    """Consensus form of a per-worker streaming-SVD tracker (call under
+    shard_map; ``axis_name=None`` degrades to a local re-factorization).
 
-    Workers' trackers drift apart between refreshes (error feedback is
-    per-worker).  This merges all per-worker trackers with the hierarchical
-    distributed truncated-SVD merge (``dist.merge``): treat worker trackers
-    as SVDs of the row-stacked per-worker gradient sketches, all_gather the
-    small factors, log-depth combine.  Every worker ends with the SAME
-    consensus ``v_basis`` (the merged right basis — the span that matters
-    for compression), while the tracker becomes the worker's own slice of
-    the consensus: the merged factors restricted to its row block,
-    re-factorized (QR of the block + r x r SVD, both O(m r^2)) so the
-    tracker keeps the orthonormal-basis invariant the Brand truncated
-    update requires.  Under shard_map this makes ``tracker.u`` PER-WORKER
-    (spec it like the error buffer); ``tracker.s``/``tracker.v`` and
-    ``v_basis`` stay replicated only when workers' row blocks happen to
-    match — treat the whole post-agreement tracker as per-worker state.
+    Treats worker trackers as SVDs of the row-stacked per-worker sketches,
+    all_gathers the small factors, log-depth merges them (``dist.merge``),
+    then restricts the merged factors to this worker's row block and
+    re-factorizes (QR of the block + r x r SVD, both O(m r^2)) so the
+    returned tracker keeps the orthonormal-basis invariant the Brand
+    truncated update requires.  Returns ``(consensus_tracker, merged)``:
+    the per-worker tracker (same container type as the input) and the full
+    merged SVD (its ``v`` is the consensus right basis).
     """
-    tr = state.tracker
-    m = tr.u.shape[0]
-    merged = dist_merge.distributed_merge(
-        tr, axis_name, rank=rank, engine=engine, method=method
-    )
+    pol = _policy_for(policy, method)
+    tr = as_state(tracker)
+    m = tr.m
+    merged = dist_merge.distributed_merge(tracker, axis_name, rank=rank,
+                                          policy=pol, engine=engine)
     if axis_name is None:
         u_block = merged.u
     else:
         idx = jax.lax.axis_index(axis_name)
         u_block = jax.lax.dynamic_slice_in_dim(merged.u, idx * m, m, axis=0)
     # local row block: M_w ~ u_block diag(s) v^T with u_block NOT orthonormal
-    # (its columns carry only this worker's share of the mass). Re-factorize:
-    # u_block = Q R; R diag(s) = P Sigma W^T  =>  M_w ~ (Q P) Sigma (v W)^T.
-    q, rmat = jnp.linalg.qr(u_block)
-    p, sigma, wt = jnp.linalg.svd(rmat * merged.s[None, :], full_matrices=False)
-    tracker = TruncatedSvd(u=q @ p, s=sigma, v=merged.v @ wt.T)
+    # (its columns carry only this worker's share of the mass) and v possibly
+    # drifted off orthonormality by a long stream of f32 Brand updates.
+    # Re-factorize BOTH: u_block = Qu Ru, v = Qv Rv;
+    # Ru diag(s) Rv^T = P Sigma W^T  =>  M_w ~ (Qu P) Sigma (Qv W)^T.
+    qu, ru = jnp.linalg.qr(u_block)
+    qv, rv = jnp.linalg.qr(merged.v)
+    p, sigma, wt = jnp.linalg.svd((ru * merged.s[None, :]) @ rv.T,
+                                  full_matrices=False)
+    return _like(tracker, qu @ p, sigma, qv @ wt.T), merged
+
+
+def agree_basis(state: CompressionState, *, axis_name, rank: int | None = None,
+                engine: SvdEngine | None = None,
+                method: str = "direct",
+                policy: UpdatePolicy | None = None) -> CompressionState:
+    """Cross-DP basis agreement (call under shard_map, alongside
+    ``refresh_basis``'s cadence).
+
+    Workers' trackers drift apart between refreshes (error feedback is
+    per-worker).  ``agree_tracker`` merges all per-worker trackers into a
+    consensus; every worker ends with the SAME ``v_basis`` (the merged right
+    basis — the span that matters for compression), while the tracker
+    becomes the worker's own slice of the consensus.  Under shard_map this
+    makes ``tracker.u`` PER-WORKER (spec it like the error buffer);
+    ``tracker.s``/``tracker.v`` and ``v_basis`` stay replicated only when
+    workers' row blocks happen to match — treat the whole post-agreement
+    tracker as per-worker state.  An explicit ``engine`` overrides the
+    policy-derived one (legacy callers keep their numerics).
+    """
+    tracker, merged = agree_tracker(
+        state.tracker, axis_name=axis_name, rank=rank, policy=policy,
+        method=method, engine=engine,
+    )
     return CompressionState(v_basis=merged.v, error=state.error, tracker=tracker)
 
 
 def compressed_allreduce(states, grads, *, axis_name, method: str = "direct",
-                         engine: SvdEngine | None = None):
+                         engine: SvdEngine | None = None,
+                         policy: UpdatePolicy | None = None):
     """Tree version: 2-D leaves are compressed; others psum densely.
 
     Compressible leaves sharing a geometry (m, n, rank, dtype) are stacked
     and pushed through ONE ``compress_decompress_batch`` — all their tracker
-    updates ride a single batched engine call instead of a Python loop of
+    updates ride a single batched api dispatch instead of a Python loop of
     per-layer rank-1 updates.
     """
-    if engine is None:
-        engine = default_engine(method)
+    pol = _policy_for(policy, method)
     flat_g, treedef = jax.tree.flatten(grads)
     flat_s = treedef.flatten_up_to(states)
 
@@ -215,7 +259,7 @@ def compressed_allreduce(states, grads, *, axis_name, method: str = "direct",
         s_stack = stack_trees([flat_s[i] for i in idxs])
         g_stack = jnp.stack([flat_g[i] for i in idxs])
         gh, s2 = compress_decompress_batch(
-            s_stack, g_stack, axis_name=axis_name, engine=engine, method=method
+            s_stack, g_stack, axis_name=axis_name, engine=engine, policy=pol
         )
         for j, i in enumerate(idxs):
             out_g[i] = gh[j].astype(flat_g[i].dtype)

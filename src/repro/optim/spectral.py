@@ -2,9 +2,10 @@
 
 GaLore-style low-rank optimizer-state compression with one crucial change:
 instead of re-running a full SVD every T steps (O(m n r)), each 2-D
-parameter keeps a *streaming* truncated SVD of its gradient history that is
-updated every step with the paper's rank-1 machinery
-(``core.svd_update_truncated``: Brand augmentation + secular/Loewner/Cauchy).
+parameter keeps a *streaming* truncated SVD of its gradient history — an
+``repro.api.SvdState`` tracker — that is updated every step with the paper's
+rank-1 machinery through the single api entry point (``api.update`` /
+``api.update_many``; Brand augmentation + secular/Loewner/Cauchy).
 
 Per step and per (m, n) parameter:
   1. one power-iteration step (warm-started) extracts the dominant rank-1
@@ -25,15 +26,9 @@ from typing import NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import (
-    SvdEngine,
-    default_engine,
-    group_indices,
-    stack_trees,
-    truncated_geometry,
-    unstack_tree,
-)
-from repro.core.svd_update import TruncatedSvd, svd_update_truncated
+from repro.api import SvdState, UpdatePolicy, as_state, update as api_update
+from repro.api.policy import policy_from_legacy
+from repro.core.engine import group_indices, stack_trees, unstack_tree
 
 __all__ = [
     "SpectralState",
@@ -46,7 +41,7 @@ __all__ = [
 
 
 class SpectralState(NamedTuple):
-    tracker: TruncatedSvd     # streaming SVD of the gradient history
+    tracker: SvdState         # streaming SVD of the gradient history
     power_v: jax.Array        # (n,) warm-started power-iteration vector
     step: jax.Array
 
@@ -56,7 +51,7 @@ def spectral_init(key, m: int, n: int, rank: int, dtype=jnp.float32) -> Spectral
     u0, _ = jnp.linalg.qr(jax.random.normal(ku, (m, rank), dtype))
     v0, _ = jnp.linalg.qr(jax.random.normal(kv, (n, rank), dtype))
     return SpectralState(
-        tracker=TruncatedSvd(u=u0, s=jnp.zeros((rank,), dtype), v=v0),
+        tracker=SvdState(u=u0, s=jnp.zeros((rank,), dtype), v=v0),
         power_v=jax.random.normal(kp, (n,), dtype) / (n ** 0.5),
         step=jnp.zeros((), jnp.int32),
     )
@@ -79,17 +74,18 @@ def _rank1_of_grad(state: SpectralState, grad: jax.Array, decay: float):
     v_new = gtu / (sigma + 1e-30)
 
     # decay the tracker (recency weighting) before the rank-1 absorption
-    tr = state.tracker
-    tr = TruncatedSvd(u=tr.u, s=tr.s * decay, v=tr.v)
+    tr = state.tracker.replace(s=state.tracker.s * decay)
     return tr, u * jnp.sqrt(sigma), v_new * jnp.sqrt(sigma), v_new
 
 
-@partial(jax.jit, static_argnames=("method",))
+@partial(jax.jit, static_argnames=("method", "policy"))
 def spectral_update_basis(state: SpectralState, grad: jax.Array, *, decay: float = 0.99,
-                          method: str = "direct") -> SpectralState:
+                          method: str = "direct",
+                          policy: UpdatePolicy | None = None) -> SpectralState:
     """Fold the fresh gradient's dominant rank-1 component into the tracker."""
+    pol = policy_from_legacy(policy, method)
     tr, a_vec, b_vec, v_new = _rank1_of_grad(state, grad, decay)
-    tr = svd_update_truncated(tr, a_vec, b_vec, method=method)
+    tr = api_update(tr, a_vec, b_vec, pol)
     return SpectralState(tracker=tr, power_v=v_new, step=state.step + 1)
 
 
@@ -99,30 +95,32 @@ def spectral_update_basis_grouped(
     *,
     decay: float = 0.99,
     method: str = "direct",
-    engine: SvdEngine | None = None,
+    policy: UpdatePolicy | None = None,
     mesh=None,
     batch_axis: str = "data",
 ) -> tuple[SpectralState, ...]:
-    """Batched basis update: group equal-geometry parameters, one engine call
-    per group.
+    """Batched basis update: group equal-geometry parameters, one batched
+    ``api.update`` call per group.
 
     ``states[i]`` / ``grads[i]`` pair up; parameters sharing (m, n, rank,
     dtype) are stacked along a batch axis and their trackers updated by a
-    single ``SvdEngine.update_truncated_batch`` — B rank-1 updates for one
-    plan/dispatch instead of B Python-loop iterations.  ``mesh`` spreads each
-    group's batch over ``batch_axis`` via the engine's shard_map dispatch.
+    single batched dispatch — B rank-1 updates for one plan instead of B
+    Python-loop iterations.  ``policy.mesh`` (or the legacy ``mesh=``)
+    spreads each group's batch over the mesh's batch axis via shard_map.
     """
     if len(states) != len(grads):
         raise ValueError("states and grads must pair up")
-    if engine is None:
-        engine = default_engine(method)
+    pol = policy_from_legacy(policy, method, mesh=mesh, batch_axis=batch_axis)
 
     keys = []
     for i, (st, g) in enumerate(zip(states, grads)):
-        m, n, r, dt = truncated_geometry(st.tracker)
-        if g.shape != (m, n):
-            raise ValueError(f"grad {i} shape {g.shape} != tracker geometry {(m, n)}")
-        keys.append((m, n, r, dt))
+        tr = as_state(st.tracker)
+        geo = (tr.m, tr.n, tr.rank, jnp.result_type(tr.u))
+        if g.shape != (tr.m, tr.n):
+            raise ValueError(
+                f"grad {i} shape {g.shape} != tracker geometry {(tr.m, tr.n)}"
+            )
+        keys.append(geo)
 
     out: list[SpectralState | None] = [None] * len(states)
     for idxs in group_indices(keys).values():
@@ -131,8 +129,7 @@ def spectral_update_basis_grouped(
         tr, a_vec, b_vec, v_new = jax.vmap(partial(_rank1_of_grad, decay=decay))(
             stacked, g_stack
         )
-        tr = engine.update_truncated_batch(tr, a_vec, b_vec, mesh=mesh,
-                                           batch_axis=batch_axis)
+        tr = api_update(tr, a_vec, b_vec, pol)
         batched = SpectralState(tracker=tr, power_v=v_new, step=stacked.step + 1)
         for j, i in enumerate(idxs):
             out[i] = unstack_tree(batched, j)

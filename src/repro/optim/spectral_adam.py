@@ -15,6 +15,13 @@ Per step and per projected parameter:
   3. delta = U_r @ adam(G_p)  back in parameter space (+ weight decay).
 
 Non-2-D (norms, biases) and small parameters fall through to dense AdamW.
+
+Basis refresh (``OptimizerConfig.basis_refresh_every``): every N steps each
+tracker is passed through ``optim.compression.agree_tracker`` — under
+data-parallel shard_map (``axis_name=``) that merges per-worker trackers
+into one consensus basis (the ``agree_basis`` machinery); on a single
+worker it degrades to a local re-factorization that restores the
+orthonormal-basis invariant long streams erode.
 """
 
 from __future__ import annotations
@@ -24,6 +31,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import group_indices, stack_trees, unstack_tree
+from repro.optim.compression import agree_tracker
 from repro.optim.spectral import (
     SpectralState,
     project,
@@ -82,6 +91,8 @@ def spectral_adam_update(
     eps=1e-8,
     weight_decay=0.1,
     update_basis_every: int = 1,
+    basis_refresh_every: int = 0,
+    axis_name=None,
 ):
     b1, b2 = betas
     step = state.step + 1
@@ -112,6 +123,44 @@ def spectral_adam_update(
             lambda ops: ops[0],
             (spec_in, g_in),
         )
+        # basis refresh cadence: consensus/re-factorization via the
+        # compression layer's agree_tracker (OptimizerConfig.basis_refresh_every)
+        if basis_refresh_every:
+            def _refresh(specs):
+                if axis_name is not None:
+                    # collectives inside agree_tracker can't cross a vmap —
+                    # refresh per leaf under shard_map
+                    return tuple(
+                        SpectralState(
+                            tracker=agree_tracker(s.tracker, axis_name=axis_name)[0],
+                            power_v=s.power_v,
+                            step=s.step,
+                        )
+                        for s in specs
+                    )
+                # local refresh: one vmapped re-factorization per geometry
+                # group instead of a per-leaf subgraph each
+                out = list(specs)
+                geos = [(s.tracker.u.shape, s.tracker.v.shape) for s in specs]
+                for idxs in group_indices(geos).values():
+                    stacked = stack_trees([specs[i].tracker for i in idxs])
+                    refreshed = jax.vmap(
+                        lambda t: agree_tracker(t, axis_name=None)[0]
+                    )(stacked)
+                    for j, i in enumerate(idxs):
+                        out[i] = SpectralState(
+                            tracker=unstack_tree(refreshed, j),
+                            power_v=out[i].power_v,
+                            step=out[i].step,
+                        )
+                return tuple(out)
+
+            updated = jax.lax.cond(
+                (step % basis_refresh_every) == 0,
+                _refresh,
+                lambda specs: specs,
+                updated,
+            )
         new_specs = dict(zip(elig, updated))
 
     new_p, new_s = [], []

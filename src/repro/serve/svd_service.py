@@ -1,17 +1,17 @@
 """Streaming rank-1 SVD-update service: micro-batched engine flushes.
 
 The serving story for the paper's machinery: many concurrent streams (one
-per user/session/adapter) each own a truncated SVD state that evolves by
-rank-1 updates — personalization vectors folding into low-rank adapters,
-per-tenant gradient sketches, online covariance trackers. Issuing those
-updates one at a time wastes the hardware; this service queues them and
-flushes *one batched engine call* per round:
+per user/session/adapter) each own a truncated ``repro.api.SvdState`` that
+evolves by rank-1 updates — personalization vectors folding into low-rank
+adapters, per-tenant gradient sketches, online covariance trackers. Issuing
+those updates one at a time wastes the hardware; this service queues them
+and flushes *one batched engine call* per round:
 
-    svc = SvdService(max_batch=64)
-    svc.register("user-1", tsvd1)
+    svc = SvdService(max_batch=64, policy=UpdatePolicy(method="auto"))
+    svc.register("user-1", api.SvdState.from_dense(m1, rank=8))
     svc.enqueue("user-1", a, b)        # cheap: just queues
     svc.enqueue("user-2", a2, b2)
-    svc.flush()                        # one SvdEngine.update_truncated_batch
+    svc.flush()                        # one batched truncated update
 
 * Per-stream ordering: a stream's queued pairs are applied in FIFO order;
   each flush round takes at most one pending pair per stream (they are
@@ -19,8 +19,10 @@ flushes *one batched engine call* per round:
 * Micro-batching: ``enqueue`` auto-flushes once ``max_batch`` streams have
   a pending pair. Batches are padded up to bucket sizes (powers of two) so
   the engine's plan cache sees a handful of geometries, not every B.
-* Sharding: give the engine a ``repro.dist.batch_sharding(mesh)`` and the
-  stacked batch axis spreads over the mesh's data axis.
+* Policy: an ``UpdatePolicy`` names the numerics (method/fmm_p/...) and the
+  placement — ``policy.mesh`` spreads every flush's batch axis over the
+  mesh via the engine's shard_map dispatch.  A legacy ``engine=`` override
+  wins over the policy-derived engine.
 * Multi-worker: per-worker shard streams combine into one global truncated
   SVD via ``merge_streams`` (the ``repro.dist.merge`` log-depth tree).
 
@@ -36,9 +38,10 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro.api import SvdState, UpdatePolicy, as_state
+from repro.api.update import engine_from_key
 from repro.core.engine import (
     SvdEngine,
-    default_engine,
     group_indices,
     stack_trees,
     truncated_geometry,
@@ -68,7 +71,7 @@ def _bucket(b: int, cap: int) -> int:
 
 
 class SvdService:
-    """Micro-batching front end over ``SvdEngine.update_truncated_batch``."""
+    """Micro-batching front end over the batched truncated-update engine."""
 
     def __init__(
         self,
@@ -77,28 +80,36 @@ class SvdService:
         method: str = "direct",
         max_batch: int = 64,
         pad_to_bucket: bool = True,
+        policy: UpdatePolicy | None = None,
     ):
-        self.engine = engine if engine is not None else default_engine(method)
+        self.policy = policy if policy is not None else UpdatePolicy(method=method)
+        self.engine = engine            # explicit override; None -> policy-derived
         self.max_batch = max_batch
         self.pad_to_bucket = pad_to_bucket
         self.stats = SvdServiceStats()
-        self._streams: OrderedDict[str, TruncatedSvd] = OrderedDict()
+        self._streams: OrderedDict[str, SvdState] = OrderedDict()
         self._pending: dict[str, deque] = {}
         self._lock = threading.RLock()
 
+    def _engine_for(self, rank: int) -> SvdEngine:
+        if self.engine is not None:
+            return self.engine
+        return engine_from_key(self.policy, rank + 1)
+
     # -- stream lifecycle ---------------------------------------------------
 
-    def register(self, stream_id: str, tsvd: TruncatedSvd) -> None:
-        """Create (or replace) a stream with its current truncated SVD.
+    def register(self, stream_id: str, state) -> None:
+        """Create (or replace) a stream with its current truncated SVD
+        (any container — coerced to ``SvdState``).
 
         Replacing drops any pending pairs — they were queued against the old
         state (and may not even match the new geometry).
         """
         with self._lock:
-            self._streams[stream_id] = tsvd
+            self._streams[stream_id] = as_state(state)
             self._pending[stream_id] = deque()
 
-    def evict(self, stream_id: str) -> TruncatedSvd:
+    def evict(self, stream_id: str) -> SvdState:
         """Drop a stream and return its state with its OWN queue applied.
 
         Other streams' pending pairs are left queued — eviction of one user
@@ -108,11 +119,16 @@ class SvdService:
             state = self._streams.pop(stream_id)
             queue = self._pending.pop(stream_id, deque())
             for a, b in queue:
-                state = self.engine.update_truncated(state, a, b)
+                state = self._apply_one(state, a, b)
                 self.stats.applied += 1
             return state
 
-    def state(self, stream_id: str) -> TruncatedSvd:
+    def _apply_one(self, state: SvdState, a, b) -> SvdState:
+        eng = self._engine_for(state.rank)
+        t = eng.update_truncated(TruncatedSvd(state.u, state.s, state.v), a, b)
+        return SvdState(u=t.u, s=t.s, v=t.v)
+
+    def state(self, stream_id: str) -> SvdState:
         """Current state — pending (unflushed) pairs are NOT yet applied."""
         with self._lock:
             return self._streams[stream_id]
@@ -123,7 +139,7 @@ class SvdService:
         *,
         target: str | None = None,
         rank: int | None = None,
-    ) -> TruncatedSvd:
+    ) -> SvdState:
         """Hierarchically merge several streams into one truncated SVD.
 
         The multi-worker story: each worker feeds its own stream (a shard
@@ -149,11 +165,12 @@ class SvdService:
                 queue = self._pending[sid]
                 while queue:
                     a, b = queue.popleft()
-                    state = self.engine.update_truncated(state, a, b)
+                    state = self._apply_one(state, a, b)
                     self.stats.applied += 1
                 self._streams[sid] = state
                 states.append(state)
-        merged = merge_tree(states, rank=rank, engine=self.engine)
+        merged = merge_tree(states, rank=rank, engine=self.engine,
+                            policy=self.policy)
         if target is not None:
             with self._lock:
                 self.register(target, merged)
@@ -176,7 +193,7 @@ class SvdService:
             if stream_id not in self._streams:
                 raise KeyError(f"unknown stream {stream_id!r}; register() first")
             t = self._streams[stream_id]
-            m, n = t.u.shape[0], t.v.shape[0]
+            m, n = t.m, t.n
             if a.shape != (m,) or b.shape != (n,):
                 # reject HERE: at flush time a bad pair would poison a whole
                 # geometry group (pairs are popped before the engine call)
@@ -223,7 +240,9 @@ class SvdService:
                 # accumulates streams) — never pad negative, just dispatch big
                 pad = max(0, _bucket(bsz, self.max_batch) - bsz)
 
-            t_stack = stack_trees(states)
+            t_stack = stack_trees(
+                [TruncatedSvd(s.u, s.s, s.v) for s in states]
+            )
             a_stack = jnp.stack([jnp.asarray(a, dt) for a, _ in pairs])
             b_stack = jnp.stack([jnp.asarray(b, dt) for _, b in pairs])
             if pad:
@@ -235,9 +254,14 @@ class SvdService:
                 a_stack = jnp.concatenate([a_stack, jnp.zeros((pad, m), dt)])
                 b_stack = jnp.concatenate([b_stack, jnp.zeros((pad, n), dt)])
 
-            out = self.engine.update_truncated_batch(t_stack, a_stack, b_stack)
+            eng = self._engine_for(r)
+            out = eng.update_truncated_batch(
+                t_stack, a_stack, b_stack,
+                mesh=self.policy.mesh, batch_axis=self.policy.batch_axis,
+            )
             for j, sid in enumerate(sids):
-                self._streams[sid] = unstack_tree(out, j)
+                t = unstack_tree(out, j)
+                self._streams[sid] = SvdState(u=t.u, s=t.s, v=t.v)
                 self._pending[sid].popleft()
             applied += bsz
             self.stats.rounds += 1

@@ -84,9 +84,14 @@ def train(
             step, base_lr=opt.lr, warmup_steps=opt.warmup_steps, total_steps=opt.total_steps
         )
         if use_spectral:
+            # basis_refresh_every: periodic tracker consensus/re-factorization
+            # via optim.compression.agree_tracker (axis_name=None here — the
+            # step is SPMD-jitted, not shard_map'd, so gradients are already
+            # globally synced and the refresh is the local re-factorization)
             new_params, new_state = spectral_adam_update(
                 grads, opt_state, params,
                 lr=lr, betas=opt.betas, eps=opt.eps, weight_decay=opt.weight_decay,
+                basis_refresh_every=opt.basis_refresh_every,
             )
             from repro.optim.adamw import global_norm
             gnorm = global_norm(grads)

@@ -1,0 +1,209 @@
+"""Golden equivalence: the ``repro.api`` surface reproduces the deprecated
+call shapes EXACTLY (allclose rtol=0 atol=0 in f64) on every dispatch route
+— single, batched, truncated, truncated-batched, Pallas-kernel, and
+mesh-sharded on 8 fake devices — and the old shapes warn.
+
+This is the ONE test module that intentionally exercises the deprecated
+surface (CI errors on DeprecationWarning raised from repro/examples code)."""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.api import SvdState, UpdatePolicy
+from repro.core.engine import svd_update_batch, svd_update_truncated_batch
+from repro.core.svd_update import (
+    TruncatedSvd,
+    svd_update,
+    svd_update_truncated,
+)
+
+RNG = np.random.default_rng(3)
+REPO = Path(__file__).resolve().parent.parent
+
+# (policy method, legacy engine method) pairs — "pallas" is the public name
+# of the legacy "kernel" route
+ROUTES = [("direct", "direct"), ("fmm", "fmm"), ("pallas", "kernel")]
+
+
+def _problem(m, n):
+    a_mat = RNG.uniform(1, 9, (m, n))
+    u, s, vt = np.linalg.svd(a_mat)
+    return (jnp.asarray(u), jnp.asarray(s), jnp.asarray(vt.T),
+            jnp.asarray(RNG.normal(size=m)), jnp.asarray(RNG.normal(size=n)))
+
+
+def _stacked_problem(b, m, n):
+    cols = [[] for _ in range(5)]
+    for _ in range(b):
+        for c, x in zip(cols, _problem(m, n)):
+            c.append(x)
+    return tuple(jnp.stack(c) for c in cols)
+
+
+def _trunc(m, n, r):
+    return TruncatedSvd(
+        jnp.asarray(np.linalg.qr(RNG.normal(size=(m, r)))[0]),
+        jnp.asarray(np.sort(np.abs(RNG.normal(size=r)))[::-1].copy()),
+        jnp.asarray(np.linalg.qr(RNG.normal(size=(n, r)))[0]),
+    )
+
+
+def _exact(x, y):
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# the four dispatch routes, bitwise vs the old call shapes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method,legacy", ROUTES)
+def test_single_full_route_exact(method, legacy):
+    u, s, v, a, b = _problem(12, 16)
+    with pytest.warns(DeprecationWarning, match="svd_update"):
+        ref = svd_update(u, s, v, a, b, method=legacy)
+    out = api.update(SvdState.from_factors(u, s, v), a, b,
+                     UpdatePolicy(method=method))
+    _exact(out.u, ref.u)
+    _exact(out.s, ref.s)
+    _exact(out.v, ref.v)
+    _exact(out.d_left, ref.d_left)
+    _exact(out.d_right, ref.d_right)
+
+
+@pytest.mark.parametrize("method,legacy", ROUTES)
+def test_batched_full_route_exact(method, legacy):
+    u, s, v, a, b = _stacked_problem(6, 10, 13)
+    with pytest.warns(DeprecationWarning, match="svd_update_batch"):
+        ref = svd_update_batch(u, s, v, a, b, method=legacy)
+    stacked = SvdState.from_factors(u, s, v)
+    out = api.update(stacked, a, b, UpdatePolicy(method=method))
+    _exact(out.u, ref.u)
+    _exact(out.s, ref.s)
+    _exact(out.v, ref.v)
+
+
+def test_truncated_single_route_exact():
+    t = _trunc(14, 18, 4)
+    a = jnp.asarray(RNG.normal(size=14))
+    b = jnp.asarray(RNG.normal(size=18))
+    with pytest.warns(DeprecationWarning, match="svd_update_truncated"):
+        ref = svd_update_truncated(t, a, b)
+    out = api.update(t, a, b, UpdatePolicy(method="direct"))
+    _exact(out.u, ref.u)
+    _exact(out.s, ref.s)
+    _exact(out.v, ref.v)
+
+
+def test_truncated_batched_route_exact():
+    b_sz, m, n, r = 8, 14, 18, 4
+    singles = [_trunc(m, n, r) for _ in range(b_sz)]
+    t = jax.tree.map(lambda *xs: jnp.stack(xs), *singles)
+    a = jnp.asarray(RNG.normal(size=(b_sz, m)))
+    b = jnp.asarray(RNG.normal(size=(b_sz, n)))
+    with pytest.warns(DeprecationWarning, match="svd_update_truncated_batch"):
+        ref = svd_update_truncated_batch(t, a, b)
+    out = api.update(api.as_state(t), a, b, UpdatePolicy(method="direct"))
+    _exact(out.u, ref.u)
+    _exact(out.s, ref.s)
+    _exact(out.v, ref.v)
+
+
+def test_mesh_sharded_route_exact_on_8_devices():
+    """api.update with UpdatePolicy(mesh=...) == the legacy engine mesh path,
+    exactly, for full-batched and truncated-batched dispatch (8 fake CPU
+    devices; subprocess because the device count must precede jax init)."""
+    script = textwrap.dedent("""
+        import json
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        import jax.numpy as jnp, numpy as np
+        from repro import api
+        from repro.core.engine import SvdEngine, default_engine
+        from repro.core.svd_update import TruncatedSvd
+
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        B, m, n, r = 12, 8, 10, 3
+
+        us = np.stack([np.linalg.qr(rng.normal(size=(m, m)))[0] for _ in range(B)])
+        vs = np.stack([np.linalg.qr(rng.normal(size=(n, n)))[0] for _ in range(B)])
+        ss = np.abs(rng.normal(size=(B, m)))
+        a = rng.normal(size=(B, m)); b = rng.normal(size=(B, n))
+        args = tuple(jnp.asarray(x) for x in (us, ss, vs, a, b))
+
+        pol = api.UpdatePolicy(method="direct", mesh=mesh, batch_axis="data")
+        eng = default_engine("direct")   # the engine the old path used
+
+        ref = eng.update_batch(*args, mesh=mesh, batch_axis="data")
+        out = api.update(api.SvdState.from_factors(*args[:3]), args[3], args[4], pol)
+        d_full = max(float(jnp.max(jnp.abs(x - y))) for x, y in
+                     zip((out.u, out.s, out.v), (ref.u, ref.s, ref.v)))
+
+        t = TruncatedSvd(args[0][:, :, :r], args[1][:, :r], args[2][:, :, :r])
+        ref_t = eng.update_truncated_batch(t, args[3], args[4],
+                                           mesh=mesh, batch_axis="data")
+        out_t = api.update(api.as_state(t), args[3], args[4], pol)
+        d_tr = max(float(jnp.max(jnp.abs(x - y))) for x, y in
+                   zip((out_t.u, out_t.s, out_t.v), (ref_t.u, ref_t.s, ref_t.v)))
+        print(json.dumps({"d_full": d_full, "d_trunc": d_tr,
+                          "devices": jax.device_count()}))
+    """)
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, timeout=420,
+        env={
+            "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+            "PYTHONPATH": str(REPO / "src"),
+            "PATH": "/usr/bin:/bin",
+            "JAX_PLATFORMS": "cpu",
+            "HOME": "/tmp",
+        },
+    )
+    assert proc.returncode == 0, f"stderr:\n{proc.stderr[-4000:]}"
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["devices"] == 8
+    assert out["d_full"] == 0.0    # identical engine cache entry -> bitwise
+    assert out["d_trunc"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# shims: exist, warn, and share the api's engines (one plan cache)
+# ---------------------------------------------------------------------------
+
+
+def test_all_four_legacy_shapes_warn():
+    u, s, v, a, b = _problem(8, 10)
+    with pytest.warns(DeprecationWarning):
+        svd_update(u, s, v, a, b)
+    t = _trunc(8, 10, 3)
+    with pytest.warns(DeprecationWarning):
+        svd_update_truncated(t, a, b)
+    ub, sb, vb, ab, bb = _stacked_problem(2, 8, 10)
+    with pytest.warns(DeprecationWarning):
+        svd_update_batch(ub, sb, vb, ab, bb)
+    tb = jax.tree.map(lambda *xs: jnp.stack(xs), t, _trunc(8, 10, 3))
+    with pytest.warns(DeprecationWarning):
+        svd_update_truncated_batch(tb, jnp.stack([a, a]), jnp.stack([b, b]))
+
+
+def test_legacy_and_api_share_one_engine():
+    """The old facades and the api resolve policy-equal configurations to the
+    SAME default engine — one plan cache across old and new callers."""
+    from repro.core.engine import default_engine
+
+    st = api.as_state(_trunc(8, 10, 3))
+    assert api.engine_for(UpdatePolicy(method="direct"), st) is default_engine("direct")
+    assert api.engine_for(
+        UpdatePolicy(method="pallas", fmm_p=20), st
+    ) is default_engine("kernel")

@@ -91,7 +91,7 @@ def test_compressed_allreduce_under_shard_map():
         from jax.experimental.shard_map import shard_map
         from repro.optim.compression import (CompressionState, compression_init,
                                              compress_decompress)
-        from repro.core.svd_update import TruncatedSvd
+        from repro.api import SvdState
 
         mesh = jax.make_mesh((8,), ("data",))
         m, n, r = 16, 12, 4
@@ -110,7 +110,7 @@ def test_compressed_allreduce_under_shard_map():
 
         out_state_specs = CompressionState(
             v_basis=P(), error=P("data"),
-            tracker=TruncatedSvd(P(), P(), P()),
+            tracker=SvdState(P(), P(), P()),   # api-era tracker container
         )
         fn = shard_map(body, mesh=mesh,
                        in_specs=(P("data"), P()),

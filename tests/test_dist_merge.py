@@ -58,6 +58,61 @@ def test_merge_odd_shard_count():
     np.testing.assert_allclose(rec, opt, atol=1e-6)
 
 
+@pytest.mark.parametrize("n_shards", [3, 5, 6, 7])
+def test_merge_non_pow2_stays_batched(n_shards, monkeypatch):
+    """Equal-geometry shard lists of non-power-of-two length are padded with
+    zero shards, so every level runs the batched path — the sequential
+    ``merge_pair`` fallback must never fire — and the result (incl. the left
+    factor's row count) is still exact."""
+    from repro.dist import merge as merge_mod
+
+    def _boom(*a, **kw):
+        raise AssertionError("sequential merge_pair fallback fired")
+
+    monkeypatch.setattr(merge_mod, "merge_pair", _boom)
+
+    rng = np.random.default_rng(6)
+    m_each = 12
+    M = rng.normal(size=(n_shards * m_each, 3)) @ rng.normal(size=(N, 3)).T
+    shards = [_tsvd_of(M[i * m_each:(i + 1) * m_each], RANK) for i in range(n_shards)]
+    merged = merge_mod.merge_tree(shards, rank=RANK)
+
+    assert merged.u.shape == (n_shards * m_each, RANK)  # padding rows sliced off
+    rec = np.asarray(merged.u) @ np.diag(np.asarray(merged.s)) @ np.asarray(merged.v).T
+    opt, s_ref = _rank_r_reference(M, RANK)
+    np.testing.assert_allclose(rec, opt, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(merged.s), s_ref, atol=1e-6)
+
+
+def test_merge_mixed_geometry_still_works():
+    """Genuinely unequal shard heights keep the pairwise fallback path."""
+    rng = np.random.default_rng(7)
+    M = rng.normal(size=(50, 3)) @ rng.normal(size=(N, 3)).T
+    blocks = [M[:10], M[10:30], M[30:50]]  # heights 10 / 20 / 20
+    merged = merge_tree([_tsvd_of(b, RANK) for b in blocks], rank=RANK)
+    rec = np.asarray(merged.u) @ np.diag(np.asarray(merged.s)) @ np.asarray(merged.v).T
+    opt, _ = _rank_r_reference(M, RANK)
+    np.testing.assert_allclose(rec, opt, atol=1e-6)
+
+
+def test_merge_accepts_svdstate_and_preserves_container():
+    """api-era shards: SvdState in -> SvdState out; legacy TruncatedSvd in ->
+    TruncatedSvd out (pytree structure is caller-owned)."""
+    from repro.api import SvdState, as_state
+
+    rng = np.random.default_rng(8)
+    M = rng.normal(size=(40, 3)) @ rng.normal(size=(N, 3)).T
+    legacy = [_tsvd_of(b, RANK) for b in np.array_split(M, 4)]
+    states = [as_state(t) for t in legacy]
+
+    out_legacy = merge_tree(legacy, rank=RANK)
+    out_state = merge_tree(states, rank=RANK)
+    assert type(out_legacy).__name__ == "TruncatedSvd"
+    assert isinstance(out_state, SvdState)
+    np.testing.assert_allclose(np.asarray(out_legacy.u), np.asarray(out_state.u),
+                               rtol=0, atol=0)
+
+
 def test_merge_general_matrix_near_optimal():
     """Full-rank data: hierarchical merge error stays within a modest factor
     of the optimal rank-r error (Iwen–Ong guarantee shape)."""
