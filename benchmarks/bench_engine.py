@@ -1,8 +1,8 @@
 """Batched engine vs. Python-loop-of-updates throughput (DESIGN.md §4).
 
 For B in {1, 8, 32, 128}: B independent rank-1 SVD updates of (m, n)
-states, run (a) as a Python loop of jitted single `svd_update` calls and
-(b) as ONE `SvdEngine.update_batch` call, plus the same comparison for the
+states, run (a) as a Python loop of plan-cached single `SvdEngine.update`
+calls and (b) as ONE `SvdEngine.update_batch` call, plus the same comparison for the
 rank-r streaming truncated update (the optimizer/serving hot path).
 
 CSV rows (benchmarks/run.py style):
@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 from repro.core.engine import SvdEngine
-from repro.core.svd_update import TruncatedSvd, svd_update, svd_update_truncated
+from repro.core.svd_update import TruncatedSvd
 
 BATCHES = [1, 8, 32, 128]
 M, N = 32, 48          # full-update geometry
@@ -68,7 +68,7 @@ def run() -> dict:
 
             def loop_full(u, s, v, a, bb):
                 outs = [
-                    svd_update(u[i], s[i], v[i], a[i], bb[i], method=method)
+                    engine.update(u[i], s[i], v[i], a[i], bb[i])
                     for i in range(b)
                 ]
                 return outs[-1].s
@@ -101,8 +101,8 @@ def run() -> dict:
 
             def loop_trunc(t, ta, tb):
                 outs = [
-                    svd_update_truncated(
-                        TruncatedSvd(t.u[i], t.s[i], t.v[i]), ta[i], tb[i], method=method
+                    engine.update_truncated(
+                        TruncatedSvd(t.u[i], t.s[i], t.v[i]), ta[i], tb[i]
                     )
                     for i in range(b)
                 ]

@@ -1,0 +1,152 @@
+"""Async vs. synchronous flush throughput of ``serve.SvdService`` (DESIGN.md §9).
+
+The service's double-buffered dispatch lets the host assemble and dispatch
+round k+1 while the device still computes round k; the synchronous baseline
+(``max_in_flight=0``) blocks on every round's outputs before returning.
+This bench feeds identical traffic (STREAMS streams x ROUNDS events each,
+auto-flushing batched rounds) through both modes and reports two numbers:
+
+* end-to-end updates/s (feed + drain): the async mode overlaps round k's
+  device compute with round k+1's host-side batch assembly. On this CPU
+  container the two run within scheduler noise of each other (parity to
+  ~1.2x run-to-run; modes are interleaved and best-of-REPEAT to damp
+  drift) — the overlap window that makes the double buffer pay is an
+  accelerator property, where device rounds are long and the host is free;
+* worst-case enqueue stall, recorded for observability. On CPU it is
+  dominated by the host-side ``jnp.stack`` batch assembly that both modes
+  pay, so expect parity here; the sync-mode device wait it would expose
+  only dominates on accelerator backends.
+
+CSV rows (benchmarks/run.py style):
+  bench_serve/<mode>/B=<streams>,us,updates_per_s=... max_enqueue_us=...
+
+and a machine-readable summary at benchmarks/BENCH_serve.json.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.api import SvdState, UpdatePolicy
+from repro.serve import SvdService
+
+# Geometry where a flush round carries real device work (tall factors):
+# below ~(256, 384) the CPU round is host-assembly-bound and async == sync.
+M, N, RANK = 512, 768, 16
+STREAMS = 16
+ROUNDS = 8             # events per stream
+REPEAT = 5
+
+OUT = Path(__file__).parent / "BENCH_serve.json"
+
+
+def _service(max_in_flight: int) -> SvdService:
+    rng = np.random.default_rng(0)
+    svc = SvdService(
+        max_batch=STREAMS,
+        max_in_flight=max_in_flight,
+        policy=UpdatePolicy(method="direct"),
+    )
+    for i in range(STREAMS):
+        svc.register(
+            f"s{i}",
+            SvdState.from_factors(
+                np.linalg.qr(rng.normal(size=(M, RANK)))[0],
+                np.sort(np.abs(rng.normal(size=RANK)))[::-1].copy(),
+                np.linalg.qr(rng.normal(size=(N, RANK)))[0],
+            ),
+        )
+    return svc
+
+
+def _traffic():
+    rng = np.random.default_rng(1)
+    return [
+        (f"s{i % STREAMS}",
+         jnp.asarray(rng.normal(size=M)), jnp.asarray(rng.normal(size=N)))
+        for i in range(STREAMS * ROUNDS)
+    ]
+
+
+def _one_pass(max_in_flight: int, traffic) -> tuple[float, float, SvdService]:
+    """(wall seconds, worst single-enqueue seconds, service) for one feed+drain.
+
+    A fresh service per pass (same initial streams), but the policy-derived
+    default engine is process-shared — the plan cache stays warm across
+    passes, so steady-state dispatch is what gets timed.
+    """
+    svc = _service(max_in_flight)
+    stall = 0.0
+    t0 = time.perf_counter()
+    for sid, a, b in traffic:
+        e0 = time.perf_counter()
+        svc.enqueue(sid, a, b)
+        stall = max(stall, time.perf_counter() - e0)
+    svc.drain()
+    return time.perf_counter() - t0, stall, svc
+
+
+def run() -> dict:
+    traffic = _traffic()
+    _one_pass(0, traffic)      # warm the shared plan cache (compile round)
+
+    # Interleave the modes so slow machine drift hits both equally; keep the
+    # best pass per mode, with stats from that SAME pass so the JSON
+    # artifact is internally consistent.
+    best = {"sync": None, "async": None}
+    for _ in range(REPEAT):
+        for mode, mif in (("sync", 0), ("async", 2)):
+            t, stall, svc = _one_pass(mif, traffic)
+            if best[mode] is None or t < best[mode][0]:
+                best[mode] = (t, stall, svc)
+
+    results = {}
+    runs = {"sync": best["sync"], "async": best["async"]}
+    for mode, (t, stall, svc) in runs.items():
+        ups = len(traffic) / t
+        results[mode] = {
+            "max_in_flight": svc.max_in_flight,
+            "seconds": t,
+            "updates_per_s": ups,
+            "max_enqueue_stall_us": stall * 1e6,
+            "flush_rounds": svc.stats.rounds,
+            "backpressure_waits": svc.stats.backpressure_waits,
+            "in_flight_peak": svc.stats.in_flight_peak,
+        }
+        emit(
+            f"bench_serve/{mode}/B={STREAMS}",
+            t * 1e6,
+            f"updates_per_s={ups:.0f} max_enqueue_us={stall * 1e6:.0f}",
+        )
+
+    throughput_speedup = results["sync"]["seconds"] / results["async"]["seconds"]
+    stall_ratio = (results["sync"]["max_enqueue_stall_us"]
+                   / results["async"]["max_enqueue_stall_us"])
+    emit(f"bench_serve/speedup/B={STREAMS}", results["async"]["seconds"] * 1e6,
+         f"async_vs_sync={throughput_speedup:.2f}x "
+         f"enqueue_stall_reduction={stall_ratio:.1f}x")
+    summary = {
+        "m": M,
+        "n": N,
+        "rank": RANK,
+        "streams": STREAMS,
+        "events": len(traffic),
+        "sync": results["sync"],
+        "async": results["async"],
+        "async_vs_sync_throughput": throughput_speedup,
+        "enqueue_stall_reduction": stall_ratio,
+    }
+    OUT.write_text(json.dumps(summary, indent=2) + "\n")
+    print(f"wrote {OUT}")
+    return summary
+
+
+if __name__ == "__main__":
+    run()

@@ -21,7 +21,11 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
-from repro.core.svd_update import svd_update
+from repro.core.engine import default_engine
+
+
+def svd_update(u, s, v, a, b, *, method, fmm_p=20):
+    return default_engine(method, fmm_p=fmm_p).update(u, s, v, a, b)
 
 N = 256
 

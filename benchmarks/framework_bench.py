@@ -11,7 +11,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 from repro import configs
-from repro.core.svd_update import TruncatedSvd, svd_update_truncated
+from repro.core.engine import default_engine
+from repro.core.svd_update import TruncatedSvd
 from repro.models.registry import build_model
 from repro.optim.compression import compression_init, compress_decompress, wire_bytes
 from repro.optim.spectral import spectral_init, spectral_update_basis
@@ -27,7 +28,7 @@ def run() -> None:
         t = TruncatedSvd(u0, jnp.asarray(rng.uniform(1, 2, r)), v0)
         a = jnp.asarray(rng.normal(size=m))
         b = jnp.asarray(rng.normal(size=n))
-        us = time_fn(jax.jit(svd_update_truncated), t, a, b)
+        us = time_fn(default_engine("direct").update_truncated, t, a, b)
         emit(f"framework/truncated_update/m={m}_n={n}_r={r}", us,
              "Brand + Algorithm 6.1 inner solve")
 

@@ -1,0 +1,8 @@
+# Root conftest: loaded for BOTH the tier-1 run (tests/) and the doctest
+# run (`pytest --doctest-modules src/repro/api`, which tests/conftest.py
+# does not cover). The api doctests state numerical claims (allclose vs a
+# fresh SVD) that hold at f64 working precision — enable x64 before any
+# array is built, exactly as tests/conftest.py does for the test suite.
+import jax
+
+jax.config.update("jax_enable_x64", True)

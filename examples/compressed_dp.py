@@ -3,7 +3,7 @@
 Distributed-optimization demo of the paper-powered compressor: a small MLP
 regression trained with shard_map data parallelism where 2-D gradients cross
 the DP axis as rank-r factors (PowerSGD step + streaming-SVD long-horizon
-basis from core.svd_update), with per-worker error feedback. Compares loss
+basis from the paper's rank-1 update core), with per-worker error feedback. Compares loss
 against dense-psum DP and prints the wire-byte savings.
 
 NOTE: sets XLA_FLAGS *before* importing jax — run as a script, standalone.

@@ -12,10 +12,13 @@ One state object, one policy object, two entry points:
 
 Everything underneath — ``core.svd_update`` (Algorithm 6.1),
 ``core.engine`` (plan-cached batched executables), the Pallas kernels and
-the ``repro.dist`` shard_map routes — is implementation; the old
-module-level call shapes (``svd_update``, ``svd_update_truncated``,
-``svd_update_batch``, ``svd_update_truncated_batch``) remain as deprecated
-shims that forward here.
+the ``repro.dist`` shard_map routes — is implementation.  The pre-api
+module-level call shapes were deleted after the migration (DESIGN.md §8,
+now historical, records the old→new map); this module is the only public
+entry point.
+
+Docstrings on this surface carry runnable ``>>>`` examples, enforced by
+``pytest --doctest-modules src/repro/api`` in CI.
 """
 
 from repro.api.policy import METHODS, UpdatePolicy

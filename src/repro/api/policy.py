@@ -46,6 +46,19 @@ class UpdatePolicy:
 
     Truncation rule:
       truncate_to  keep only the top-r triplets of every result (None = keep all)
+
+    Policies are plain frozen dataclasses — build once, ``replace`` to vary:
+
+    >>> from repro.api import UpdatePolicy
+    >>> pol = UpdatePolicy(method="fmm", fmm_p=12)
+    >>> pol.replace(truncate_to=8).truncate_to
+    8
+    >>> hash(pol) == hash(UpdatePolicy(method="fmm", fmm_p=12))
+    True
+    >>> UpdatePolicy(method="svd")
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown method 'svd'; one of ('auto', 'direct', 'fmm', 'fast', 'pallas', 'kernel')
     """
 
     method: str = "auto"
@@ -70,7 +83,16 @@ class UpdatePolicy:
 
     def resolve_method(self, problem_n: int) -> str:
         """Concrete engine method for a problem of secular size ``problem_n``
-        (``n`` for full updates, ``rank + 1`` for truncated ones)."""
+        (``n`` for full updates, ``rank + 1`` for truncated ones).
+
+        >>> from repro.api import UpdatePolicy
+        >>> UpdatePolicy(method="fmm").resolve_method(problem_n=256)
+        'fmm'
+        >>> UpdatePolicy().resolve_method(problem_n=9)  # auto: below FMM floor
+        'direct'
+        >>> UpdatePolicy(method="pallas").resolve_method(64)  # public kernel name
+        'kernel'
+        """
         if self.method == "fast":
             raise NotImplementedError(
                 "method='fast' (Gerasoulis FAST) is the host-side numpy "

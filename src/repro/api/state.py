@@ -105,6 +105,18 @@ class SvdState:
         ``rank=None`` builds the full paper state (``u (m, m)``, ``s (m,)``,
         ``v (n, n)``; requires ``m <= n``); an integer builds the rank-r
         truncated streaming state.
+
+        >>> import numpy as np
+        >>> from repro.api import SvdState
+        >>> x = np.arange(12.0).reshape(3, 4)      # rank-2 matrix
+        >>> full = SvdState.from_dense(x)          # full paper state
+        >>> full.shape, full.rank, full.is_full
+        ((3, 4), 3, True)
+        >>> tr = SvdState.from_dense(x, rank=2)    # truncated streaming state
+        >>> tr.rank, tr.is_full
+        (2, False)
+        >>> bool(np.allclose(tr.materialize(), x, atol=1e-8))
+        True
         """
         x = jnp.asarray(x)
         if x.ndim != 2:
@@ -125,7 +137,21 @@ class SvdState:
 
     @classmethod
     def from_factors(cls, u, s, v, *, mesh: Any = None) -> "SvdState":
-        """Wrap existing factors (full or truncated, stacked or single)."""
+        """Wrap existing factors (full or truncated, stacked or single).
+
+        ``v`` is the matrix of right singular vectors as COLUMNS — pass
+        ``vt.T`` if the factors come from ``np.linalg.svd``:
+
+        >>> import numpy as np
+        >>> from repro.api import SvdState
+        >>> u, s, vt = np.linalg.svd(np.eye(3, 5))
+        >>> st = SvdState.from_factors(u, s, vt.T)
+        >>> st.shape, st.is_full
+        ((3, 5), True)
+        >>> stacked = SvdState.from_factors(u[None], s[None], vt.T[None])
+        >>> stacked.is_batched, stacked.batch    # leading axis = B problems
+        (True, 1)
+        """
         u, s, v = jnp.asarray(u), jnp.asarray(s), jnp.asarray(v)
         if u.ndim != v.ndim or u.ndim != s.ndim + 1 or u.ndim not in (2, 3):
             raise ValueError(
@@ -151,7 +177,14 @@ class SvdState:
         return dataclasses.replace(self, **kw)
 
     def truncate(self, rank: int) -> "SvdState":
-        """Keep the top-``rank`` triplets (drops eigen diagnostics)."""
+        """Keep the top-``rank`` triplets (drops eigen diagnostics).
+
+        >>> import numpy as np
+        >>> from repro.api import SvdState
+        >>> st = SvdState.from_dense(np.eye(4, 6), rank=3)
+        >>> st.truncate(2).rank
+        2
+        """
         if rank > self.rank:
             raise ValueError(f"cannot truncate rank {self.rank} state to {rank}")
         return SvdState(
@@ -162,7 +195,14 @@ class SvdState:
         )
 
     def materialize(self) -> jax.Array:
-        """Dense ``A = u @ diag(s) @ v_k^T`` (full states use ``v[:, :m]``)."""
+        """Dense ``A = u @ diag(s) @ v_k^T`` (full states use ``v[:, :m]``).
+
+        >>> import numpy as np
+        >>> from repro.api import SvdState
+        >>> x = np.array([[2.0, 0.0, 0.0], [0.0, 1.0, 0.0]])
+        >>> bool(np.allclose(SvdState.from_dense(x).materialize(), x))
+        True
+        """
         v = self.v[..., :, : self.rank]
         return jnp.einsum("...mk,...k,...nk->...mn", self.u, self.s, v)
 
@@ -177,7 +217,14 @@ def like_container(tmpl, u, s, v):
 
 def as_state(obj) -> SvdState:
     """Coerce any SVD container (``SvdState``, ``TruncatedSvd``,
-    ``SvdUpdateResult``, or a plain ``(u, s, v)`` triple) to ``SvdState``."""
+    ``SvdUpdateResult``, or a plain ``(u, s, v)`` triple) to ``SvdState``.
+
+    >>> import numpy as np
+    >>> from repro.api import as_state
+    >>> st = as_state((np.eye(3), np.ones(3), np.eye(4)[:, :3]))
+    >>> (st.m, st.n, st.rank)
+    (3, 4, 3)
+    """
     if isinstance(obj, SvdState):
         return obj
     u = getattr(obj, "u", None)

@@ -12,10 +12,11 @@ Dispatch is a pure function of *state geometry + policy*:
     no              yes                None            engine.update_truncated_batch
     no              yes                Mesh            shard_map'd truncated batch
 
-All routes resolve to the same plan-cached ``core.engine.SvdEngine``
-executables the old call shapes used (``default_engine`` keyed by the
-policy's numerics fields), so results are bit-identical to the pre-api
-paths and policy-equal calls never recompile.
+All routes resolve to shared plan-cached ``core.engine.SvdEngine``
+executables (``default_engine`` keyed by the policy's numerics fields), so
+policy-equal calls never recompile and every route is bit-identical to the
+engine executable it resolves to (golden-pinned in
+``tests/test_api_compat.py``).
 """
 
 from __future__ import annotations
@@ -59,8 +60,15 @@ def engine_from_key(policy: UpdatePolicy, problem_n: int) -> SvdEngine:
 def engine_for(policy: UpdatePolicy, state: SvdState) -> SvdEngine:
     """The shared plan-cached engine a (policy, state-geometry) pair runs on.
 
-    Two equal policies — or a policy and a legacy caller with the same
-    knobs — return the SAME engine instance, hence one plan cache.
+    Two equal policies — or any two callers with the same numerics knobs —
+    return the SAME engine instance, hence one plan cache:
+
+    >>> import numpy as np
+    >>> from repro import api
+    >>> st = api.SvdState.from_dense(np.eye(4, 6), rank=2)
+    >>> pol = api.UpdatePolicy(method="direct")
+    >>> api.engine_for(pol, st) is api.engine_for(pol.replace(truncate_to=2), st)
+    True
     """
     return engine_from_key(policy, state.n if state.is_full else state.rank + 1)
 
@@ -79,6 +87,26 @@ def update(state, a, b, policy: UpdatePolicy | None = None) -> SvdState:
     ``SvdUpdateResult`` / ``(u, s, v)`` are coerced).  ``a``: (..., m),
     ``b``: (..., n), with the leading batch axis iff the state is stacked.
     Returns an ``SvdState`` (full states keep eigen diagnostics).
+
+    >>> import numpy as np
+    >>> from repro import api
+    >>> rng = np.random.default_rng(0)
+    >>> x = rng.normal(size=(4, 6))
+    >>> st = api.SvdState.from_dense(x)               # full paper state
+    >>> a, b = rng.normal(size=4), rng.normal(size=6)
+    >>> out = api.update(st, a, b, api.UpdatePolicy(method="direct"))
+    >>> out.shape, out.rank
+    ((4, 6), 4)
+    >>> ref = np.linalg.svd(x + np.outer(a, b), compute_uv=False)
+    >>> bool(np.allclose(out.s, ref, atol=1e-10))     # matches a fresh SVD
+    True
+
+    The same entry point runs the truncated streaming route when the state
+    is truncated — geometry picks the dispatch:
+
+    >>> tr = api.SvdState.from_dense(x, rank=2)
+    >>> api.update(tr, a, b).rank                     # default policy
+    2
     """
     policy = policy if policy is not None else _DEFAULT_POLICY
     st = as_state(state)
@@ -117,6 +145,17 @@ def update_many(
     ``update``; results come back unstacked, in input order.  This is the
     generalized form of the grouped-update loops optim/serve carried by
     hand.
+
+    >>> import numpy as np
+    >>> from repro import api
+    >>> rng = np.random.default_rng(1)
+    >>> sts = [api.SvdState.from_dense(rng.normal(size=(4, 5)), rank=2)
+    ...        for _ in range(3)]
+    >>> A = [rng.normal(size=4) for _ in range(3)]
+    >>> B = [rng.normal(size=5) for _ in range(3)]
+    >>> outs = api.update_many(sts, A, B)             # one batched engine call
+    >>> len(outs), outs[0].rank
+    (3, 2)
     """
     policy = policy if policy is not None else _DEFAULT_POLICY
     sts = [as_state(s) for s in states]
@@ -163,6 +202,13 @@ def warmup(
     """AOT-compile the executable a (policy, geometry) pair will use, before
     traffic arrives (serving cold-start control).  ``rank=None`` warms the
     full route, else the truncated one; ``batch=None`` warms single-instance.
+
+    >>> import jax.numpy as jnp
+    >>> from repro import api
+    >>> pol = api.UpdatePolicy(method="direct")
+    >>> info = api.warmup(pol, m=4, n=5, rank=2, dtype=jnp.float64)
+    >>> info.entries >= 1          # the (policy, geometry) plan is cached
+    True
     """
     eng = engine_from_key(policy, n if rank is None else rank + 1)
     return eng.warmup(batch=batch, m=m, n=n, rank=rank, dtype=dtype)

@@ -31,16 +31,12 @@ from repro.core.engine import (
     EngineCacheInfo,
     SvdEngine,
     default_engine,
-    svd_update_batch,
-    svd_update_truncated_batch,
 )
 from repro.core.fmm import FmmPlan, build_plan, fmm_apply, fmm_error_bound, fmm_matvec
 from repro.core.secular import deflate, loewner_zhat, secular_solve
 from repro.core.svd_update import (
     SvdUpdateResult,
     TruncatedSvd,
-    svd_update,
-    svd_update_truncated,
 )
 
 __all__ = [
@@ -59,8 +55,6 @@ __all__ = [
     "EngineCacheInfo",
     "SvdEngine",
     "default_engine",
-    "svd_update_batch",
-    "svd_update_truncated_batch",
     "FmmPlan",
     "build_plan",
     "fmm_apply",
@@ -71,6 +65,4 @@ __all__ = [
     "secular_solve",
     "SvdUpdateResult",
     "TruncatedSvd",
-    "svd_update",
-    "svd_update_truncated",
 ]

@@ -55,7 +55,6 @@ from repro.core.svd_update import (
     TruncatedSvd,
     _svd_update_impl,
     _svd_update_truncated_impl,
-    _warn_deprecated,
 )
 
 __all__ = [
@@ -64,8 +63,6 @@ __all__ = [
     "default_engine",
     "group_indices",
     "stack_trees",
-    "svd_update_batch",
-    "svd_update_truncated_batch",
     "truncated_geometry",
     "unstack_tree",
 ]
@@ -445,43 +442,3 @@ def default_engine(
                             deflate_rtol=deflate_rtol, precision=precision)
             _default_engines[key] = eng
         return eng
-
-
-def svd_update_batch(
-    u: jax.Array,
-    s: jax.Array,
-    v: jax.Array,
-    a: jax.Array,
-    b: jax.Array,
-    *,
-    method: str = "direct",
-    fmm_p: int = 20,
-    sign_fix: bool = True,
-    mesh=None,
-    batch_axis: str = "data",
-) -> SvdUpdateResult:
-    """DEPRECATED shim — use ``repro.api.update`` on a stacked ``SvdState``
-    (or ``repro.api.update_many``) with ``UpdatePolicy(mesh=..., ...)``.
-
-    B stacked Algorithm-6.1 updates in one vmapped, plan-cached call."""
-    _warn_deprecated("repro.core.engine.svd_update_batch",
-                     "repro.api.update on a batched SvdState")
-    eng = default_engine(method, fmm_p=fmm_p, sign_fix=sign_fix)
-    return eng.update_batch(u, s, v, a, b, mesh=mesh, batch_axis=batch_axis)
-
-
-def svd_update_truncated_batch(
-    tsvd: TruncatedSvd,
-    a: jax.Array,
-    b: jax.Array,
-    *,
-    method: str = "direct",
-    mesh=None,
-    batch_axis: str = "data",
-) -> TruncatedSvd:
-    """DEPRECATED shim — use ``repro.api.update`` on a batched truncated
-    ``SvdState`` (or ``repro.api.update_many``)."""
-    _warn_deprecated("repro.core.engine.svd_update_truncated_batch",
-                     "repro.api.update on a batched truncated SvdState")
-    eng = default_engine(method)
-    return eng.update_truncated_batch(tsvd, a, b, mesh=mesh, batch_axis=batch_axis)

@@ -15,12 +15,16 @@ Additions over the paper (see DESIGN.md §1): Loewner reweighting + deflation
 live in eigh_update; a structured O(n^2 p) sign fix restores
 U_n diag(s_n) V_n[:, :m]^T ≈ A + a b^T (the paper computes left/right updates
 independently and never reconciles signs).
+
+This module is implementation: the unjitted, vmap-clean bodies
+(``_svd_update_impl`` / ``_svd_update_truncated_impl``) that
+``core.engine.SvdEngine`` jits/vmaps, plus the two result containers.  The
+public entry point for every update path is ``repro.api.update`` (DESIGN.md
+§8); the pre-api module-level call shapes were removed after the migration.
 """
 
 from __future__ import annotations
 
-import warnings
-from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -28,22 +32,7 @@ import jax.numpy as jnp
 
 from repro.core.eigh_update import apply_update, eigenvalues, make_plan, materialize_q
 
-__all__ = ["SvdUpdateResult", "TruncatedSvd", "svd_update", "svd_update_truncated"]
-
-
-def _warn_deprecated(old: str, new: str) -> None:
-    """Deprecation for the pre-``repro.api`` call shapes.
-
-    ``stacklevel=3`` attributes the warning to the *caller* of the shim (the
-    shims are thin wrappers), so the CI filter that errors on
-    DeprecationWarning from ``repro``/``examples`` modules catches internal
-    regressions while external/test callers only see a warning.
-    """
-    warnings.warn(
-        f"{old} is deprecated; use {new} instead (see repro.api)",
-        DeprecationWarning,
-        stacklevel=3,
-    )
+__all__ = ["SvdUpdateResult", "TruncatedSvd"]
 
 
 class SvdUpdateResult(NamedTuple):
@@ -179,43 +168,6 @@ def _svd_update_impl(
     return SvdUpdateResult(u=u_n, s=s_n, v=v_n, d_left=d_left_s, d_right=d_right_s)
 
 
-@partial(jax.jit, static_argnames=("method", "fmm_p", "sign_fix"))
-def _svd_update_jit(
-    u: jax.Array,
-    s: jax.Array,
-    v: jax.Array,
-    a: jax.Array,
-    b: jax.Array,
-    *,
-    method: str = "direct",
-    fmm_p: int = 20,
-    sign_fix: bool = True,
-) -> SvdUpdateResult:
-    """Jitted single-instance Algorithm 6.1 (implementation layer, no warning)."""
-    return _svd_update_impl(u, s, v, a, b, method=method, fmm_p=fmm_p, sign_fix=sign_fix)
-
-
-def svd_update(
-    u: jax.Array,
-    s: jax.Array,
-    v: jax.Array,
-    a: jax.Array,
-    b: jax.Array,
-    *,
-    method: str = "direct",
-    fmm_p: int = 20,
-    sign_fix: bool = True,
-) -> SvdUpdateResult:
-    """DEPRECATED shim — use ``repro.api.update`` with an ``UpdatePolicy``.
-
-    SVD of ``u @ diag(s) @ v[:, :m].T + a b^T``  (Algorithm 6.1).
-    ``u``: (m, m), ``s``: (m,) (any order, >= 0), ``v``: (n, n), m <= n.
-    Returned s_n is descending; reconstruction uses v[:, :m].
-    """
-    _warn_deprecated("repro.core.svd_update", "repro.api.update(SvdState, a, b, policy)")
-    return _svd_update_jit(u, s, v, a, b, method=method, fmm_p=fmm_p, sign_fix=sign_fix)
-
-
 # ---------------------------------------------------------------------------
 # Streaming truncated rank-1 SVD update (Brand augmentation + Algorithm 6.1)
 # ---------------------------------------------------------------------------
@@ -272,27 +224,3 @@ def _svd_update_truncated_impl(
     u_new = u_aug @ res.u[:, :r]
     v_new = v_aug @ res.v[:, :r]
     return TruncatedSvd(u=u_new, s=res.s[:r], v=v_new)
-
-
-@partial(jax.jit, static_argnames=("method",))
-def _svd_update_truncated_jit(
-    tsvd: TruncatedSvd, a: jax.Array, b: jax.Array, *, method: str = "direct"
-) -> TruncatedSvd:
-    """Jitted single-instance truncated update (implementation layer)."""
-    return _svd_update_truncated_impl(tsvd, a, b, method=method)
-
-
-def svd_update_truncated(
-    tsvd: TruncatedSvd, a: jax.Array, b: jax.Array, *, method: str = "direct"
-) -> TruncatedSvd:
-    """DEPRECATED shim — use ``repro.api.update`` on a truncated ``SvdState``.
-
-    Rank-r streaming SVD update:  best rank-r SVD of U S V^T + a b^T.
-    Brand-style subspace augmentation reduces the update to an (r+1)x(r+1)
-    diagonal-plus-rank-1 problem solved *exactly* by the paper's machinery
-    (svd_update with identity bases); the result is truncated back to rank r.
-    """
-    _warn_deprecated(
-        "repro.core.svd_update_truncated", "repro.api.update(SvdState, a, b, policy)"
-    )
-    return _svd_update_truncated_jit(tsvd, a, b, method=method)

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh", "batch_sharding", "batch_pad"]
+__all__ = ["make_production_mesh", "make_host_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -26,7 +26,6 @@ def make_host_mesh(data: int | None = None, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
-# DEPRECATED re-exports: ``batch_sharding`` / ``batch_pad`` moved to
-# ``repro.dist.sharding`` (the one sharding home) — import them from
-# ``repro.dist``. Kept here so existing callers keep working.
-from repro.dist.sharding import batch_pad, batch_sharding  # noqa: E402, F401
+# ``batch_sharding`` / ``batch_pad`` live in ``repro.dist.sharding`` (the
+# one sharding home, DESIGN.md §7); the transitional re-exports that used
+# to sit here were removed with the rest of the pre-api surface.

@@ -4,7 +4,8 @@ The paper-technique optimizer (DESIGN.md §3.1) as a drop-in train-loop
 policy: every 2-D parameter with min(m, n) > 4*rank keeps
 
   * a SpectralState (streaming truncated SVD of its gradient history,
-    maintained by core.svd_update_truncated — the paper's Algorithm 6.1), and
+    maintained by the api's truncated rank-1 route — the paper's Algorithm
+    6.1 on the Brand-augmented core), and
   * Adam moments in the (rank, n) projected space instead of (m, n):
     memory for moments shrinks by ~m/rank.
 
@@ -110,7 +111,7 @@ def spectral_adam_update(
 
     # Batched basis refresh: eligible leaves are grouped by geometry and
     # updated with one engine call per group (core.engine), instead of one
-    # svd_update_truncated dispatch per parameter.
+    # single truncated-update dispatch per parameter.
     elig = [i for i, s in enumerate(flat_s) if s.spectral is not None]
     new_specs: dict[int, SpectralState] = {}
     if elig:

@@ -1,10 +1,17 @@
 """Serving: LM engine (prefill/decode) + the streaming SVD-update service.
 
 ``serve.engine``      — batched token generation over ModelApi caches.
-``serve.svd_service`` — micro-batching rank-1 SVD-update service: many
-                        streams enqueue (a, b) pairs, each flush is one
-                        batched ``core.engine.SvdEngine`` call (batch axis
-                        shardable over ``launch.mesh``).
+``serve.svd_service`` — checkpointable async micro-batching rank-1
+                        SVD-update service: many streams enqueue (a, b)
+                        pairs, each flush is one batched
+                        ``core.engine.SvdEngine`` call (batch axis
+                        shardable over the policy mesh), snapshots persist
+                        through ``train.checkpoint`` (DESIGN.md §9).
 """
 
-from repro.serve.svd_service import SvdService, SvdServiceStats  # noqa: F401
+from repro.serve.svd_service import (  # noqa: F401
+    SNAPSHOT_VERSION,
+    ServiceSnapshot,
+    SvdService,
+    SvdServiceStats,
+)

@@ -1,4 +1,5 @@
-"""Streaming rank-1 SVD-update service: micro-batched engine flushes.
+"""Streaming rank-1 SVD-update service: async micro-batched engine flushes,
+checkpointable to disk (DESIGN.md §9).
 
 The serving story for the paper's machinery: many concurrent streams (one
 per user/session/adapter) each own a truncated ``repro.api.SvdState`` that
@@ -12,6 +13,7 @@ and flushes *one batched engine call* per round:
     svc.enqueue("user-1", a, b)        # cheap: just queues
     svc.enqueue("user-2", a2, b2)
     svc.flush()                        # one batched truncated update
+    svc.save("/ckpts/svd", step=1)     # versioned snapshot; survives restart
 
 * Per-stream ordering: a stream's queued pairs are applied in FIFO order;
   each flush round takes at most one pending pair per stream (they are
@@ -19,10 +21,27 @@ and flushes *one batched engine call* per round:
 * Micro-batching: ``enqueue`` auto-flushes once ``max_batch`` streams have
   a pending pair. Batches are padded up to bucket sizes (powers of two) so
   the engine's plan cache sees a handful of geometries, not every B.
+* Async double-buffered flushing: a flush round *dispatches* its batched
+  engine call and returns — stream states become JAX async futures and the
+  host keeps enqueueing while the device computes. Dispatched rounds are
+  tracked in an in-flight buffer; once ``max_in_flight`` rounds are
+  outstanding, the next round first blocks on the oldest (backpressure),
+  so the host can never run unboundedly ahead of the device.
+  ``jax.block_until_ready`` is otherwise only issued at the explicit
+  barriers: ``drain()`` and ``snapshot()``.
+* Checkpointing: ``snapshot()`` captures the whole service — every stream's
+  ``SvdState``, every pending FIFO, the policy and the batching config — as
+  a versioned ``ServiceSnapshot`` pytree; ``save``/``restore`` persist it
+  through ``train.checkpoint`` (atomic, checksummed, self-describing via
+  the aux spec). Restore is **exact**: a restored service produces bitwise
+  the same factors as one that never stopped (DESIGN.md §9 contract,
+  ``tests/test_serve_checkpoint.py``).
 * Policy: an ``UpdatePolicy`` names the numerics (method/fmm_p/...) and the
   placement — ``policy.mesh`` spreads every flush's batch axis over the
   mesh via the engine's shard_map dispatch.  A legacy ``engine=`` override
-  wins over the policy-derived engine.
+  wins over the policy-derived engine.  The mesh is *runtime placement*,
+  not state: snapshots record that a mesh was set but never serialize it —
+  pass ``mesh=`` (or a full ``policy=``) to ``restore`` on the new topology.
 * Multi-worker: per-worker shard streams combine into one global truncated
   SVD via ``merge_streams`` (the ``repro.dist.merge`` log-depth tree).
 
@@ -31,12 +50,16 @@ The LM engine (``serve.engine``) serves tokens; this serves spectra.
 
 from __future__ import annotations
 
+import dataclasses
 import threading
+import warnings
 from collections import OrderedDict, deque
 from dataclasses import dataclass
+from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api import SvdState, UpdatePolicy, as_state
 from repro.api.update import engine_from_key
@@ -49,8 +72,40 @@ from repro.core.engine import (
 )
 from repro.core.svd_update import TruncatedSvd
 from repro.dist.merge import merge_tree
+from repro.train import checkpoint as _checkpoint
 
-__all__ = ["SvdService", "SvdServiceStats"]
+__all__ = [
+    "SNAPSHOT_VERSION",
+    "ServiceSnapshot",
+    "SvdService",
+    "SvdServiceStats",
+]
+
+SNAPSHOT_VERSION = 1
+_SNAPSHOT_FORMAT = "repro.serve.ServiceSnapshot"
+
+# UpdatePolicy fields a snapshot records verbatim. ``mesh`` is deliberately
+# absent: it names live devices of THIS process; the restoring process
+# supplies its own (see module doc).
+_POLICY_SPEC_FIELDS = (
+    "method",
+    "fmm_p",
+    "sign_fix",
+    "deflate_rtol",
+    "precision",
+    "batch_axis",
+    "truncate_to",
+)
+
+
+def _policy_spec(policy: UpdatePolicy) -> dict:
+    spec = {f: getattr(policy, f) for f in _POLICY_SPEC_FIELDS}
+    spec["had_mesh"] = policy.mesh is not None
+    return spec
+
+
+def _policy_from_spec(spec: dict, mesh=None) -> UpdatePolicy:
+    return UpdatePolicy(mesh=mesh, **{f: spec[f] for f in _POLICY_SPEC_FIELDS})
 
 
 @dataclass
@@ -60,6 +115,108 @@ class SvdServiceStats:
     flushes: int = 0
     rounds: int = 0          # batched engine calls (one per geometry group)
     max_batch: int = 0       # largest batch (incl. bucket padding) dispatched
+    backpressure_waits: int = 0   # rounds that had to wait for an older one
+    in_flight_peak: int = 0       # most rounds ever outstanding at once
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["states", "pending_a", "pending_b"],
+    meta_fields=[
+        "version",
+        "stream_ids",
+        "policy_spec",
+        "max_batch",
+        "pad_to_bucket",
+        "max_in_flight",
+        "stats",
+    ],
+)
+@dataclasses.dataclass(frozen=True)
+class ServiceSnapshot:
+    """Versioned, self-describing capture of a whole ``SvdService``.
+
+    A registered pytree: the array leaves are every stream's (u, s, v)
+    factors plus its pending FIFO stacked as two ``(k_i, m)`` / ``(k_i, n)``
+    arrays (FIFO order preserved along the leading axis; ``k_i = 0`` streams
+    carry empty arrays).  Everything non-array — stream ids, the policy
+    spec, bucket/backpressure config, stats counters — is pytree metadata,
+    mirrored into the JSON ``aux`` spec so a fresh process can rebuild the
+    tree structure before it has loaded a single array (``skeleton``).
+
+    Versioning: ``version`` is written into both the pytree and the aux
+    spec; ``load`` refuses snapshots newer than this build understands and
+    upgrades older ones in place (none exist yet — v1 is the first format).
+    """
+
+    states: tuple          # tuple[SvdState, ...] — diagnostics-free, per stream
+    pending_a: tuple       # tuple[(k_i, m_i) array, ...] queued a-vectors, FIFO
+    pending_b: tuple       # tuple[(k_i, n_i) array, ...] queued b-vectors, FIFO
+    version: int = SNAPSHOT_VERSION
+    stream_ids: tuple = ()
+    policy_spec: tuple = ()   # tuple of (field, value) pairs (hashable meta)
+    max_batch: int = 64
+    pad_to_bucket: bool = True
+    max_in_flight: int = 2
+    stats: tuple = ()         # SvdServiceStats counters as (name, value) pairs
+
+    def aux(self) -> dict:
+        """The JSON spec persisted next to the arrays (checkpoint ``aux=``)."""
+        return {
+            "format": _SNAPSHOT_FORMAT,
+            "version": self.version,
+            "stream_ids": list(self.stream_ids),
+            "policy": dict(self.policy_spec),
+            "max_batch": self.max_batch,
+            "pad_to_bucket": self.pad_to_bucket,
+            "max_in_flight": self.max_in_flight,
+            "stats": dict(self.stats),
+        }
+
+    @classmethod
+    def skeleton(cls, aux: dict) -> "ServiceSnapshot":
+        """A structure-only snapshot (placeholder leaves) built from an aux
+        spec — its treedef is what ``load`` unflattens restored leaves into."""
+        n = len(aux["stream_ids"])
+        return cls(
+            states=tuple(SvdState(u=0.0, s=0.0, v=0.0) for _ in range(n)),
+            pending_a=tuple(0.0 for _ in range(n)),
+            pending_b=tuple(0.0 for _ in range(n)),
+            version=aux["version"],
+            stream_ids=tuple(aux["stream_ids"]),
+            policy_spec=tuple((k, v) for k, v in aux["policy"].items()),
+            max_batch=aux["max_batch"],
+            pad_to_bucket=aux["pad_to_bucket"],
+            max_in_flight=aux["max_in_flight"],
+            stats=tuple((k, v) for k, v in aux["stats"].items()),
+        )
+
+    def save(self, ckpt_dir, step: int, *, keep: int = 3):
+        """Persist through ``train.checkpoint`` (atomic + checksummed)."""
+        return _checkpoint.save(ckpt_dir, step, self, aux=self.aux())
+
+    @classmethod
+    def load(cls, ckpt_dir, step: int | None = None) -> tuple[int, "ServiceSnapshot"]:
+        """Load ``(step, snapshot)`` from a checkpoint directory.
+
+        Leaves come back exactly as saved (numpy, bitwise-identical — no
+        dtype cast, no device transfer); they join device computation on
+        the first flush after restore.
+        """
+        step, aux = _checkpoint.load_aux(ckpt_dir, step)
+        if aux is None or aux.get("format") != _SNAPSHOT_FORMAT:
+            raise ValueError(
+                f"checkpoint at step {step} is not a ServiceSnapshot "
+                f"(aux format: {None if aux is None else aux.get('format')!r})"
+            )
+        if aux["version"] > SNAPSHOT_VERSION:
+            raise ValueError(
+                f"snapshot version {aux['version']} is newer than this build "
+                f"understands (<= {SNAPSHOT_VERSION})"
+            )
+        _, leaves = _checkpoint.restore(ckpt_dir, None, step)
+        treedef = jax.tree.structure(cls.skeleton(aux))
+        return step, jax.tree.unflatten(treedef, leaves)
 
 
 def _bucket(b: int, cap: int) -> int:
@@ -70,8 +227,14 @@ def _bucket(b: int, cap: int) -> int:
     return min(p, max(cap, 1))
 
 
+def _is_ready(x) -> bool:
+    fn = getattr(x, "is_ready", None)
+    return True if fn is None else fn()
+
+
 class SvdService:
-    """Micro-batching front end over the batched truncated-update engine."""
+    """Async micro-batching front end over the batched truncated-update
+    engine, checkpointable via ``snapshot``/``save``/``restore``."""
 
     def __init__(
         self,
@@ -80,15 +243,23 @@ class SvdService:
         method: str = "direct",
         max_batch: int = 64,
         pad_to_bucket: bool = True,
+        max_in_flight: int = 2,
         policy: UpdatePolicy | None = None,
     ):
+        if max_in_flight < 0:
+            raise ValueError(f"max_in_flight must be >= 0; got {max_in_flight}")
         self.policy = policy if policy is not None else UpdatePolicy(method=method)
         self.engine = engine            # explicit override; None -> policy-derived
         self.max_batch = max_batch
         self.pad_to_bucket = pad_to_bucket
+        # 0 = synchronous (every round blocks before returning — the bench
+        # baseline); 1 = single buffer; 2 = double buffering (default): the
+        # device computes round k while the host assembles round k+1.
+        self.max_in_flight = max_in_flight
         self.stats = SvdServiceStats()
         self._streams: OrderedDict[str, SvdState] = OrderedDict()
         self._pending: dict[str, deque] = {}
+        self._in_flight: deque[list] = deque()   # per round: dispatched outputs
         self._lock = threading.RLock()
 
     def _engine_for(self, rank: int) -> SvdEngine:
@@ -100,13 +271,15 @@ class SvdService:
 
     def register(self, stream_id: str, state) -> None:
         """Create (or replace) a stream with its current truncated SVD
-        (any container — coerced to ``SvdState``).
+        (any container — coerced to a diagnostics-free ``SvdState``, so
+        every stream snapshots to exactly three array leaves).
 
         Replacing drops any pending pairs — they were queued against the old
         state (and may not even match the new geometry).
         """
         with self._lock:
-            self._streams[stream_id] = as_state(state)
+            st = as_state(state)
+            self._streams[stream_id] = SvdState(u=st.u, s=st.s, v=st.v)
             self._pending[stream_id] = deque()
 
     def evict(self, stream_id: str) -> SvdState:
@@ -129,7 +302,10 @@ class SvdService:
         return SvdState(u=t.u, s=t.s, v=t.v)
 
     def state(self, stream_id: str) -> SvdState:
-        """Current state — pending (unflushed) pairs are NOT yet applied."""
+        """Current state — pending (unflushed) pairs are NOT yet applied.
+
+        The returned factors may still be in-flight async futures; reading
+        their values blocks transparently (JAX async dispatch)."""
         with self._lock:
             return self._streams[stream_id]
 
@@ -182,12 +358,20 @@ class SvdService:
                 return len(self._pending[stream_id])
             return sum(len(q) for q in self._pending.values())
 
+    def in_flight(self) -> int:
+        """Dispatched-but-unretired flush rounds (after reaping ready ones)."""
+        with self._lock:
+            self._reap_ready()
+            return len(self._in_flight)
+
     # -- the hot path -------------------------------------------------------
 
     def enqueue(self, stream_id: str, a: jax.Array, b: jax.Array) -> None:
         """Queue one rank-1 perturbation ``a b^T`` for a stream.
 
         Auto-flushes when ``max_batch`` streams have a pending head pair.
+        The flush only *dispatches* device work (async); enqueue never waits
+        for it unless the in-flight buffer is full (backpressure).
         """
         with self._lock:
             if stream_id not in self._streams:
@@ -208,24 +392,58 @@ class SvdService:
                 self._flush_round()
 
     def flush(self) -> int:
-        """Apply ALL pending pairs (possibly several rounds); returns the
-        number of updates applied."""
+        """Dispatch ALL pending pairs (possibly several rounds); returns the
+        number of updates applied.  Rounds are dispatched asynchronously —
+        use ``drain()`` for a completion barrier."""
         with self._lock:
             applied = 0
             while any(self._pending.values()):
                 applied += self._flush_round()
             return applied
 
+    def drain(self) -> int:
+        """Flush everything, then block until all dispatched work is done
+        (the shutdown / handoff barrier). Returns the number applied."""
+        with self._lock:
+            applied = self.flush()
+            self._barrier()
+            return applied
+
+    # -- in-flight buffer management ----------------------------------------
+
+    def _reap_ready(self) -> None:
+        """Retire finished rounds without blocking (oldest-first)."""
+        while self._in_flight and all(_is_ready(x) for x in self._in_flight[0]):
+            self._in_flight.popleft()
+
+    def _retire_oldest(self) -> None:
+        jax.block_until_ready(self._in_flight.popleft())
+
+    def _barrier(self) -> None:
+        """Block until every dispatched round AND every stream state is
+        concrete — the only place (besides backpressure) the service waits
+        on the device."""
+        while self._in_flight:
+            self._retire_oldest()
+        jax.block_until_ready(list(self._streams.values()))
+
     def _flush_round(self) -> int:
         """One round: at most one pending pair per stream, grouped by
-        geometry, one batched engine call per group."""
+        geometry, one batched engine call per group — dispatched async."""
         round_ids = [sid for sid, q in self._pending.items() if q]
         if not round_ids:
             return 0
 
+        # Backpressure: bound how far the host can run ahead of the device.
+        self._reap_ready()
+        while self.max_in_flight > 0 and len(self._in_flight) >= self.max_in_flight:
+            self._retire_oldest()
+            self.stats.backpressure_waits += 1
+
         keys = [truncated_geometry(self._streams[sid]) for sid in round_ids]
 
         applied = 0
+        round_outputs: list = []
         for (m, n, r, dt), idxs in group_indices(keys).items():
             sids = [round_ids[i] for i in idxs]
             # peek, don't pop: if the engine call raises (first-compile OOM,
@@ -263,10 +481,119 @@ class SvdService:
                 t = unstack_tree(out, j)
                 self._streams[sid] = SvdState(u=t.u, s=t.s, v=t.v)
                 self._pending[sid].popleft()
+            round_outputs.extend(jax.tree.leaves(out))
             applied += bsz
             self.stats.rounds += 1
             self.stats.max_batch = max(self.stats.max_batch, bsz + pad)
 
+        if self.max_in_flight == 0:
+            jax.block_until_ready(round_outputs)       # synchronous mode
+        else:
+            self._in_flight.append(round_outputs)
+            self.stats.in_flight_peak = max(
+                self.stats.in_flight_peak, len(self._in_flight)
+            )
         self.stats.flushes += 1
         self.stats.applied += applied
         return applied
+
+    # -- checkpointing ------------------------------------------------------
+
+    def snapshot(self) -> ServiceSnapshot:
+        """Capture the whole service as a versioned pytree.
+
+        This is a barrier: in-flight rounds are retired and every stream
+        state is forced concrete first, so the snapshot is a consistent
+        point on every stream's timeline — states as of all *flushed*
+        updates, pending FIFOs holding exactly the unflushed ones.
+        """
+        with self._lock:
+            self._barrier()
+            states, pend_a, pend_b = [], [], []
+            for sid, st in self._streams.items():
+                states.append(st)
+                queue = self._pending[sid]
+                if queue:
+                    pend_a.append(jnp.stack([jnp.asarray(a) for a, _ in queue]))
+                    pend_b.append(jnp.stack([jnp.asarray(b) for _, b in queue]))
+                else:
+                    pend_a.append(np.zeros((0, st.m), st.u.dtype))
+                    pend_b.append(np.zeros((0, st.n), st.v.dtype))
+            return ServiceSnapshot(
+                states=tuple(states),
+                pending_a=tuple(pend_a),
+                pending_b=tuple(pend_b),
+                version=SNAPSHOT_VERSION,
+                stream_ids=tuple(self._streams),
+                policy_spec=tuple(_policy_spec(self.policy).items()),
+                max_batch=self.max_batch,
+                pad_to_bucket=self.pad_to_bucket,
+                max_in_flight=self.max_in_flight,
+                stats=tuple(dataclasses.asdict(self.stats).items()),
+            )
+
+    def save(self, ckpt_dir, step: int, *, keep: int = 3):
+        """``snapshot()`` + atomic write through ``train.checkpoint``."""
+        return self.snapshot().save(ckpt_dir, step, keep=keep)
+
+    @classmethod
+    def from_snapshot(
+        cls,
+        snap: ServiceSnapshot,
+        *,
+        mesh=None,
+        engine: SvdEngine | None = None,
+        policy: UpdatePolicy | None = None,
+    ) -> "SvdService":
+        """Rebuild a service from a snapshot.
+
+        ``policy`` (full override) or ``mesh`` (grafted onto the recorded
+        policy spec) re-establish placement on the restoring topology;
+        with neither, the recorded numerics run unsharded.
+        """
+        spec = dict(snap.policy_spec)
+        if policy is None:
+            if spec.get("had_mesh") and mesh is None:
+                warnings.warn(
+                    "snapshot was taken under a mesh-sharded policy but "
+                    "restore got no mesh= (and no policy=): flushes will run "
+                    "unsharded on this process",
+                    stacklevel=2,
+                )
+            policy = _policy_from_spec(spec, mesh=mesh)
+        svc = cls(
+            engine=engine,
+            max_batch=snap.max_batch,
+            pad_to_bucket=snap.pad_to_bucket,
+            max_in_flight=snap.max_in_flight,
+            policy=policy,
+        )
+        for sid, st, pa, pb in zip(
+            snap.stream_ids, snap.states, snap.pending_a, snap.pending_b
+        ):
+            svc._streams[sid] = SvdState(u=st.u, s=st.s, v=st.v)
+            svc._pending[sid] = deque(
+                (pa[i], pb[i]) for i in range(np.asarray(pa).shape[0])
+            )
+        svc.stats = SvdServiceStats(**dict(snap.stats))
+        return svc
+
+    @classmethod
+    def restore(
+        cls,
+        ckpt_dir,
+        *,
+        step: int | None = None,
+        mesh=None,
+        engine: SvdEngine | None = None,
+        policy: UpdatePolicy | None = None,
+    ) -> tuple[int, "SvdService"]:
+        """Load the latest (or ``step``-th) snapshot and rebuild the service.
+
+        Returns ``(step, service)``.  Restore-exactness contract: the
+        restored service, fed the same post-snapshot traffic, produces
+        bitwise-identical factors to the service that never stopped
+        (DESIGN.md §9; kill-and-resume test in test_serve_checkpoint.py).
+        """
+        step, snap = ServiceSnapshot.load(ckpt_dir, step)
+        return step, cls.from_snapshot(snap, mesh=mesh, engine=engine, policy=policy)

@@ -4,6 +4,7 @@ Layout:
   <dir>/step_000123/
       arrays.npz          (flattened pytree leaves)
       treedef.json        (pytree structure + leaf names)
+      aux.json            (optional caller-owned JSON payload, see ``aux=``)
       MANIFEST.json       (step, written_at, leaf checksums, COMPLETE flag)
   <dir>/latest            (text file with the last COMPLETE step)
 
@@ -13,6 +14,15 @@ Guarantees:
 * restore validates the manifest checksum set before loading.
 * checkpoints are mesh-independent (full arrays gathered to host), so a
   restart may use a different device count — elastic scaling (train.elastic).
+* leaves round-trip **bitwise**: ``np.savez`` preserves dtype and bits, and
+  a structure-free restore (``tree_like=None``) hands them back uncast — the
+  foundation of the serving layer's restore-exactness contract (DESIGN §9).
+
+Self-describing checkpoints: a caller that cannot know its pytree structure
+ahead of restore (e.g. ``serve.SvdService`` — stream count and queue depths
+are runtime state) saves a JSON ``aux`` spec alongside the arrays, then
+restores with ``load_aux`` + ``restore(dir, None)`` and rebuilds the
+structure from the spec.
 """
 
 from __future__ import annotations
@@ -27,7 +37,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "available_steps"]
+__all__ = ["save", "restore", "load_aux", "latest_step", "available_steps"]
 
 
 def _flatten_with_names(tree):
@@ -39,7 +49,14 @@ def _flatten_with_names(tree):
     return names, leaves, jax.tree.structure(tree)
 
 
-def save(ckpt_dir: str | Path, step: int, tree, *, keep: int = 3) -> Path:
+def save(ckpt_dir: str | Path, step: int, tree, *, keep: int = 3, aux=None) -> Path:
+    """Atomically write ``tree`` (any pytree) as checkpoint ``step``.
+
+    ``aux``: optional JSON-serializable payload written to ``aux.json`` and
+    covered by the manifest checksum set — a structure spec, config dump, or
+    any metadata the restoring process needs before it can rebuild the tree
+    (read it back with ``load_aux``).
+    """
     ckpt_dir = Path(ckpt_dir)
     step_dir = ckpt_dir / f"step_{step:09d}"
     tmp_dir = ckpt_dir / f".tmp_step_{step:09d}"
@@ -54,6 +71,10 @@ def save(ckpt_dir: str | Path, step: int, tree, *, keep: int = 3) -> Path:
     checksums = {}
     with open(tmp_dir / "arrays.npz", "rb") as f:
         checksums["arrays.npz"] = hashlib.sha256(f.read()).hexdigest()
+    if aux is not None:
+        aux_bytes = json.dumps(aux).encode()
+        (tmp_dir / "aux.json").write_bytes(aux_bytes)
+        checksums["aux.json"] = hashlib.sha256(aux_bytes).hexdigest()
 
     (tmp_dir / "treedef.json").write_text(json.dumps({"names": names}))
     manifest = {
@@ -114,13 +135,42 @@ def latest_step(ckpt_dir: str | Path) -> int | None:
     return max(steps) if steps else None
 
 
-def restore(ckpt_dir: str | Path, tree_like, step: int | None = None):
-    """Load into the structure of ``tree_like``; returns (step, tree)."""
-    ckpt_dir = Path(ckpt_dir)
+def _resolve_step(ckpt_dir: Path, step: int | None) -> int:
     if step is None:
         step = latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no complete checkpoint under {ckpt_dir}")
+    return step
+
+
+def load_aux(ckpt_dir: str | Path, step: int | None = None):
+    """Read back the checksum-validated ``aux`` payload of a checkpoint.
+
+    Returns ``(step, aux)``; ``aux`` is ``None`` when the checkpoint was
+    written without one."""
+    ckpt_dir = Path(ckpt_dir)
+    step = _resolve_step(ckpt_dir, step)
+    step_dir = ckpt_dir / f"step_{step:09d}"
+    manifest = json.loads((step_dir / "MANIFEST.json").read_text())
+    expected = manifest["checksums"].get("aux.json")
+    if expected is None:
+        return step, None
+    aux_bytes = (step_dir / "aux.json").read_bytes()
+    if hashlib.sha256(aux_bytes).hexdigest() != expected:
+        raise IOError(f"checkpoint {step_dir} failed aux.json checksum validation")
+    return step, json.loads(aux_bytes)
+
+
+def restore(ckpt_dir: str | Path, tree_like=None, step: int | None = None):
+    """Load a checkpoint; returns ``(step, tree)``.
+
+    With ``tree_like`` the leaves are unflattened into its structure (cast
+    to each target leaf's dtype).  With ``tree_like=None`` the raw leaves
+    come back as a flat list in saved order, **uncast and bitwise-exact** —
+    the caller rebuilds structure itself (see ``load_aux`` / module doc).
+    """
+    ckpt_dir = Path(ckpt_dir)
+    step = _resolve_step(ckpt_dir, step)
     step_dir = ckpt_dir / f"step_{step:09d}"
 
     manifest = json.loads((step_dir / "MANIFEST.json").read_text())
@@ -131,6 +181,8 @@ def restore(ckpt_dir: str | Path, tree_like, step: int | None = None):
 
     data = np.load(step_dir / "arrays.npz")
     leaves = [data[f"leaf_{i}"] for i in range(manifest["n_leaves"])]
+    if tree_like is None:
+        return step, leaves
     flat_like, treedef = jax.tree.flatten(tree_like)
     if len(flat_like) != len(leaves):
         raise ValueError(

@@ -1,10 +1,19 @@
-"""Golden equivalence: the ``repro.api`` surface reproduces the deprecated
-call shapes EXACTLY (allclose rtol=0 atol=0 in f64) on every dispatch route
-— single, batched, truncated, truncated-batched, Pallas-kernel, and
-mesh-sharded on 8 fake devices — and the old shapes warn.
+"""Golden route pins for the ``repro.api`` surface.
 
-This is the ONE test module that intentionally exercises the deprecated
-surface (CI errors on DeprecationWarning raised from repro/examples code)."""
+Historically this module proved the api bit-identical to the four deprecated
+pre-api call shapes (``svd_update``, ``svd_update_truncated``,
+``svd_update_batch``, ``svd_update_truncated_batch``).  Those shims are now
+DELETED; the goldens pin the api routes directly instead:
+
+* every dispatch route is bitwise (allclose rtol=0 atol=0, f64) against the
+  plan-cached ``core.engine`` executable it must resolve to — single,
+  batched, truncated, truncated-batched, Pallas-kernel, and mesh-sharded on
+  8 fake devices;
+* the batched routes are additionally pinned against a loop of single
+  ``api.update`` calls (vmap == loop, the original acceptance criterion);
+* the four deprecated names are asserted GONE from every module that used
+  to carry them.
+"""
 
 import json
 import subprocess
@@ -20,18 +29,14 @@ import jax.numpy as jnp
 
 from repro import api
 from repro.api import SvdState, UpdatePolicy
-from repro.core.engine import svd_update_batch, svd_update_truncated_batch
-from repro.core.svd_update import (
-    TruncatedSvd,
-    svd_update,
-    svd_update_truncated,
-)
+from repro.core.engine import default_engine
+from repro.core.svd_update import TruncatedSvd
 
 RNG = np.random.default_rng(3)
 REPO = Path(__file__).resolve().parent.parent
 
-# (policy method, legacy engine method) pairs — "pallas" is the public name
-# of the legacy "kernel" route
+# (policy method, engine method) pairs — "pallas" is the public name of the
+# engine's "kernel" route
 ROUTES = [("direct", "direct"), ("fmm", "fmm"), ("pallas", "kernel")]
 
 
@@ -63,15 +68,14 @@ def _exact(x, y):
 
 
 # ---------------------------------------------------------------------------
-# the four dispatch routes, bitwise vs the old call shapes
+# the four dispatch routes, bitwise vs the engine executables they resolve to
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("method,legacy", ROUTES)
-def test_single_full_route_exact(method, legacy):
+@pytest.mark.parametrize("method,eng_method", ROUTES)
+def test_single_full_route_exact(method, eng_method):
     u, s, v, a, b = _problem(12, 16)
-    with pytest.warns(DeprecationWarning, match="svd_update"):
-        ref = svd_update(u, s, v, a, b, method=legacy)
+    ref = default_engine(eng_method).update(u, s, v, a, b)
     out = api.update(SvdState.from_factors(u, s, v), a, b,
                      UpdatePolicy(method=method))
     _exact(out.u, ref.u)
@@ -81,11 +85,10 @@ def test_single_full_route_exact(method, legacy):
     _exact(out.d_right, ref.d_right)
 
 
-@pytest.mark.parametrize("method,legacy", ROUTES)
-def test_batched_full_route_exact(method, legacy):
+@pytest.mark.parametrize("method,eng_method", ROUTES)
+def test_batched_full_route_exact(method, eng_method):
     u, s, v, a, b = _stacked_problem(6, 10, 13)
-    with pytest.warns(DeprecationWarning, match="svd_update_batch"):
-        ref = svd_update_batch(u, s, v, a, b, method=legacy)
+    ref = default_engine(eng_method).update_batch(u, s, v, a, b)
     stacked = SvdState.from_factors(u, s, v)
     out = api.update(stacked, a, b, UpdatePolicy(method=method))
     _exact(out.u, ref.u)
@@ -93,12 +96,28 @@ def test_batched_full_route_exact(method, legacy):
     _exact(out.v, ref.v)
 
 
+def test_batched_full_route_matches_loop_of_singles():
+    """vmap == loop through the SAME surface: the stacked dispatch must agree
+    with per-item api.update calls (degenerate trailing v columns excluded —
+    they are an arbitrary null-space basis across differently-compiled
+    paths; compare u, s, and v[:, :m])."""
+    b_sz, m, n = 5, 10, 13
+    u, s, v, a, b = _stacked_problem(b_sz, m, n)
+    pol = UpdatePolicy(method="direct")
+    out = api.update(SvdState.from_factors(u, s, v), a, b, pol)
+    for i in range(b_sz):
+        ref = api.update(SvdState.from_factors(u[i], s[i], v[i]), a[i], b[i], pol)
+        np.testing.assert_allclose(np.asarray(out.u[i]), np.asarray(ref.u), atol=1e-10)
+        np.testing.assert_allclose(np.asarray(out.s[i]), np.asarray(ref.s), atol=1e-10)
+        np.testing.assert_allclose(np.asarray(out.v[i][:, :m]),
+                                   np.asarray(ref.v[:, :m]), atol=1e-10)
+
+
 def test_truncated_single_route_exact():
     t = _trunc(14, 18, 4)
     a = jnp.asarray(RNG.normal(size=14))
     b = jnp.asarray(RNG.normal(size=18))
-    with pytest.warns(DeprecationWarning, match="svd_update_truncated"):
-        ref = svd_update_truncated(t, a, b)
+    ref = default_engine("direct").update_truncated(t, a, b)
     out = api.update(t, a, b, UpdatePolicy(method="direct"))
     _exact(out.u, ref.u)
     _exact(out.s, ref.s)
@@ -111,16 +130,23 @@ def test_truncated_batched_route_exact():
     t = jax.tree.map(lambda *xs: jnp.stack(xs), *singles)
     a = jnp.asarray(RNG.normal(size=(b_sz, m)))
     b = jnp.asarray(RNG.normal(size=(b_sz, n)))
-    with pytest.warns(DeprecationWarning, match="svd_update_truncated_batch"):
-        ref = svd_update_truncated_batch(t, a, b)
+    ref = default_engine("direct").update_truncated_batch(t, a, b)
     out = api.update(api.as_state(t), a, b, UpdatePolicy(method="direct"))
     _exact(out.u, ref.u)
     _exact(out.s, ref.s)
     _exact(out.v, ref.v)
+    # and vmap == loop of truncated singles through the api
+    pol = UpdatePolicy(method="direct")
+    for i in range(b_sz):
+        ref_i = api.update(singles[i], a[i], b[i], pol)
+        np.testing.assert_allclose(np.asarray(out.s[i]), np.asarray(ref_i.s),
+                                   atol=1e-10)
+        np.testing.assert_allclose(np.asarray(out.u[i]), np.asarray(ref_i.u),
+                                   atol=1e-10)
 
 
 def test_mesh_sharded_route_exact_on_8_devices():
-    """api.update with UpdatePolicy(mesh=...) == the legacy engine mesh path,
+    """api.update with UpdatePolicy(mesh=...) == the engine mesh path,
     exactly, for full-batched and truncated-batched dispatch (8 fake CPU
     devices; subprocess because the device count must precede jax init)."""
     script = textwrap.dedent("""
@@ -143,7 +169,7 @@ def test_mesh_sharded_route_exact_on_8_devices():
         args = tuple(jnp.asarray(x) for x in (us, ss, vs, a, b))
 
         pol = api.UpdatePolicy(method="direct", mesh=mesh, batch_axis="data")
-        eng = default_engine("direct")   # the engine the old path used
+        eng = default_engine("direct")   # the engine the policy resolves to
 
         ref = eng.update_batch(*args, mesh=mesh, batch_axis="data")
         out = api.update(api.SvdState.from_factors(*args[:3]), args[3], args[4], pol)
@@ -178,30 +204,33 @@ def test_mesh_sharded_route_exact_on_8_devices():
 
 
 # ---------------------------------------------------------------------------
-# shims: exist, warn, and share the api's engines (one plan cache)
+# the deprecated surface is GONE; the api resolves to the shared engines
 # ---------------------------------------------------------------------------
 
 
-def test_all_four_legacy_shapes_warn():
-    u, s, v, a, b = _problem(8, 10)
-    with pytest.warns(DeprecationWarning):
-        svd_update(u, s, v, a, b)
-    t = _trunc(8, 10, 3)
-    with pytest.warns(DeprecationWarning):
-        svd_update_truncated(t, a, b)
-    ub, sb, vb, ab, bb = _stacked_problem(2, 8, 10)
-    with pytest.warns(DeprecationWarning):
-        svd_update_batch(ub, sb, vb, ab, bb)
-    tb = jax.tree.map(lambda *xs: jnp.stack(xs), t, _trunc(8, 10, 3))
-    with pytest.warns(DeprecationWarning):
-        svd_update_truncated_batch(tb, jnp.stack([a, a]), jnp.stack([b, b]))
+def test_deprecated_call_shapes_are_deleted():
+    """The four pre-api shapes must not come back (ISSUE 4 acceptance)."""
+    import types
+
+    import repro.core as core
+    import repro.core.engine as engine_mod
+    import repro.core.svd_update as svd_mod
+
+    for name in ("svd_update", "svd_update_truncated",
+                 "svd_update_batch", "svd_update_truncated_batch"):
+        for mod in (core, engine_mod, svd_mod):
+            attr = getattr(mod, name, None)
+            # repro.core.svd_update the *submodule* is fine; the callable is not
+            assert attr is None or isinstance(attr, types.ModuleType), (
+                f"{mod.__name__}.{name} resurfaced"
+            )
+        assert name not in core.__all__
+    assert not hasattr(svd_mod, "_warn_deprecated")
 
 
-def test_legacy_and_api_share_one_engine():
-    """The old facades and the api resolve policy-equal configurations to the
-    SAME default engine — one plan cache across old and new callers."""
-    from repro.core.engine import default_engine
-
+def test_api_resolves_to_shared_engine():
+    """Policy-equal configurations resolve to the SAME default engine — one
+    plan cache across every caller."""
     st = api.as_state(_trunc(8, 10, 3))
     assert api.engine_for(UpdatePolicy(method="direct"), st) is default_engine("direct")
     assert api.engine_for(

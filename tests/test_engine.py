@@ -1,7 +1,7 @@
 """Batch-first engine (core.engine) + micro-batching service (serve.svd_service).
 
 Acceptance-criteria coverage: batched results match a loop of single
-`svd_update` calls across methods, plan-cache hit behavior, and the
+``api.update`` calls across methods, plan-cache hit behavior, and the
 svd_service micro-batching round trip.
 """
 
@@ -11,9 +11,22 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import SvdEngine, default_engine, svd_update_batch
-from repro.core.svd_update import TruncatedSvd, svd_update, svd_update_truncated
+from repro import api
+from repro.api import SvdState, UpdatePolicy
+from repro.core.engine import SvdEngine, default_engine
+from repro.core.svd_update import TruncatedSvd
 from repro.serve.svd_service import SvdService
+
+
+def svd_update(u, s, v, a, b, *, method="direct"):
+    """Single full update via the api surface (per-item reference)."""
+    return api.update(SvdState.from_factors(u, s, v), a, b,
+                      UpdatePolicy(method=method))
+
+
+def svd_update_truncated(tsvd, a, b):
+    """Single truncated update via the api surface (per-item reference)."""
+    return api.update(tsvd, a, b, UpdatePolicy(method="direct"))
 
 RNG = np.random.default_rng(11)
 
@@ -54,7 +67,7 @@ def test_batch_fmm_geometry_matches_loop(method):
     """Above the FMM size floor the batched tree plans must agree too."""
     b, m, n = 3, 100, 128
     u, s, v, a, bb = _stacked_problem(b, m, n)
-    res = svd_update_batch(u, s, v, a, bb, method=method)
+    res = default_engine(method).update_batch(u, s, v, a, bb)
     for i in range(b):
         ref = svd_update(u[i], s[i], v[i], a[i], bb[i], method=method)
         assert _rel_err(res.s[i], ref.s) < 1e-5
@@ -150,9 +163,10 @@ def test_plan_cache_warmup_precompiles():
 
 
 def test_batch_sharding_spreads_engine_batch():
-    """Engine with launch.mesh.batch_sharding: results unchanged, inputs
+    """Engine with dist.batch_sharding: results unchanged, inputs
     constrained to the mesh (single-device CPU mesh — semantics, not perf)."""
-    from repro.launch.mesh import batch_pad, batch_sharding, make_host_mesh
+    from repro.dist.sharding import batch_pad, batch_sharding
+    from repro.launch.mesh import make_host_mesh
 
     mesh = make_host_mesh(data=1, model=1)
     sh = batch_sharding(mesh, "data")

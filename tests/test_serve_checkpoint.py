@@ -1,0 +1,360 @@
+"""Checkpointable streams: ``ServiceSnapshot`` round-trips and the DESIGN §9
+restore-exactness contract.
+
+Covers: snapshot round-trips under truncated, batched and mesh-sharded
+policies (8 fake devices), restore-after-partial-flush, the async
+double-buffer (async == sync bitwise, bounded in-flight), snapshot
+versioning, and the kill-and-resume acceptance test where save and restore
+happen in DIFFERENT processes and the resumed run must be bitwise identical
+(rtol=0/atol=0, f64) to an uninterrupted one.
+"""
+
+import dataclasses
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import SvdState, UpdatePolicy
+from repro.core.svd_update import TruncatedSvd
+from repro.serve import SNAPSHOT_VERSION, ServiceSnapshot, SvdService
+from repro.train import checkpoint as ckpt
+
+REPO = Path(__file__).resolve().parent.parent
+RNG = np.random.default_rng(5)
+
+
+def _fresh(m, n, r, rng=RNG):
+    return TruncatedSvd(
+        jnp.asarray(np.linalg.qr(rng.normal(size=(m, r)))[0]),
+        jnp.asarray(np.sort(np.abs(rng.normal(size=r)))[::-1].copy()),
+        jnp.asarray(np.linalg.qr(rng.normal(size=(n, r)))[0]),
+    )
+
+
+def _traffic(n_events, streams, m, n, rng):
+    return [
+        (f"s{i % streams}",
+         jnp.asarray(rng.normal(size=m)), jnp.asarray(rng.normal(size=n)))
+        for i in range(n_events)
+    ]
+
+
+def _feed(svc, events):
+    for sid, a, b in events:
+        svc.enqueue(sid, a, b)
+
+
+def _exact_states(svc_a, svc_b, stream_ids):
+    for sid in stream_ids:
+        for f in ("u", "s", "v"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(svc_a.state(sid), f)),
+                np.asarray(getattr(svc_b.state(sid), f)),
+                rtol=0, atol=0,
+            )
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-layer primitives the snapshot relies on
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_aux_roundtrip_and_flat_restore(tmp_path):
+    """aux payloads are persisted, checksummed and returned; tree_like=None
+    hands leaves back uncast and bitwise."""
+    tree = {"a": np.arange(6.0).reshape(2, 3), "b": np.float32([1.5, -2.5])}
+    aux = {"kind": "demo", "ids": ["x", "y"], "n": 2}
+    ckpt.save(tmp_path, 3, tree, aux=aux)
+    step, got = ckpt.load_aux(tmp_path)
+    assert (step, got) == (3, aux)
+    step, leaves = ckpt.restore(tmp_path, None)
+    assert step == 3 and len(leaves) == 2
+    # flat order follows the pytree flatten order; dtypes/bits preserved
+    flat = jax.tree.leaves(tree)
+    for lv, ref in zip(leaves, flat):
+        assert lv.dtype == ref.dtype
+        np.testing.assert_array_equal(lv, ref)
+    # checkpoints without aux report None
+    ckpt.save(tmp_path, 4, tree)
+    assert ckpt.load_aux(tmp_path, 4) == (4, None)
+
+
+# ---------------------------------------------------------------------------
+# snapshot round-trips (in-process; fresh-process is the subprocess test)
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_roundtrip_truncated_policy(tmp_path):
+    """Default truncated policy: snapshot mid-run (pending FIFOs non-empty),
+    restore into a fresh service, finish — bitwise vs uninterrupted."""
+    m, n, r, streams = 8, 10, 3, 4
+    rng = np.random.default_rng(0)
+    init = [_fresh(m, n, r, rng) for _ in range(streams)]
+    events = _traffic(19, streams, m, n, rng)
+    ids = [f"s{i}" for i in range(streams)]
+
+    ref = SvdService(max_batch=streams)
+    for sid, t in zip(ids, init):
+        ref.register(sid, t)
+    _feed(ref, events)
+    ref.drain()
+
+    svc = SvdService(max_batch=streams)
+    for sid, t in zip(ids, init):
+        svc.register(sid, t)
+    split = 10
+    _feed(svc, events[:split])
+    assert svc.pending() > 0          # mid-run: unflushed pairs exist
+    svc.save(tmp_path, step=split)
+
+    step, restored = SvdService.restore(tmp_path)
+    assert step == split
+    assert restored.pending() == svc.pending()
+    assert restored.stats.applied == svc.stats.applied
+    _feed(restored, events[split:])
+    restored.drain()
+    _exact_states(ref, restored, ids)
+
+
+def test_snapshot_roundtrip_batched_mixed_geometry(tmp_path):
+    """Batched flush rounds across two geometries; snapshot + resume stays
+    bitwise, per geometry group."""
+    rng = np.random.default_rng(1)
+    geos = [(8, 10, 3)] * 3 + [(12, 9, 4)] * 3
+    ids = [f"g{i}" for i in range(len(geos))]
+    init = [_fresh(m, n, r, rng) for (m, n, r) in geos]
+    events = []
+    for round_i in range(5):
+        for sid, (m, n, _) in zip(ids, geos):
+            events.append((sid, jnp.asarray(rng.normal(size=m)),
+                           jnp.asarray(rng.normal(size=n))))
+
+    def build():
+        svc = SvdService(max_batch=4)     # auto-flush kicks in mid-round
+        for sid, t in zip(ids, init):
+            svc.register(sid, t)
+        return svc
+
+    ref = build()
+    _feed(ref, events)
+    ref.drain()
+    assert ref.stats.max_batch >= 4       # batching actually happened
+
+    svc = build()
+    split = 17
+    _feed(svc, events[:split])
+    svc.save(tmp_path, step=split)
+    _, restored = SvdService.restore(tmp_path)
+    _feed(restored, events[split:])
+    restored.drain()
+    _exact_states(ref, restored, ids)
+
+
+def test_restore_after_partial_flush(tmp_path):
+    """Snapshot taken when some pairs flushed and others still queued: the
+    states must reflect exactly the flushed prefix, the FIFOs exactly the
+    unflushed suffix."""
+    m, n, r, streams = 8, 9, 3, 4
+    rng = np.random.default_rng(2)
+    init = [_fresh(m, n, r, rng) for _ in range(streams)]
+    ids = [f"s{i}" for i in range(streams)]
+
+    svc = SvdService(max_batch=streams)   # one auto-flush per full round
+    for sid, t in zip(ids, init):
+        svc.register(sid, t)
+    full_round = _traffic(streams, streams, m, n, rng)
+    _feed(svc, full_round)                # round 1: auto-flushed
+    assert svc.stats.flushes == 1
+    tail = _traffic(2, streams, m, n, rng)
+    _feed(svc, tail)                      # s0, s1 queue a second pair
+    assert svc.pending() == 2
+
+    svc.save(tmp_path, step=1)
+    _, restored = SvdService.restore(tmp_path)
+    assert restored.pending("s0") == 1 and restored.pending("s1") == 1
+    assert restored.pending("s2") == 0 and restored.pending("s3") == 0
+    # flushed prefix is already in the restored states...
+    _exact_states(svc, restored, ids)
+    # ...and the queued suffix replays identically on both sides
+    assert svc.flush() == restored.flush() == 2
+    _exact_states(svc, restored, ids)
+
+
+def test_snapshot_version_guard(tmp_path):
+    svc = SvdService(max_batch=2)
+    svc.register("x", _fresh(6, 7, 2))
+    snap = svc.snapshot()
+    assert snap.version == SNAPSHOT_VERSION
+    future = dataclasses.replace(snap, version=SNAPSHOT_VERSION + 1)
+    future.save(tmp_path, step=1)
+    with pytest.raises(ValueError, match="newer"):
+        ServiceSnapshot.load(tmp_path)
+    # a non-snapshot checkpoint is refused up front
+    ckpt.save(tmp_path, 2, {"w": np.ones(3)})
+    with pytest.raises(ValueError, match="not a ServiceSnapshot"):
+        ServiceSnapshot.load(tmp_path, 2)
+
+
+def test_snapshot_is_a_barrier_and_preserves_stats(tmp_path):
+    m, n, r, streams = 8, 10, 3, 4
+    rng = np.random.default_rng(3)
+    svc = SvdService(max_batch=streams, max_in_flight=4)
+    for i in range(streams):
+        svc.register(f"s{i}", _fresh(m, n, r, rng))
+    _feed(svc, _traffic(streams * 3, streams, m, n, rng))
+    snap = svc.snapshot()
+    assert svc.in_flight() == 0           # barrier retired everything
+    stats = dict(snap.stats)
+    assert stats["applied"] == streams * 3
+    assert stats["flushes"] == svc.stats.flushes
+    # restored service continues the counters, not resets them
+    restored = SvdService.from_snapshot(snap)
+    assert restored.stats.applied == streams * 3
+
+
+# ---------------------------------------------------------------------------
+# the async double buffer
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("max_in_flight", [0, 1, 4])
+def test_async_modes_bitwise_equal(max_in_flight):
+    """Sync (0), single-buffer (1) and deep async (4) pipelines are the same
+    computation — results must be bitwise identical."""
+    m, n, r, streams = 8, 10, 3, 4
+    rng = np.random.default_rng(4)
+    init = [_fresh(m, n, r, rng) for _ in range(streams)]
+    events = _traffic(16, streams, m, n, rng)
+    ids = [f"s{i}" for i in range(streams)]
+
+    def run(mif):
+        svc = SvdService(max_batch=streams, max_in_flight=mif)
+        for sid, t in zip(ids, init):
+            svc.register(sid, t)
+        _feed(svc, events)
+        svc.drain()
+        return svc
+
+    ref = run(0)                          # fully synchronous baseline
+    got = run(max_in_flight)
+    assert got.stats.in_flight_peak <= max(max_in_flight, 0)
+    _exact_states(ref, got, ids)
+
+
+def test_backpressure_bounds_in_flight():
+    m, n, r, streams = 8, 10, 3, 4
+    rng = np.random.default_rng(6)
+    svc = SvdService(max_batch=streams, max_in_flight=1)
+    for i in range(streams):
+        svc.register(f"s{i}", _fresh(m, n, r, rng))
+    _feed(svc, _traffic(streams * 6, streams, m, n, rng))
+    svc.drain()
+    assert svc.stats.in_flight_peak <= 1
+    assert svc.in_flight() == 0
+    with pytest.raises(ValueError, match="max_in_flight"):
+        SvdService(max_in_flight=-1)
+
+
+# ---------------------------------------------------------------------------
+# kill-and-resume: save and restore in DIFFERENT processes (acceptance)
+# ---------------------------------------------------------------------------
+
+_KILL_RESUME_SCRIPT = textwrap.dedent("""
+    import json, sys
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np, jax.numpy as jnp
+    from repro.api import UpdatePolicy
+    from repro.core.svd_update import TruncatedSvd
+    from repro.serve import SvdService
+
+    mode, ckpt_dir, out_npz, sharded = sys.argv[1:5]
+    sharded = sharded == "1"
+    mesh = jax.make_mesh((8,), ("data",)) if sharded else None
+    policy = UpdatePolicy(method="direct", mesh=mesh, batch_axis="data")
+
+    rng = np.random.default_rng(7)
+    M, N, R, S, E, SPLIT = 8, 10, 3, 4, 22, 11
+    streams = [TruncatedSvd(
+        jnp.asarray(np.linalg.qr(rng.normal(size=(M, R)))[0]),
+        jnp.asarray(np.sort(np.abs(rng.normal(size=R)))[::-1].copy()),
+        jnp.asarray(np.linalg.qr(rng.normal(size=(N, R)))[0]),
+    ) for _ in range(S)]
+    traffic = [(f"s{i % S}", rng.normal(size=M), rng.normal(size=N))
+               for i in range(E)]
+
+    def feed(svc, evts):
+        for sid, a, b in evts:
+            svc.enqueue(sid, jnp.asarray(a), jnp.asarray(b))
+
+    if mode == "resume":
+        step, svc = SvdService.restore(ckpt_dir, mesh=mesh)
+        assert step == SPLIT
+        feed(svc, traffic[SPLIT:])
+        svc.drain()
+    else:
+        svc = SvdService(max_batch=S, max_in_flight=2, policy=policy)
+        for i, t in enumerate(streams):
+            svc.register(f"s{i}", t)
+        if mode == "save":
+            feed(svc, traffic[:SPLIT])
+            pend = svc.pending()
+            svc.save(ckpt_dir, step=SPLIT)
+            print(json.dumps({"pending_at_snapshot": pend}))
+            sys.exit(0)
+        feed(svc, traffic)
+        svc.drain()
+
+    np.savez(out_npz, **{f"s{i}_{f}": np.asarray(getattr(svc.state(f"s{i}"), f))
+                         for i in range(S) for f in ("u", "s", "v")})
+    print(json.dumps({"ok": True, "devices": jax.device_count()}))
+""")
+
+
+def _run_phase(mode, ckpt_dir, out_npz, sharded):
+    env = {
+        "PYTHONPATH": str(REPO / "src"),
+        "PATH": "/usr/bin:/bin",
+        "JAX_PLATFORMS": "cpu",
+        "HOME": "/tmp",
+    }
+    if sharded:
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(
+        [sys.executable, "-c", _KILL_RESUME_SCRIPT,
+         mode, str(ckpt_dir), str(out_npz), "1" if sharded else "0"],
+        capture_output=True, text=True, timeout=420, env=env,
+    )
+    assert proc.returncode == 0, f"{mode} stderr:\n{proc.stderr[-4000:]}"
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.parametrize("sharded", [False, True], ids=["default", "mesh-sharded"])
+def test_kill_and_resume_bitwise(tmp_path, sharded):
+    """A stream snapshotted mid-run and restored in a FRESH process produces
+    bitwise-identical (rtol=0/atol=0, f64) factors to an uninterrupted run —
+    under the default and the mesh-sharded (8 fake devices) policy."""
+    full_npz = tmp_path / "full.npz"
+    resumed_npz = tmp_path / "resumed.npz"
+    ckpt_dir = tmp_path / "ckpt"
+
+    out_full = _run_phase("full", ckpt_dir, full_npz, sharded)
+    save_info = _run_phase("save", ckpt_dir, full_npz, sharded)
+    assert save_info["pending_at_snapshot"] > 0     # snapshot taken mid-stream
+    out_res = _run_phase("resume", ckpt_dir, resumed_npz, sharded)
+    if sharded:
+        assert out_full["devices"] == out_res["devices"] == 8
+
+    a, b = np.load(full_npz), np.load(resumed_npz)
+    assert sorted(a.files) == sorted(b.files)
+    for k in a.files:
+        np.testing.assert_allclose(a[k], b[k], rtol=0, atol=0)
+        assert a[k].dtype == np.float64

@@ -1,4 +1,8 @@
-"""Algorithm 6.1 end-to-end + streaming truncated variant (paper Table 2)."""
+"""Algorithm 6.1 end-to-end + streaming truncated variant (paper Table 2).
+
+Exercised through the public ``repro.api`` surface (the pre-api call shapes
+are gone); geometry picks the full vs truncated route.
+"""
 
 import jax
 import jax.numpy as jnp
@@ -6,8 +10,21 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro import api
+from repro.api import SvdState, UpdatePolicy
 from repro.core.eigh_update import eigh_update
-from repro.core.svd_update import TruncatedSvd, svd_update, svd_update_truncated
+from repro.core.svd_update import TruncatedSvd
+
+
+def svd_update(u, s, v, a, b, *, method="direct", fmm_p=20):
+    """Full Algorithm-6.1 update via ``api.update`` (module-local helper)."""
+    return api.update(SvdState.from_factors(u, s, v), a, b,
+                      UpdatePolicy(method=method, fmm_p=fmm_p))
+
+
+def svd_update_truncated(tsvd, a, b, *, method="direct"):
+    """Truncated streaming update via ``api.update``."""
+    return api.update(tsvd, a, b, UpdatePolicy(method=method))
 
 RNG = np.random.default_rng(3)
 
