@@ -1,0 +1,103 @@
+"""Planned structured updates vs naive sequential rank-1 (DESIGN.md §10).
+
+The planner's claim: a rank-k update of B same-geometry streams lowers to k
+BATCHED engine dispatches (``api.apply_many``) instead of B*k sequential
+singles.  This bench measures that gap at the ISSUE 5 acceptance point
+(k=8, B=16 on CPU; target >= 1.5x) plus neighboring shapes, and the cost of
+a ``Decay`` fold (which must be engine-free, i.e. ~host-speed).
+
+CSV rows (benchmarks/run.py style):
+  bench_updates/rank_k/B=<b>/k=<k>,us,speedup=...
+  bench_updates/decay/B=<b>,us,engine_calls=0
+
+and a machine-readable summary at benchmarks/BENCH_updates.json.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro import api
+from repro.api import SvdState, UpdatePolicy
+from repro.updates import Decay, RankK
+
+M, N, RANK = 32, 48, 8    # the bench_engine.py truncated geometry
+CELLS = [(16, 8), (16, 4), (8, 8)]     # (B streams, k) — first is acceptance
+POLICY = UpdatePolicy(method="direct")
+
+OUT = Path(__file__).parent / "BENCH_updates.json"
+
+
+def _problem(rng, b, k):
+    states, ops = [], []
+    for _ in range(b):
+        u = np.linalg.qr(rng.normal(size=(M, RANK)))[0]
+        v = np.linalg.qr(rng.normal(size=(N, RANK)))[0]
+        s = np.sort(np.abs(rng.normal(size=RANK)))[::-1].copy()
+        states.append(SvdState(jnp.asarray(u), jnp.asarray(s), jnp.asarray(v)))
+        ops.append(RankK(jnp.asarray(rng.normal(size=(M, k))),
+                         jnp.asarray(rng.normal(size=(N, k)))))
+    return states, ops
+
+
+def _naive(states, ops, k):
+    """B*k sequential single rank-1 api.update calls — the pre-planner shape."""
+    outs = []
+    for st, op in zip(states, ops):
+        cur = st
+        for i in range(k):
+            cur = api.update(cur, op.u[:, i], op.v[:, i], POLICY)
+        outs.append(cur)
+    return outs
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    results: dict = {"m": M, "n": N, "rank": RANK, "cells": []}
+
+    for b, k in CELLS:
+        states, ops = _problem(rng, b, k)
+        us_naive = time_fn(lambda: jax.block_until_ready(_naive(states, ops, k)))
+        us_plan = time_fn(
+            lambda: jax.block_until_ready(api.apply_many(states, ops, POLICY))
+        )
+        speedup = us_naive / us_plan
+        emit(f"bench_updates/rank_k/B={b}/k={k}", us_plan,
+             f"speedup={speedup:.2f} naive_us={us_naive:.0f}")
+        results["cells"].append({
+            "B": b, "k": k, "planned_us": us_plan, "naive_us": us_naive,
+            "speedup": speedup,
+        })
+
+    # decay folds: engine-free by construction — host-speed regardless of B
+    b = 16
+    states, _ = _problem(rng, b, 1)
+    decays = [Decay(0.99)] * b
+    us_decay = time_fn(
+        lambda: jax.block_until_ready(api.apply_many(states, decays, POLICY))
+    )
+    emit(f"bench_updates/decay/B={b}", us_decay, "engine_calls=0")
+    results["decay"] = {"B": b, "us": us_decay}
+
+    accept = results["cells"][0]
+    results["acceptance"] = {
+        "target_speedup": 1.5,
+        "measured_speedup": accept["speedup"],
+        "pass": accept["speedup"] >= 1.5,
+    }
+    OUT.write_text(json.dumps(results, indent=1))
+    return results
+
+
+if __name__ == "__main__":
+    jax.config.update("jax_enable_x64", True)
+    print("name,us_per_call,derived")
+    r = run()
+    print(f"# acceptance (k=8, B=16): {r['acceptance']}")

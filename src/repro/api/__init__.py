@@ -10,6 +10,13 @@ One state object, one policy object, two entry points:
 
     trackers = api.update_many(trackers, A_vecs, B_vecs, policy)   # grouped/batched
 
+    state = api.apply(state, op, policy)               # structured perturbation
+    states = api.apply_many(states, ops, policy)       # cross-op step batching
+
+Structured perturbations (rank-k, appends, decay, compositions —
+``repro.updates``) lower onto planned schedules of the same two rank-1
+entry points (DESIGN.md §10).
+
 Everything underneath — ``core.svd_update`` (Algorithm 6.1),
 ``core.engine`` (plan-cached batched executables), the Pallas kernels and
 the ``repro.dist`` shard_map routes — is implementation.  The pre-api
@@ -29,9 +36,22 @@ __all__ = [
     "METHODS",
     "SvdState",
     "UpdatePolicy",
+    "apply",
+    "apply_many",
     "as_state",
     "engine_for",
     "update",
     "update_many",
     "warmup",
 ]
+
+
+def __getattr__(name: str):
+    # ``apply`` / ``apply_many`` live in ``repro.updates.planner`` (the
+    # structured-perturbation subsystem, DESIGN.md §10), which itself builds
+    # on this package — resolve lazily to keep the import graph acyclic.
+    if name in ("apply", "apply_many"):
+        from repro.updates import planner
+
+        return getattr(planner, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

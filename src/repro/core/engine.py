@@ -379,6 +379,36 @@ class SvdEngine:
         float32 matches ``compression_init``/``spectral_init`` trackers;
         pass ``jnp.float64`` for x64 workloads).
         """
+        self._warm_entry(batch=batch, m=m, n=n, rank=rank, dtype=dtype)
+        return self.cache_info()
+
+    def aot_compiled(
+        self,
+        *,
+        batch: int | None,
+        m: int,
+        n: int,
+        rank: int | None = None,
+        dtype=jnp.float32,
+    ):
+        """The AOT-compiled executable for one geometry (warming it first).
+
+        Exposes the compiled object itself — ``cost_analysis()`` /
+        ``memory_analysis()`` feed the launch-layer roofline cells
+        (``repro.launch.perf_iter``) without re-lowering outside the shared
+        plan cache.
+        """
+        return self._warm_entry(batch=batch, m=m, n=n, rank=rank, dtype=dtype).compiled
+
+    def _warm_entry(
+        self,
+        *,
+        batch: int | None,
+        m: int,
+        n: int,
+        rank: int | None = None,
+        dtype=jnp.float32,
+    ) -> _CacheEntry:
         dt = jnp.dtype(dtype)
 
         def sds(*shape):
@@ -409,7 +439,7 @@ class SvdEngine:
                 ent = self._entry(key, self._build_truncated_batch)
             if ent.compiled is None:
                 ent.compiled = ent.fn.lower(TruncatedSvd(*leaves), *args).compile()
-        return self.cache_info()
+        return ent
 
 
 # ---------------------------------------------------------------------------

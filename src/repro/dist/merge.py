@@ -47,13 +47,15 @@ import jax.numpy as jnp
 
 from repro.api import UpdatePolicy
 from repro.api.policy import policy_from_legacy
-from repro.api.state import like_container as _like
+from repro.api.state import SvdState, like_container as _like
 from repro.api.update import engine_from_key
 from repro.core.engine import SvdEngine, stack_trees, unstack_tree
 from repro.core.svd_update import TruncatedSvd
 from repro.dist.collectives import all_gather_tsvd
+from repro.updates.ops import AppendRows
+from repro.updates.planner import apply as _planned_apply
 
-__all__ = ["merge_pair", "merge_tree", "distributed_merge"]
+__all__ = ["merge_append", "merge_pair", "merge_tree", "distributed_merge"]
 
 
 def _engine_from(
@@ -141,6 +143,43 @@ def merge_pair(
     return _combine_bases(a, b, core, r)
 
 
+def merge_append(
+    a,
+    b,
+    *,
+    rank: int | None = None,
+    policy: UpdatePolicy | None = None,
+):
+    """Rank-``rank`` truncated SVD of ``[A; B]`` via the structured-update
+    planner: ``B`` is an ``AppendRows.from_svd`` op on ``A``'s state.
+
+    The lowering zero-pads ``A``'s left basis by ``B``'s rows and absorbs
+    ``B``'s components as planned rank-1 steps — the same math as
+    ``merge_pair``'s small-core trick lifted to the full-height state, and
+    the path ``merge_tree`` uses for genuinely mixed shard heights (where
+    the equal-geometry batched core cannot).  Exact under the same global
+    rank-``r_a`` condition.
+    """
+    if a.v.shape[0] != b.v.shape[0]:
+        raise ValueError(
+            f"row-concatenated shards must share the column space: "
+            f"n={a.v.shape[0]} vs {b.v.shape[0]}"
+        )
+    r_a = a.s.shape[0]
+    r = rank if rank is not None else r_a
+    if r > r_a:
+        raise ValueError(
+            f"merge rank {r} exceeds the left shard's rank {r_a}; the core "
+            f"state carries rank r_a — order the higher-rank shard first"
+        )
+    out = _planned_apply(
+        SvdState(u=a.u, s=a.s, v=a.v),
+        AppendRows.from_svd(b.u, b.s, b.v),
+        policy_from_legacy(policy),
+    )
+    return _like(a, out.u[:, :r], out.s[:r], out.v[:, :r])
+
+
 def _pad_to_pow2(shards: list) -> tuple[list, int]:
     """Append zero shards (``s = 0``, zero left rows, the last shard's
     orthonormal ``v``) until the count is a power of two.
@@ -184,9 +223,11 @@ def merge_tree(
     batched engine call per rank-1 step; equal-geometry shard lists of
     non-power-of-two length are padded with zero shards so EVERY level runs
     the batched path (the padding's zero rows are sliced off the result).
-    Genuinely mixed geometries fall back to pairwise ``merge_pair`` with an
-    odd tail riding up a level.  Depth is ``ceil(log2 W)`` — the reduction
-    shape that keeps a 1000-worker merge at ~10 sequential rounds.
+    Genuinely mixed geometries merge pairwise through the structured-update
+    planner's ``AppendRows`` lowering (``merge_append``; pairwise
+    ``merge_pair`` when the caller pinned an explicit engine), with an odd
+    tail riding up a level.  Depth is ``ceil(log2 W)`` — the reduction shape
+    that keeps a 1000-worker merge at ~10 sequential rounds.
     """
     shards = list(shards)
     if not shards:
@@ -199,6 +240,8 @@ def merge_tree(
             f"merge rank {rank} exceeds the smallest shard rank {r_min}; "
             f"the pairwise core state cannot carry more than the shard rank"
         )
+    explicit_engine = engine
+    pol = policy_from_legacy(policy, method)
     engine = _engine_from(engine, policy, method, r_min)
 
     real_rows = None
@@ -220,8 +263,14 @@ def merge_tree(
                 _combine_bases(p[0], p[1], unstack_tree(cores, j), rank)
                 for j, p in enumerate(pairs)
             ]
-        else:  # genuinely unequal shard heights: merge pairwise
+        elif explicit_engine is not None:
+            # caller-managed engine: the planner resolves engines from the
+            # policy only, so keep the small-core pairwise path
             merged = [merge_pair(x, y, rank=rank, engine=engine) for x, y in pairs]
+        else:
+            # genuinely unequal shard heights: each pair is an AppendRows
+            # lowering through the structured-update planner
+            merged = [merge_append(x, y, rank=rank, policy=pol) for x, y in pairs]
         shards = merged + tail
 
     out = shards[0]

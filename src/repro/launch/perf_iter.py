@@ -1,9 +1,6 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """§Perf hillclimb driver: hypothesis -> change -> re-lower -> record.
 
-Three cells (selected from the baseline roofline table — worst fraction /
+Three LM cells (selected from the baseline roofline table — worst fraction /
 most collective-bound / most technique-representative plumbing; see
 EXPERIMENTS.md §Perf for the napkin math per hypothesis):
 
@@ -13,14 +10,28 @@ EXPERIMENTS.md §Perf for the napkin math per hypothesis):
 
 Each variant re-runs the dry-run cell with a method tag; JSONs land next to
 the baselines for before/after diffing.
+
+``--svd`` measures the OTHER hot path this repo serves — batched truncated
+rank-1 SVD updates — through ``repro.api``'s policy-resolved engine
+(``aot_compiled`` on the shared plan cache; pre-api call shapes are gone
+from this driver): HLO cost extraction + roofline terms + the analytic
+useful-FLOPs ratio (``roofline.svd_update_flops``) per service geometry,
+JSONs in the same ``benchmarks/dryrun`` table.
 """
 
+# must precede the first jax-importing module: jax locks the device count on
+# first init, and only the dry-run wants 512 placeholder devices
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
 import argparse
+import json
 import traceback
 from pathlib import Path
 
 from repro import configs
 from repro.launch.dryrun import run_cell
+from repro.launch.roofline import HW, roofline_terms, svd_update_flops
 
 VARIANTS = {
     # ---- cell A: qwen2-72b train_4k
@@ -69,13 +80,79 @@ VARIANTS = {
 }
 
 
+# SVD serving cells: (m, n, rank, batch) — tracker flushes (optimizer
+# geometry), per-user adapters (serving geometry), and a wide-matrix stream.
+SVD_CELLS = [
+    (256, 512, 8, 64),
+    (512, 768, 16, 16),
+    (1024, 4096, 32, 8),
+]
+
+
+def run_svd_cell(m: int, n: int, r: int, batch: int, *, out_dir: Path,
+                 dtype="float32") -> dict:
+    """Roofline one batched truncated-update flush through the api-resolved
+    engine (the shared plan cache — no side lowering)."""
+    import jax.numpy as jnp
+
+    from repro import api
+    from repro.api.update import engine_from_key
+
+    policy = api.UpdatePolicy(method="direct")
+    eng = engine_from_key(policy, r + 1)
+    compiled = eng.aot_compiled(batch=batch, m=m, n=n, rank=r,
+                                dtype=jnp.dtype(dtype))
+    cost_list = compiled.cost_analysis()
+    cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else cost_list
+    mem = compiled.memory_analysis()
+    hw = HW(chips=1)
+    rt = roofline_terms(cost or {}, {"count": 0}, hw)
+    model = svd_update_flops(m, n, r, batch)
+    record = {
+        "arch": "svd-flush",
+        "shape": f"B{batch}_m{m}_n{n}_r{r}",
+        "mesh": "single",
+        "method": "engine-trunc-batch",
+        "roofline": rt,
+        "memory": {
+            "peak_bytes": getattr(mem, "temp_size_in_bytes", None),
+        },
+        "useful_flops_ratio": (
+            model / rt["flops_per_device"] if rt["flops_per_device"] else None
+        ),
+        "model_flops": model,
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"svd_B{batch}_m{m}_n{n}_r{r}.json"
+    path.write_text(json.dumps(record, indent=1))
+    return record
+
+
+def run_svd_cells(out_dir: Path) -> None:
+    for m, n, r, b in SVD_CELLS:
+        rec = run_svd_cell(m, n, r, b, out_dir=out_dir)
+        rt = rec["roofline"]
+        ur = rec["useful_flops_ratio"]
+        print(f"OK svd-flush/{rec['shape']}: "
+              f"t_comp={rt['t_compute_s']*1e3:.3f}ms "
+              f"t_mem={rt['t_memory_s']*1e3:.3f}ms "
+              f"useful={ur if ur is None else round(ur, 3)}",
+              flush=True)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="benchmarks/dryrun")
     ap.add_argument("--cell", default=None, help="arch:shape filter")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--svd", action="store_true",
+                    help="roofline the SVD flush cells instead of LM variants")
     args = ap.parse_args()
     out_dir = Path(args.out)
+
+    if args.svd:
+        run_svd_cells(out_dir)
+        return
 
     for (arch, shape), variants in VARIANTS.items():
         if args.cell and args.cell != f"{arch}:{shape}":

@@ -25,7 +25,8 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass
 
-__all__ = ["HW", "collective_bytes", "roofline_terms", "model_flops"]
+__all__ = ["HW", "collective_bytes", "roofline_terms", "model_flops",
+           "svd_update_flops"]
 
 # TPU v5e, per chip
 PEAK_FLOPS = 197e12
@@ -156,6 +157,21 @@ def model_flops(cfg, shape) -> float:
         tokens = shape.global_batch * 1
         factor = 2.0
     return factor * n_params_active * tokens
+
+
+def svd_update_flops(m: int, n: int, r: int, batch: int = 1) -> float:
+    """Analytic MODEL_FLOPS of one batched truncated rank-1 SVD update.
+
+    The serving hot path (``engine.update_truncated_batch``): Brand
+    projections/deflections ``~4r(m+n)``, the (r+1)-sized Algorithm-6.1 core
+    (four chained eigen-updates plus the sign-fix G materialization,
+    ``~24(r+1)^3`` under the direct method), and the two basis rotations
+    ``~2r(r+1)(m+n)``.  Feeds the useful-FLOPs ratio of the SVD roofline
+    cells (``launch.perf_iter --svd``) exactly as ``model_flops`` does for
+    the LM cells.
+    """
+    per = 4.0 * r * (m + n) + 2.0 * r * (r + 1) * (m + n) + 24.0 * (r + 1) ** 3
+    return batch * per
 
 
 def _active_param_count(cfg) -> float:

@@ -82,7 +82,8 @@ def _orthonormalize(p):
 
 def compress_decompress(state: CompressionState, grad: jax.Array, *, axis_name=None,
                         update_basis: bool = True, method: str = "direct",
-                        policy: UpdatePolicy | None = None):
+                        policy: UpdatePolicy | None = None,
+                        tracker_rank: int = 1):
     """Returns (g_hat, new_state). With ``axis_name`` the two factors are
     psum-averaged across the DP axis (call under shard_map).
 
@@ -90,7 +91,7 @@ def compress_decompress(state: CompressionState, grad: jax.Array, *, axis_name=N
     s_stack = jax.tree.map(lambda x: x[None], state)
     gh, s2 = compress_decompress_batch(
         s_stack, grad[None], axis_name=axis_name, update_basis=update_basis,
-        method=method, policy=policy,
+        method=method, policy=policy, tracker_rank=tracker_rank,
     )
     return gh[0], unstack_tree(s2, 0)
 
@@ -104,6 +105,7 @@ def compress_decompress_batch(
     engine: SvdEngine | None = None,
     method: str = "direct",
     policy: UpdatePolicy | None = None,
+    tracker_rank: int = 1,
 ):
     """Batched ``compress_decompress``: stacked states + grads of shape
     (B, m, n), one batched api dispatch for all B tracker updates.
@@ -112,6 +114,12 @@ def compress_decompress_batch(
     collectives still cross only ``axis_name`` (the batch axis stays local),
     so this composes with shard_map exactly like the single-leaf version.
     ``engine`` (legacy) overrides the policy-derived engine.
+
+    ``tracker_rank > 1`` absorbs the top-``tracker_rank`` components of the
+    compressed gradient per step as ONE planned ``repro.updates.RankK``
+    update (k batched rank-1 dispatches through the schedule-cached planner)
+    instead of the single dominant component — faster subspace tracking for
+    mini-batch streams at the same per-dispatch cost.
     """
     pol = _policy_for(policy, method)
     g = grads.astype(states.error.dtype) + states.error           # (B, m, n)
@@ -135,23 +143,44 @@ def compress_decompress_batch(
         # step per optimizer step — V tracks the current gradient subspace)
         v_basis = _orthonormalize(q)
         # long-horizon memory: the paper's streaming SVD absorbs the dominant
-        # rank-1 of each step's compressed gradient. Exposed via
-        # ``refresh_basis`` (periodic reset) and spectral diagnostics — this
-        # is where the rank-1 update core is load-bearing in the compressor.
-        sigma = jnp.linalg.norm(q[:, :, 0], axis=1)                # (B,)
-        u1 = p_hat[:, :, 0]                                        # (B, m)
-        v1 = q[:, :, 0] / (sigma + 1e-30)[:, None]                 # (B, n)
-        scale = jnp.sqrt(sigma)[:, None]
+        # rank-1 of each step's compressed gradient (or the top-k under
+        # ``tracker_rank``). Exposed via ``refresh_basis`` (periodic reset)
+        # and spectral diagnostics — this is where the rank-1 update core is
+        # load-bearing in the compressor.
         decayed = as_state(tracker).replace(s=tracker.s * 0.99)
-        if engine is not None:
-            from repro.core.svd_update import TruncatedSvd
+        k = min(tracker_rank, q.shape[-1])
+        if k > 1:
+            sig = jnp.linalg.norm(q[:, :, :k], axis=1)             # (B, k)
+            root = jnp.sqrt(sig)[:, None, :]
+            uk = p_hat[:, :, :k] * root                            # (B, m, k)
+            vk = q[:, :, :k] / (sig + 1e-30)[:, None, :] * root    # (B, n, k)
+            if engine is not None:
+                from repro.core.svd_update import TruncatedSvd
 
-            t2 = engine.update_truncated_batch(
-                TruncatedSvd(decayed.u, decayed.s, decayed.v),
-                u1 * scale, v1 * scale,
-            )
+                t2 = TruncatedSvd(decayed.u, decayed.s, decayed.v)
+                for i in range(k):
+                    t2 = engine.update_truncated_batch(
+                        t2, uk[:, :, i], vk[:, :, i]
+                    )
+            else:
+                from repro.updates import RankK
+                from repro.updates.planner import apply as planned_apply
+
+                t2 = planned_apply(decayed, RankK(uk, vk), pol)
         else:
-            t2 = api_update(decayed, u1 * scale, v1 * scale, pol)
+            sigma = jnp.linalg.norm(q[:, :, 0], axis=1)            # (B,)
+            u1 = p_hat[:, :, 0]                                    # (B, m)
+            v1 = q[:, :, 0] / (sigma + 1e-30)[:, None]             # (B, n)
+            scale = jnp.sqrt(sigma)[:, None]
+            if engine is not None:
+                from repro.core.svd_update import TruncatedSvd
+
+                t2 = engine.update_truncated_batch(
+                    TruncatedSvd(decayed.u, decayed.s, decayed.v),
+                    u1 * scale, v1 * scale,
+                )
+            else:
+                t2 = api_update(decayed, u1 * scale, v1 * scale, pol)
         tracker = _like(tracker, t2.u, t2.s, t2.v)
 
     return g_hat, CompressionState(v_basis=v_basis, error=err, tracker=tracker)
@@ -228,13 +257,17 @@ def agree_basis(state: CompressionState, *, axis_name, rank: int | None = None,
 
 def compressed_allreduce(states, grads, *, axis_name, method: str = "direct",
                          engine: SvdEngine | None = None,
-                         policy: UpdatePolicy | None = None):
+                         policy: UpdatePolicy | None = None,
+                         tracker_rank: int = 1):
     """Tree version: 2-D leaves are compressed; others psum densely.
 
     Compressible leaves sharing a geometry (m, n, rank, dtype) are stacked
     and pushed through ONE ``compress_decompress_batch`` — all their tracker
     updates ride a single batched api dispatch instead of a Python loop of
-    per-layer rank-1 updates.
+    per-layer rank-1 updates.  ``tracker_rank > 1`` upgrades each group's
+    tracker update to a planned rank-k absorb (one ``repro.updates.RankK``
+    schedule — k batched dispatches — instead of k sequential per-layer
+    calls).
     """
     pol = _policy_for(policy, method)
     flat_g, treedef = jax.tree.flatten(grads)
@@ -259,7 +292,8 @@ def compressed_allreduce(states, grads, *, axis_name, method: str = "direct",
         s_stack = stack_trees([flat_s[i] for i in idxs])
         g_stack = jnp.stack([flat_g[i] for i in idxs])
         gh, s2 = compress_decompress_batch(
-            s_stack, g_stack, axis_name=axis_name, engine=engine, policy=pol
+            s_stack, g_stack, axis_name=axis_name, engine=engine, policy=pol,
+            tracker_rank=tracker_rank,
         )
         for j, i in enumerate(idxs):
             out_g[i] = gh[j].astype(flat_g[i].dtype)

@@ -12,8 +12,21 @@ and flushes *one batched engine call* per round:
     svc.register("user-1", api.SvdState.from_dense(m1, rank=8))
     svc.enqueue("user-1", a, b)        # cheap: just queues
     svc.enqueue("user-2", a2, b2)
+    svc.enqueue_op("user-1", RankK(u_blk, v_blk))   # structured: rank-k bucket
+    svc.enqueue_op("user-2", AppendRows(new_rows))  # growing matrix event
     svc.flush()                        # one batched truncated update
     svc.save("/ckpts/svd", step=1)     # versioned snapshot; survives restart
+
+* Structured events (``repro.updates`` ops): ``enqueue_op`` lowers
+  geometry-preserving ops (``RankK``, ``DenseDelta``, ``Compose`` of them)
+  into the pair FIFO — a rank-k op becomes a k-deep flush bucket whose
+  steps batch with other streams' heads — while geometry-changing appends
+  and ``Decay`` folds stay whole and apply through the planner at flush.
+  Snapshots (v2) carry them bitwise (``pending_ops``/``pending_order``).
+* Cold-start control: every flush records its ``(kind, geometry)`` in the
+  warmed set; snapshots persist it and ``restore`` eagerly ``api.warmup``s
+  each entry, so the first post-failover flush never compiles under
+  traffic.
 
 * Per-stream ordering: a stream's queued pairs are applied in FIFO order;
   each flush round takes at most one pending pair per stream (they are
@@ -62,7 +75,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import SvdState, UpdatePolicy, as_state
-from repro.api.update import engine_from_key
+from repro.api.update import engine_from_key, warmup as _api_warmup
 from repro.core.engine import (
     SvdEngine,
     group_indices,
@@ -73,6 +86,8 @@ from repro.core.engine import (
 from repro.core.svd_update import TruncatedSvd
 from repro.dist.merge import merge_tree
 from repro.train import checkpoint as _checkpoint
+from repro.updates import ops as _ops
+from repro.updates import planner as _planner
 
 __all__ = [
     "SNAPSHOT_VERSION",
@@ -81,7 +96,7 @@ __all__ = [
     "SvdServiceStats",
 ]
 
-SNAPSHOT_VERSION = 1
+SNAPSHOT_VERSION = 2
 _SNAPSHOT_FORMAT = "repro.serve.ServiceSnapshot"
 
 # UpdatePolicy fields a snapshot records verbatim. ``mesh`` is deliberately
@@ -117,11 +132,12 @@ class SvdServiceStats:
     max_batch: int = 0       # largest batch (incl. bucket padding) dispatched
     backpressure_waits: int = 0   # rounds that had to wait for an older one
     in_flight_peak: int = 0       # most rounds ever outstanding at once
+    ops_applied: int = 0          # structured (non-pair) events applied
 
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=["states", "pending_a", "pending_b"],
+    data_fields=["states", "pending_a", "pending_b", "pending_ops"],
     meta_fields=[
         "version",
         "stream_ids",
@@ -130,6 +146,8 @@ class SvdServiceStats:
         "pad_to_bucket",
         "max_in_flight",
         "stats",
+        "pending_order",
+        "warmed",
     ],
 )
 @dataclasses.dataclass(frozen=True)
@@ -137,21 +155,29 @@ class ServiceSnapshot:
     """Versioned, self-describing capture of a whole ``SvdService``.
 
     A registered pytree: the array leaves are every stream's (u, s, v)
-    factors plus its pending FIFO stacked as two ``(k_i, m)`` / ``(k_i, n)``
-    arrays (FIFO order preserved along the leading axis; ``k_i = 0`` streams
-    carry empty arrays).  Everything non-array — stream ids, the policy
-    spec, bucket/backpressure config, stats counters — is pytree metadata,
-    mirrored into the JSON ``aux`` spec so a fresh process can rebuild the
-    tree structure before it has loaded a single array (``skeleton``).
+    factors plus its pending FIFO — rank-1 pairs stacked as two ``(k_i, m)``
+    / ``(k_i, n)`` arrays, structured events (``repro.updates`` ops: decay,
+    appends) as op pytrees in ``pending_ops``, with ``pending_order`` (one
+    ``"p"``/``"o"`` marker string per stream) recording how pairs and ops
+    interleave in FIFO order.  Everything non-array — stream ids, the policy
+    spec, bucket/backpressure config, stats counters, the warmed
+    ``(kind, geometry)`` set — is pytree metadata, mirrored into the JSON
+    ``aux`` spec so a fresh process can rebuild the tree structure before it
+    has loaded a single array (``skeleton``; op structure rebuilds through
+    ``repro.updates.ops.skeleton_from_spec``).
 
     Versioning: ``version`` is written into both the pytree and the aux
     spec; ``load`` refuses snapshots newer than this build understands and
-    upgrades older ones in place (none exist yet — v1 is the first format).
+    upgrades older ones in place.  v1 -> v2 added ``pending_ops`` /
+    ``pending_order`` / ``warmed``; v1 snapshots (all-pair FIFOs, nothing
+    warmed) load as v2 with the empty defaults — their leaf list is
+    unchanged, so restore stays bitwise.
     """
 
     states: tuple          # tuple[SvdState, ...] — diagnostics-free, per stream
     pending_a: tuple       # tuple[(k_i, m_i) array, ...] queued a-vectors, FIFO
     pending_b: tuple       # tuple[(k_i, n_i) array, ...] queued b-vectors, FIFO
+    pending_ops: tuple = ()   # tuple[tuple[UpdateOp, ...], ...] per stream, FIFO
     version: int = SNAPSHOT_VERSION
     stream_ids: tuple = ()
     policy_spec: tuple = ()   # tuple of (field, value) pairs (hashable meta)
@@ -159,6 +185,8 @@ class ServiceSnapshot:
     pad_to_bucket: bool = True
     max_in_flight: int = 2
     stats: tuple = ()         # SvdServiceStats counters as (name, value) pairs
+    pending_order: tuple = () # per stream: "p"/"o" markers in FIFO order
+    warmed: tuple = ()        # (kind, batch, m, n, rank, dtype_str) tuples
 
     def aux(self) -> dict:
         """The JSON spec persisted next to the arrays (checkpoint ``aux=``)."""
@@ -171,24 +199,42 @@ class ServiceSnapshot:
             "pad_to_bucket": self.pad_to_bucket,
             "max_in_flight": self.max_in_flight,
             "stats": dict(self.stats),
+            "pending_order": list(self.pending_order),
+            "pending_ops": [
+                [_ops.spec_to_json(op.spec()) for op in stream_ops]
+                for stream_ops in self.pending_ops
+            ],
+            "warmed": [list(w) for w in self.warmed],
         }
 
     @classmethod
     def skeleton(cls, aux: dict) -> "ServiceSnapshot":
         """A structure-only snapshot (placeholder leaves) built from an aux
-        spec — its treedef is what ``load`` unflattens restored leaves into."""
+        spec — its treedef is what ``load`` unflattens restored leaves into.
+
+        v1 aux specs (no ``pending_ops``/``pending_order``/``warmed``) get
+        the empty defaults: the tree gains no leaves, so v1 leaf lists
+        unflatten unchanged (the in-place upgrade path).
+        """
         n = len(aux["stream_ids"])
+        op_specs = aux.get("pending_ops", [[] for _ in range(n)])
         return cls(
             states=tuple(SvdState(u=0.0, s=0.0, v=0.0) for _ in range(n)),
             pending_a=tuple(0.0 for _ in range(n)),
             pending_b=tuple(0.0 for _ in range(n)),
-            version=aux["version"],
+            pending_ops=tuple(
+                tuple(_ops.skeleton_from_spec(_ops.spec_from_json(sp)) for sp in sps)
+                for sps in op_specs
+            ),
+            version=SNAPSHOT_VERSION,
             stream_ids=tuple(aux["stream_ids"]),
             policy_spec=tuple((k, v) for k, v in aux["policy"].items()),
             max_batch=aux["max_batch"],
             pad_to_bucket=aux["pad_to_bucket"],
             max_in_flight=aux["max_in_flight"],
             stats=tuple((k, v) for k, v in aux["stats"].items()),
+            pending_order=tuple(aux.get("pending_order", ())),
+            warmed=tuple(tuple(w) for w in aux.get("warmed", ())),
         )
 
     def save(self, ckpt_dir, step: int, *, keep: int = 3):
@@ -258,14 +304,22 @@ class SvdService:
         self.max_in_flight = max_in_flight
         self.stats = SvdServiceStats()
         self._streams: OrderedDict[str, SvdState] = OrderedDict()
+        # FIFO of events per stream: ("pair", a, b) | ("op", UpdateOp)
         self._pending: dict[str, deque] = {}
+        self._eff_shape: dict[str, tuple] = {}   # post-queue (m, n) per stream
         self._in_flight: deque[list] = deque()   # per round: dispatched outputs
+        self._warmed: set[tuple] = set()         # (kind, batch, m, n, r, dtype)
         self._lock = threading.RLock()
 
     def _engine_for(self, rank: int) -> SvdEngine:
         if self.engine is not None:
             return self.engine
         return engine_from_key(self.policy, rank + 1)
+
+    def _record_warm(self, kind: str, batch, m: int, n: int, r: int, dt) -> None:
+        """Track the (kind, geometry) set flushes have compiled — snapshotted
+        so ``restore`` can ``api.warmup`` them eagerly before traffic."""
+        self._warmed.add((kind, batch, m, n, r, jnp.dtype(dt).name))
 
     # -- stream lifecycle ---------------------------------------------------
 
@@ -281,25 +335,68 @@ class SvdService:
             st = as_state(state)
             self._streams[stream_id] = SvdState(u=st.u, s=st.s, v=st.v)
             self._pending[stream_id] = deque()
+            self._eff_shape[stream_id] = (st.m, st.n)
 
     def evict(self, stream_id: str) -> SvdState:
         """Drop a stream and return its state with its OWN queue applied.
 
-        Other streams' pending pairs are left queued — eviction of one user
+        Other streams' pending events are left queued — eviction of one user
         must not advance anyone else's state.
         """
         with self._lock:
-            state = self._streams.pop(stream_id)
-            queue = self._pending.pop(stream_id, deque())
-            for a, b in queue:
-                state = self._apply_one(state, a, b)
-                self.stats.applied += 1
+            state = self._streams[stream_id]
+            queue = self._pending.get(stream_id, deque())
+            while queue:
+                state = self._apply_event(state, queue[0])
+                queue.popleft()
+            del self._streams[stream_id]
+            self._pending.pop(stream_id, None)
+            self._eff_shape.pop(stream_id, None)
             return state
 
     def _apply_one(self, state: SvdState, a, b) -> SvdState:
         eng = self._engine_for(state.rank)
+        self._record_warm("trunc", None, state.m, state.n, state.rank, state.dtype)
         t = eng.update_truncated(TruncatedSvd(state.u, state.s, state.v), a, b)
         return SvdState(u=t.u, s=t.s, v=t.v)
+
+    def _apply_event(self, state: SvdState, ev: tuple) -> SvdState:
+        """Apply one FIFO event to a single stream's state.
+
+        Counts ``stats.applied``/``stats.ops_applied`` on success; callers
+        pop the event from its queue AFTER this returns (failure-atomic:
+        a raising engine call leaves the event queued for retry).
+        """
+        if ev[0] == "pair":
+            out = self._apply_one(state, ev[1], ev[2])
+            self.stats.applied += 1
+            return out
+        op = ev[1]
+        self._record_op_warm(state, op)
+        out = _planner.apply(state, op, self.policy)
+        self.stats.applied += 1
+        self.stats.ops_applied += 1
+        return SvdState(u=out.u, s=out.s, v=out.v)
+
+    def _record_op_warm(self, state: SvdState, op) -> None:
+        """Record every single-update geometry an op's schedule dispatches
+        (appends shift it mid-schedule), so restore warms those too."""
+        m, n = state.m, state.n
+        for step in _planner.lower(op, state):
+            if step[0] == "pad_rows":
+                m += step[1]
+            elif step[0] == "pad_cols":
+                n += step[1]
+            elif step[0] == "rank1":
+                self._record_warm("trunc", None, m, n, state.rank, state.dtype)
+
+    def _effective_shape(self, stream_id: str) -> tuple[int, int]:
+        """Stream geometry AFTER every queued event (appends grow it) — the
+        geometry new enqueues must match.  Maintained incrementally: state
+        changes and queue drains cancel out, so only ``register`` and
+        ``enqueue_op`` ever move it (enqueue stays O(1) at any queue depth).
+        """
+        return self._eff_shape[stream_id]
 
     def state(self, stream_id: str) -> SvdState:
         """Current state — pending (unflushed) pairs are NOT yet applied.
@@ -340,9 +437,8 @@ class SvdService:
                 state = self._streams[sid]
                 queue = self._pending[sid]
                 while queue:
-                    a, b = queue.popleft()
-                    state = self._apply_one(state, a, b)
-                    self.stats.applied += 1
+                    state = self._apply_event(state, queue[0])
+                    queue.popleft()
                 self._streams[sid] = state
                 states.append(state)
         merged = merge_tree(states, rank=rank, engine=self.engine,
@@ -369,27 +465,97 @@ class SvdService:
     def enqueue(self, stream_id: str, a: jax.Array, b: jax.Array) -> None:
         """Queue one rank-1 perturbation ``a b^T`` for a stream.
 
-        Auto-flushes when ``max_batch`` streams have a pending head pair.
+        Auto-flushes when ``max_batch`` streams have a pending head event.
         The flush only *dispatches* device work (async); enqueue never waits
         for it unless the in-flight buffer is full (backpressure).
         """
         with self._lock:
             if stream_id not in self._streams:
                 raise KeyError(f"unknown stream {stream_id!r}; register() first")
-            t = self._streams[stream_id]
-            m, n = t.m, t.n
+            # match the geometry the stream will have once queued appends
+            # flush — reject HERE: at flush time a bad pair would poison a
+            # whole geometry group (events are popped before the engine call)
+            m, n = self._effective_shape(stream_id)
             if a.shape != (m,) or b.shape != (n,):
-                # reject HERE: at flush time a bad pair would poison a whole
-                # geometry group (pairs are popped before the engine call)
                 raise ValueError(
                     f"pair shapes {a.shape}/{b.shape} do not match stream "
                     f"{stream_id!r} geometry ({m},)/({n},)"
                 )
-            self._pending[stream_id].append((a, b))
+            self._pending[stream_id].append(("pair", a, b))
             self.stats.enqueued += 1
-            ready = sum(1 for q in self._pending.values() if q)
-            if ready >= self.max_batch:
-                self._flush_round()
+            self._maybe_autoflush()
+
+    def enqueue_op(self, stream_id: str, op: "_ops.UpdateOp") -> None:
+        """Queue one structured perturbation (a ``repro.updates`` op).
+
+        Geometry-preserving ops lower into the pair FIFO at enqueue time —
+        ``RankK`` becomes k pairs (a "rank-k flush bucket": k flush rounds,
+        each batched with the other streams' heads), ``DenseDelta`` sketches
+        into ``rank`` pairs, ``Compose`` decomposes child-by-child.
+        Geometry-changing ops (appends) and ``Decay`` stay whole as op
+        events: appends re-plan the stream's geometry at flush; decay folds
+        into the singular values without an engine dispatch.  FIFO order
+        with previously queued pairs is preserved either way.
+        """
+        with self._lock:
+            if stream_id not in self._streams:
+                raise KeyError(f"unknown stream {stream_id!r}; register() first")
+            if not isinstance(op, _ops.UpdateOp):
+                raise TypeError(f"enqueue_op takes a repro.updates op; got {type(op)}")
+            m, n = self._effective_shape(stream_id)
+            events, out_shape = self._lower_op_events(op, m, n, stream_id)
+            self._pending[stream_id].extend(events)
+            self._eff_shape[stream_id] = out_shape
+            self.stats.enqueued += len(events)
+            self._maybe_autoflush()
+
+    def _lower_op_events(self, op, m: int, n: int, sid: str) -> tuple[list, tuple]:
+        """Lower an op into FIFO events at the (m, n) geometry; returns
+        ``(events, geometry after the op)``."""
+        if isinstance(op, _ops.Compose):
+            events: list = []
+            for child in op.ops:
+                sub, (m, n) = self._lower_op_events(child, m, n, sid)
+                events.extend(sub)
+            return events, (m, n)
+        if isinstance(op, _ops.RankK):
+            u, v = jnp.asarray(op.u), jnp.asarray(op.v)
+            if u.shape != (m, op.k) or v.shape != (n, op.k):
+                raise ValueError(
+                    f"RankK factors {u.shape}/{v.shape} do not match stream "
+                    f"{sid!r} geometry ({m},{op.k})/({n},{op.k})"
+                )
+            return [("pair", u[:, i], v[:, i]) for i in range(op.k)], (m, n)
+        if isinstance(op, _ops.DenseDelta):
+            delta = jnp.asarray(op.delta)
+            if delta.shape != (m, n):
+                raise ValueError(
+                    f"DenseDelta shape {delta.shape} does not match stream "
+                    f"{sid!r} geometry ({m}, {n})"
+                )
+            du, ds, dvt = jnp.linalg.svd(delta, full_matrices=False)
+            return (
+                [("pair", du[:, i] * ds[i], dvt[i]) for i in range(op.rank)],
+                (m, n),
+            )
+        if isinstance(op, (_ops.AppendRows, _ops.AppendCols)):
+            width_ok = (
+                (op.rows.shape[1] == n if op.rows is not None else op.v.shape[0] == n)
+                if isinstance(op, _ops.AppendRows)
+                else (op.cols.shape[0] == m if op.cols is not None else op.u.shape[0] == m)
+            )
+            if not width_ok:
+                raise ValueError(
+                    f"{type(op).__name__} block does not match stream {sid!r} "
+                    f"geometry ({m}, {n})"
+                )
+            return [("op", op)], op.out_shape(m, n)
+        return [("op", op)], op.out_shape(m, n)   # Decay and future scalars
+
+    def _maybe_autoflush(self) -> None:
+        ready = sum(1 for q in self._pending.values() if q)
+        if ready >= self.max_batch:
+            self._flush_round()
 
     def flush(self) -> int:
         """Dispatch ALL pending pairs (possibly several rounds); returns the
@@ -428,10 +594,12 @@ class SvdService:
         jax.block_until_ready(list(self._streams.values()))
 
     def _flush_round(self) -> int:
-        """One round: at most one pending pair per stream, grouped by
-        geometry, one batched engine call per group — dispatched async."""
-        round_ids = [sid for sid, q in self._pending.items() if q]
-        if not round_ids:
+        """One round: at most one pending event per stream — pair-headed
+        streams group by geometry into batched engine calls; op-headed
+        streams (appends, decay folds) apply through the planner —
+        all dispatched async."""
+        live_ids = [sid for sid, q in self._pending.items() if q]
+        if not live_ids:
             return 0
 
         # Backpressure: bound how far the host can run ahead of the device.
@@ -440,16 +608,34 @@ class SvdService:
             self._retire_oldest()
             self.stats.backpressure_waits += 1
 
+        applied = 0        # pair updates dispatched through batched calls
+        ops_applied = 0    # structured heads (already counted by _apply_event)
+        round_outputs: list = []
+
+        # structured heads: per-stream planner application (geometry may
+        # change mid-event, so they cannot share a batch)
+        round_ids = []
+        for sid in live_ids:
+            head = self._pending[sid][0]
+            if head[0] == "op":
+                # apply BEFORE popping: a raising engine call leaves the
+                # event queued, mirroring the pair path's peek-don't-pop
+                # failure atomicity below
+                self._streams[sid] = self._apply_event(self._streams[sid], head)
+                self._pending[sid].popleft()
+                round_outputs.extend(jax.tree.leaves(self._streams[sid]))
+                ops_applied += 1
+            else:
+                round_ids.append(sid)
+
         keys = [truncated_geometry(self._streams[sid]) for sid in round_ids]
 
-        applied = 0
-        round_outputs: list = []
         for (m, n, r, dt), idxs in group_indices(keys).items():
             sids = [round_ids[i] for i in idxs]
             # peek, don't pop: if the engine call raises (first-compile OOM,
             # backend error), the pairs stay queued and a retry re-applies
             # them — flush stays failure-atomic per group
-            pairs = [self._pending[sid][0] for sid in sids]
+            pairs = [self._pending[sid][0][1:] for sid in sids]
             states = [self._streams[sid] for sid in sids]
             bsz = len(sids)
             pad = 0
@@ -473,6 +659,8 @@ class SvdService:
                 b_stack = jnp.concatenate([b_stack, jnp.zeros((pad, n), dt)])
 
             eng = self._engine_for(r)
+            if self.policy.mesh is None:
+                self._record_warm("trunc_batch", bsz + pad, m, n, r, dt)
             out = eng.update_truncated_batch(
                 t_stack, a_stack, b_stack,
                 mesh=self.policy.mesh, batch_axis=self.policy.batch_axis,
@@ -495,7 +683,7 @@ class SvdService:
             )
         self.stats.flushes += 1
         self.stats.applied += applied
-        return applied
+        return applied + ops_applied
 
     # -- checkpointing ------------------------------------------------------
 
@@ -509,20 +697,45 @@ class SvdService:
         """
         with self._lock:
             self._barrier()
-            states, pend_a, pend_b = [], [], []
+            states, pend_a, pend_b, pend_ops, orders = [], [], [], [], []
             for sid, st in self._streams.items():
                 states.append(st)
-                queue = self._pending[sid]
-                if queue:
-                    pend_a.append(jnp.stack([jnp.asarray(a) for a, _ in queue]))
-                    pend_b.append(jnp.stack([jnp.asarray(b) for _, b in queue]))
+                a_vecs, b_vecs, stream_ops, order = [], [], [], []
+                geom_m, geom_n = st.m, st.n
+                geom_changed = False
+                for ev in self._pending[sid]:
+                    if ev[0] == "pair" and not geom_changed:
+                        a_vecs.append(jnp.asarray(ev[1]))
+                        b_vecs.append(jnp.asarray(ev[2]))
+                        order.append("p")
+                    elif ev[0] == "pair":
+                        # a queued append changed the geometry: later pairs
+                        # no longer fit the rectangular (k_i, m)/(k_i, n)
+                        # stacks — carry them as rank-1 RankK op leaves
+                        # (bitwise: restore unwraps k=1 RankK back to pairs)
+                        stream_ops.append(
+                            _ops.RankK(jnp.asarray(ev[1])[:, None],
+                                       jnp.asarray(ev[2])[:, None])
+                        )
+                        order.append("o")
+                    else:
+                        stream_ops.append(ev[1])
+                        order.append("o")
+                        if ev[1].out_shape(geom_m, geom_n) != (geom_m, geom_n):
+                            geom_changed = True
+                if a_vecs:
+                    pend_a.append(jnp.stack(a_vecs))
+                    pend_b.append(jnp.stack(b_vecs))
                 else:
-                    pend_a.append(np.zeros((0, st.m), st.u.dtype))
-                    pend_b.append(np.zeros((0, st.n), st.v.dtype))
+                    pend_a.append(np.zeros((0, geom_m), st.u.dtype))
+                    pend_b.append(np.zeros((0, geom_n), st.v.dtype))
+                pend_ops.append(tuple(stream_ops))
+                orders.append("".join(order))
             return ServiceSnapshot(
                 states=tuple(states),
                 pending_a=tuple(pend_a),
                 pending_b=tuple(pend_b),
+                pending_ops=tuple(pend_ops),
                 version=SNAPSHOT_VERSION,
                 stream_ids=tuple(self._streams),
                 policy_spec=tuple(_policy_spec(self.policy).items()),
@@ -530,6 +743,8 @@ class SvdService:
                 pad_to_bucket=self.pad_to_bucket,
                 max_in_flight=self.max_in_flight,
                 stats=tuple(dataclasses.asdict(self.stats).items()),
+                pending_order=tuple(orders),
+                warmed=tuple(sorted(self._warmed)),
             )
 
     def save(self, ckpt_dir, step: int, *, keep: int = 3):
@@ -568,14 +783,55 @@ class SvdService:
             max_in_flight=snap.max_in_flight,
             policy=policy,
         )
-        for sid, st, pa, pb in zip(
-            snap.stream_ids, snap.states, snap.pending_a, snap.pending_b
+        n_streams = len(snap.stream_ids)
+        pend_ops = snap.pending_ops or ((),) * n_streams
+        orders = snap.pending_order or (None,) * n_streams
+        for sid, st, pa, pb, sops, order in zip(
+            snap.stream_ids, snap.states, snap.pending_a, snap.pending_b,
+            pend_ops, orders,
         ):
             svc._streams[sid] = SvdState(u=st.u, s=st.s, v=st.v)
-            svc._pending[sid] = deque(
-                (pa[i], pb[i]) for i in range(np.asarray(pa).shape[0])
-            )
+            n_pairs = np.asarray(pa).shape[0]
+            if order is None:
+                order = "p" * n_pairs          # v1 snapshots: all-pair FIFOs
+            queue: deque = deque()
+            pi = oi = 0
+            for marker in order:
+                if marker == "p":
+                    queue.append(("pair", pa[pi], pb[pi]))
+                    pi += 1
+                    continue
+                op = sops[oi]
+                oi += 1
+                if isinstance(op, _ops.RankK):
+                    # k=1 RankK leaves are pairs the snapshot wrapped to keep
+                    # the pair stacks rectangular past a geometry change
+                    for i in range(op.k):
+                        queue.append(("pair", jnp.asarray(op.u)[:, i],
+                                      jnp.asarray(op.v)[:, i]))
+                else:
+                    queue.append(("op", op))
+            svc._pending[sid] = queue
+            m_eff, n_eff = svc._streams[sid].m, svc._streams[sid].n
+            for ev in queue:
+                if ev[0] == "op":
+                    m_eff, n_eff = ev[1].out_shape(m_eff, n_eff)
+            svc._eff_shape[sid] = (m_eff, n_eff)
         svc.stats = SvdServiceStats(**dict(snap.stats))
+        svc._warmed = {tuple(w) for w in snap.warmed}
+        # cold-start control (ROADMAP item): eagerly AOT-warm every
+        # (kind, geometry) the snapshotted service had compiled, so the first
+        # post-restore flush hits the plan cache instead of compiling under
+        # traffic.  Skipped when an explicit engine override is active (its
+        # plans are caller-managed) or the policy re-shards over a mesh (the
+        # shard_map route keys on the live mesh, which warmup cannot AOT).
+        if engine is None and policy.mesh is None:
+            for kind, batch, m, n, r, dtype_name in svc._warmed:
+                _api_warmup(
+                    svc.policy, m=m, n=n,
+                    batch=batch if kind == "trunc_batch" else None,
+                    rank=r, dtype=jnp.dtype(dtype_name),
+                )
         return svc
 
     @classmethod

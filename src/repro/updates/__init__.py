@@ -1,0 +1,58 @@
+"""``repro.updates`` — structured perturbations lowered onto the rank-1
+engine (DESIGN.md §10).
+
+Declarative ops (``RankK``, ``AppendRows``/``AppendCols``, ``DenseDelta``,
+``Decay``, ``Compose``) with exact dense reference semantics, and a planner
+that compiles any of them into a minimal schedule of plan-cached
+``repro.api`` rank-1 dispatches:
+
+    from repro import api
+    from repro.updates import RankK, Decay, Compose
+
+    state = api.SvdState.from_dense(x, rank=8)
+    op = Compose((Decay(0.99), RankK(u_block, v_block)))   # forget + absorb
+    state = api.apply(state, op)                           # planned schedule
+
+``api.apply`` / ``api.apply_many`` are the public entry points; the module
+surface here is for building ops and inspecting the planner.
+"""
+
+from repro.updates.ops import (
+    AppendCols,
+    AppendRows,
+    Compose,
+    Decay,
+    DenseDelta,
+    RankK,
+    UpdateOp,
+    skeleton_from_spec,
+    spec_from_json,
+    spec_to_json,
+)
+from repro.updates.planner import (
+    apply,
+    apply_many,
+    lower,
+    schedule_cache_clear,
+    schedule_cache_info,
+    warmup_plan,
+)
+
+__all__ = [
+    "AppendCols",
+    "AppendRows",
+    "Compose",
+    "Decay",
+    "DenseDelta",
+    "RankK",
+    "UpdateOp",
+    "apply",
+    "apply_many",
+    "lower",
+    "schedule_cache_clear",
+    "schedule_cache_info",
+    "skeleton_from_spec",
+    "spec_from_json",
+    "spec_to_json",
+    "warmup_plan",
+]

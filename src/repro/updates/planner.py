@@ -1,0 +1,378 @@
+"""Lowering structured-perturbation ops onto the rank-1 engine (DESIGN.md §10).
+
+``apply(state, op, policy)`` compiles any ``repro.updates.ops`` op into a
+minimal *schedule* of existing ``repro.api`` calls and executes it:
+
+* ``RankK``      -> k plan-cached rank-1 ``api.update`` dispatches;
+* ``DenseDelta`` -> top-``rank`` SVD sketch of the delta, then rank-1 steps;
+* ``AppendRows`` / ``AppendCols`` -> zero-pad the state's geometry, then one
+  rank-1 step per component of the appended block (pre-factored blocks skip
+  the dense SVD);
+* ``Decay``      -> folded into the singular values for FREE — zero engine
+  dispatches;
+* ``Compose``    -> children's schedules concatenated in order, geometry
+  threaded through appends.
+
+``apply_many(states, ops, policy)`` executes many (state, op) pairs in
+lockstep waves: at each wave, every op's next rank-1 step is batched with all
+same-geometry steps of the *other* ops into ONE ``api.update_many`` engine
+dispatch — a planned rank-k update of B streams costs k batched calls, not
+B*k singles (``benchmarks/bench_updates.py`` measures the gap).
+
+Schedules are cached by ``(op.spec(), state geometry)`` — the schedule cache
+mirrors the engine's plan cache one level up: re-applying a same-shaped op
+never re-plans (``schedule_cache_info()``).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.api.policy import UpdatePolicy
+from repro.api.state import SvdState, as_state
+from repro.api.update import update, warmup
+from repro.updates.ops import (
+    AppendCols,
+    AppendRows,
+    Compose,
+    Decay,
+    DenseDelta,
+    RankK,
+    UpdateOp,
+)
+
+__all__ = [
+    "apply",
+    "apply_many",
+    "lower",
+    "schedule_cache_clear",
+    "schedule_cache_info",
+    "warmup_plan",
+]
+
+
+class ScheduleCacheInfo(NamedTuple):
+    hits: int
+    misses: int
+    entries: int
+
+
+_cache: dict[tuple, tuple] = {}
+_hits = 0
+_misses = 0
+_lock = threading.Lock()
+
+
+def schedule_cache_info() -> ScheduleCacheInfo:
+    with _lock:
+        return ScheduleCacheInfo(_hits, _misses, len(_cache))
+
+
+def schedule_cache_clear() -> None:
+    global _hits, _misses
+    with _lock:
+        _cache.clear()
+        _hits = 0
+        _misses = 0
+
+
+# ---------------------------------------------------------------------------
+# Lowering: op spec -> schedule of abstract steps
+#
+#   ("decay", path)                 s *= lam            (free)
+#   ("pad_rows", p) / ("pad_cols", p)                   (free)
+#   ("rank1", path, kind, i)        one engine dispatch
+#
+# ``path`` locates the source op inside Compose nesting; ``i`` names the
+# component.  Steps are static (no array data) — data binds at execution.
+# ---------------------------------------------------------------------------
+
+
+def _build(spec: tuple, m: int, n: int, rank: int, is_full: bool, path: tuple):
+    kind = spec[0]
+    if kind == "rank_k":
+        return [("rank1", path, kind, i) for i in range(spec[1])], (m, n)
+    if kind == "dense_delta":
+        return [("rank1", path, kind, i) for i in range(spec[1])], (m, n)
+    if kind == "decay":
+        return [("decay", path)], (m, n)
+    if kind in ("append_rows", "append_cols"):
+        if is_full:
+            raise ValueError(
+                f"{kind} requires a truncated state: a full (square-basis) "
+                f"state cannot zero-pad its geometry — truncate first"
+            )
+        p, q = spec[1], spec[2]
+        pad = ("pad_rows", p) if kind == "append_rows" else ("pad_cols", p)
+        steps = [pad] + [("rank1", path, kind, i) for i in range(q)]
+        out = (m + p, n) if kind == "append_rows" else (m, n + p)
+        return steps, out
+    if kind == "compose":
+        steps: list = []
+        for j, child in enumerate(spec[1]):
+            sub, (m, n) = _build(child, m, n, rank, is_full, path + (j,))
+            steps.extend(sub)
+        return steps, (m, n)
+    raise ValueError(f"unknown op spec {spec!r}")
+
+
+def lower(op: UpdateOp, state) -> tuple:
+    """The cached schedule for ``op`` applied to ``state``'s geometry.
+
+    >>> import numpy as np
+    >>> from repro.api import SvdState
+    >>> from repro.updates.ops import Compose, Decay, RankK
+    >>> st = SvdState.from_dense(np.eye(4, 6), rank=2)
+    >>> op = Compose((Decay(0.9), RankK(np.zeros((4, 2)), np.zeros((6, 2)))))
+    >>> lower(op, st)
+    (('decay', (0,)), ('rank1', (1,), 'rank_k', 0), ('rank1', (1,), 'rank_k', 1))
+    """
+    global _hits, _misses
+    st = as_state(state)
+    key = (op.spec(), st.m, st.n, st.rank, st.is_full)
+    with _lock:
+        plan = _cache.get(key)
+        if plan is not None:
+            _hits += 1
+            return plan
+        _misses += 1
+    steps, _ = _build(key[0], st.m, st.n, st.rank, st.is_full, ())
+    plan = tuple(steps)
+    with _lock:
+        _cache[key] = plan
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Execution: bind step data from the op, dispatch through repro.api
+# ---------------------------------------------------------------------------
+
+
+def _resolve(op: UpdateOp, path: tuple) -> UpdateOp:
+    for j in path:
+        op = op.ops[j]
+    return op
+
+
+def _block_factors(op, ctx: dict, path: tuple):
+    """(u, s, v) factors of an op's low-rank block, SVD'd once per apply."""
+    key = (path, "factors")
+    if key not in ctx:
+        if isinstance(op, DenseDelta):
+            u, s, vt = jnp.linalg.svd(jnp.asarray(op.delta), full_matrices=False)
+            r = op.rank
+            ctx[key] = (u[..., :, :r], s[..., :r], jnp.swapaxes(vt, -1, -2)[..., :, :r])
+        elif isinstance(op, AppendRows) and op.rows is not None:
+            u, s, vt = jnp.linalg.svd(jnp.asarray(op.rows), full_matrices=False)
+            ctx[key] = (u, s, jnp.swapaxes(vt, -1, -2))
+        elif isinstance(op, AppendCols) and op.cols is not None:
+            u, s, vt = jnp.linalg.svd(jnp.asarray(op.cols), full_matrices=False)
+            ctx[key] = (u, s, jnp.swapaxes(vt, -1, -2))
+        else:  # pre-factored append block
+            ctx[key] = (jnp.asarray(op.u), jnp.asarray(op.s), jnp.asarray(op.v))
+    return ctx[key]
+
+
+def _zeros_like_batch(ref, length: int):
+    """Zero filler matching ``ref``'s leading (batch) dims with a trailing
+    axis of ``length``."""
+    return jnp.zeros(ref.shape[:-1] + (length,), ref.dtype)
+
+
+def _col(x, i: int):
+    """Column ``i`` off the last axis — a static slice (cheap on the hot
+    path; ``x[..., :, i]`` would lower to a full gather)."""
+    return lax.index_in_dim(x, i, axis=-1, keepdims=False)
+
+
+def _bind(cur: SvdState, op: UpdateOp, step: tuple, ctx: dict):
+    """The (a, b) pair of one rank-1 step, shaped for the CURRENT geometry."""
+    _, path, kind, i = step
+    src = _resolve(op, path)
+    if kind == "rank_k":
+        return _col(jnp.asarray(src.u), i), _col(jnp.asarray(src.v), i)
+    if kind == "dense_delta":
+        u, s, v = _block_factors(src, ctx, path)
+        return _col(u, i) * lax.index_in_dim(s, i, axis=-1), _col(v, i)
+    u, s, v = _block_factors(src, ctx, path)
+    comp = _col(u, i) * lax.index_in_dim(s, i, axis=-1)
+    if kind == "append_rows":
+        # the block's rows live at the bottom of the (already padded) state
+        a = jnp.concatenate([_zeros_like_batch(comp, cur.m - src.p), comp], axis=-1)
+        return a, _col(v, i)
+    # append_cols: the block's columns live at the right edge
+    v_i = _col(v, i)
+    b = jnp.concatenate([_zeros_like_batch(v_i, cur.n - src.p), v_i], axis=-1)
+    return comp, b
+
+
+def _pad_rows(cur: SvdState, p: int) -> SvdState:
+    pad = jnp.zeros(cur.u.shape[:-2] + (p, cur.rank), cur.u.dtype)
+    return cur.replace(u=jnp.concatenate([cur.u, pad], axis=-2))
+
+
+def _pad_cols(cur: SvdState, p: int) -> SvdState:
+    pad = jnp.zeros(cur.v.shape[:-2] + (p, cur.rank), cur.v.dtype)
+    return cur.replace(v=jnp.concatenate([cur.v, pad], axis=-2))
+
+
+def _exec_free(cur: SvdState, op: UpdateOp, step: tuple) -> SvdState:
+    """Execute a zero-dispatch step (decay fold / geometry pad)."""
+    if step[0] == "decay":
+        lam = jnp.asarray(_resolve(op, step[1]).lam)
+        return cur.replace(s=cur.s * lam)
+    if step[0] == "pad_rows":
+        return _pad_rows(cur, step[1])
+    return _pad_cols(cur, step[1])
+
+
+def apply(state, op: UpdateOp, policy: UpdatePolicy | None = None) -> SvdState:
+    """SVD of ``op.apply_dense(state.materialize())`` by planned rank-1
+    updates — the single structured entry point (also ``repro.api.apply``).
+
+    ``state`` is any SVD container (full or truncated, single or stacked);
+    geometry + policy pick the engine route of every lowered rank-1 step,
+    exactly as in ``api.update``.  Appends require a truncated state.
+
+    >>> import numpy as np
+    >>> from repro import api
+    >>> from repro.updates import RankK
+    >>> rng = np.random.default_rng(0)
+    >>> x = rng.normal(size=(4, 6))
+    >>> uk, vk = rng.normal(size=(4, 2)), rng.normal(size=(6, 2))
+    >>> out = api.apply(api.SvdState.from_dense(x), RankK(uk, vk))
+    >>> ref = np.linalg.svd(x + uk @ vk.T, compute_uv=False)
+    >>> bool(np.allclose(out.s, ref, atol=1e-9))
+    True
+    """
+    st = as_state(state)
+    plan = lower(op, st)
+    ctx: dict = {}
+    for step in plan:
+        if step[0] == "rank1":
+            a, b = _bind(st, op, step, ctx)
+            st = update(st, a, b, policy)
+        else:
+            st = _exec_free(st, op, step)
+    return st
+
+
+def apply_many(
+    states: Sequence,
+    ops: Sequence[UpdateOp],
+    policy: UpdatePolicy | None = None,
+) -> tuple[SvdState, ...]:
+    """Apply ``ops[i]`` to ``states[i]`` with cross-op step batching.
+
+    Execution runs in lockstep waves: free steps (decay folds, geometry
+    pads) advance immediately; then every op's next rank-1 step joins one
+    ``api.update_many`` dispatch, which groups same-geometry steps into
+    single batched engine calls.  A rank-k update of B same-geometry streams
+    therefore costs k batched dispatches instead of B*k sequential singles.
+
+    >>> import numpy as np
+    >>> from repro import api
+    >>> from repro.updates import Decay, RankK
+    >>> rng = np.random.default_rng(1)
+    >>> sts = [api.SvdState.from_dense(rng.normal(size=(4, 5)), rank=3)
+    ...        for _ in range(3)]
+    >>> ops = [RankK(rng.normal(size=(4, 2)), rng.normal(size=(5, 2))),
+    ...        RankK(rng.normal(size=(4, 2)), rng.normal(size=(5, 2))),
+    ...        Decay(0.5)]
+    >>> outs = api.apply_many(sts, ops)
+    >>> len(outs), outs[2].rank
+    (3, 3)
+    >>> bool(np.allclose(outs[2].s, 0.5 * np.asarray(sts[2].s)))
+    True
+    """
+    sts = [as_state(s) for s in states]
+    if len(sts) != len(ops):
+        raise ValueError(f"{len(sts)} states but {len(ops)} ops")
+    for i, st in enumerate(sts):
+        if st.is_batched:
+            raise ValueError(
+                f"apply_many takes unbatched states; state {i} is stacked "
+                f"(u {st.u.shape}) — call apply() on it directly"
+            )
+    plans = [lower(op, st) for op, st in zip(ops, sts)]
+
+    out: list[SvdState | None] = [None] * len(sts)
+    groups: dict[tuple, list[int]] = {}
+    for i, (st, plan) in enumerate(zip(sts, plans)):
+        groups.setdefault((st.geometry, plan), []).append(i)
+
+    for (_, plan), idxs in groups.items():
+        if len(idxs) == 1:
+            i = idxs[0]
+            out[i] = apply(sts[i], ops[i], policy)
+            continue
+        # same plan + geometry: stack ONCE, run the whole schedule batched —
+        # every rank-1 step is one engine dispatch for the whole group, and
+        # the stack/unstack cost is paid once, not once per step
+        group_ops = [ops[i] for i in idxs]
+        ctxs: list[dict] = [{} for _ in idxs]
+        cur = SvdState(
+            u=jnp.stack([sts[i].u for i in idxs]),
+            s=jnp.stack([sts[i].s for i in idxs]),
+            v=jnp.stack([sts[i].v for i in idxs]),
+        )
+        for step in plan:
+            if step[0] == "rank1":
+                # _bind only reads the (shared) geometry off ``cur``, so the
+                # stacked state binds each member's unbatched vectors fine
+                pairs = [
+                    _bind(cur, op, step, ctx)
+                    for op, ctx in zip(group_ops, ctxs)
+                ]
+                a = jnp.stack([p[0] for p in pairs])
+                b = jnp.stack([p[1] for p in pairs])
+                cur = update(cur, a, b, policy)
+            elif step[0] == "decay":
+                lams = jnp.stack(
+                    [jnp.asarray(_resolve(op, step[1]).lam) for op in group_ops]
+                )
+                cur = cur.replace(s=cur.s * lams[:, None])
+            elif step[0] == "pad_rows":
+                cur = _pad_rows(cur, step[1])
+            else:
+                cur = _pad_cols(cur, step[1])
+        for j, i in enumerate(idxs):
+            out[i] = SvdState(u=cur.u[j], s=cur.s[j], v=cur.v[j],
+                              mesh=sts[i].mesh)
+    return tuple(out)
+
+
+def warmup_plan(
+    policy: UpdatePolicy,
+    op: UpdateOp,
+    *,
+    m: int,
+    n: int,
+    rank: int | None = None,
+    batch: int | None = None,
+    dtype=jnp.float64,
+):
+    """AOT-warm every engine geometry ``op``'s schedule will dispatch
+    (appends shift the geometry mid-schedule; each distinct one is warmed).
+
+    Returns the list of ``(m, n)`` geometries warmed.
+    """
+    r = rank if rank is not None else m
+    spec = op.spec()
+    steps, _ = _build(spec, m, n, r, rank is None, ())
+    geoms: list[tuple[int, int]] = []
+    cur_m, cur_n = m, n
+    for step in steps:
+        if step[0] == "pad_rows":
+            cur_m += step[1]
+        elif step[0] == "pad_cols":
+            cur_n += step[1]
+        elif step[0] == "rank1" and (cur_m, cur_n) not in geoms:
+            geoms.append((cur_m, cur_n))
+    for gm, gn in geoms:
+        warmup(policy, m=gm, n=gn, batch=batch, rank=rank, dtype=dtype)
+    return geoms

@@ -21,6 +21,8 @@ API_SURFACE = [
     "METHODS",
     "SvdState",
     "UpdatePolicy",
+    "apply",          # structured perturbations (repro.updates, DESIGN §10)
+    "apply_many",
     "as_state",
     "engine_for",
     "update",

@@ -221,6 +221,169 @@ def test_snapshot_is_a_barrier_and_preserves_stats(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# snapshot v2: structured pending events + the warmed-geometry set
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_v2_roundtrips_structured_events_bitwise(tmp_path):
+    """A FIFO holding a rank-k bucket, a decay fold, an append, and a
+    post-append pair must survive save/load and drain bitwise (ISSUE 5
+    acceptance)."""
+    from repro.updates import AppendRows, Compose, Decay, RankK
+
+    m, n, r = 8, 10, 3
+
+    def build():
+        rng = np.random.default_rng(21)
+        svc = SvdService(max_batch=16)
+        svc.register("x", _fresh(m, n, r, np.random.default_rng(20)))
+        svc.enqueue("x", jnp.asarray(rng.normal(size=m)),
+                    jnp.asarray(rng.normal(size=n)))
+        svc.enqueue_op("x", RankK(jnp.asarray(rng.normal(size=(m, 2))),
+                                  jnp.asarray(rng.normal(size=(n, 2)))))
+        svc.enqueue_op("x", Compose((
+            Decay(0.9), AppendRows(jnp.asarray(rng.normal(size=(2, n)))),
+        )))
+        svc.enqueue("x", jnp.asarray(rng.normal(size=m + 2)),
+                    jnp.asarray(rng.normal(size=n)))
+        return svc
+
+    ref = build()
+    svc = build()
+    snap = svc.snapshot()
+    assert snap.version == SNAPSHOT_VERSION == 2
+    assert "o" in "".join(snap.pending_order)      # structured events present
+    svc.save(tmp_path, step=1)
+    _, restored = SvdService.restore(tmp_path)
+    assert restored.pending("x") == ref.pending("x")
+
+    ref.drain()
+    restored.drain()
+    assert restored.state("x").shape == (m + 2, n)  # append took effect
+    _exact_states(ref, restored, ["x"])
+    assert restored.stats.ops_applied == ref.stats.ops_applied > 0
+
+
+def test_snapshot_v1_aux_skeleton_compat():
+    """v1 aux specs (no pending_ops/pending_order/warmed) build a skeleton
+    whose leaf list matches the v1 layout — the in-place upgrade path."""
+    aux_v1 = {
+        "format": "repro.serve.ServiceSnapshot",
+        "version": 1,
+        "stream_ids": ["a", "b"],
+        "policy": {"method": "direct", "fmm_p": 20, "sign_fix": True,
+                   "deflate_rtol": None, "precision": None,
+                   "batch_axis": "data", "truncate_to": None,
+                   "had_mesh": False},
+        "max_batch": 8,
+        "pad_to_bucket": True,
+        "max_in_flight": 2,
+        "stats": {"enqueued": 3, "applied": 1},
+    }
+    skel = ServiceSnapshot.skeleton(aux_v1)
+    # 3 state leaves + 2 pending leaves per stream, nothing from v2 fields
+    assert len(jax.tree.leaves(skel)) == 2 * 5
+    assert skel.pending_ops == ((), ())
+    assert skel.pending_order == ()
+    assert skel.warmed == ()
+    # all-pair reconstruction: order=None means "p" * len(pending)
+    svc = SvdService.from_snapshot(
+        ServiceSnapshot(
+            states=tuple(
+                SvdState(*_fresh(6, 7, 2, np.random.default_rng(s)))
+                for s in (0, 1)
+            ),
+            pending_a=(np.zeros((2, 6)), np.zeros((0, 6))),
+            pending_b=(np.zeros((2, 7)), np.zeros((0, 7))),
+            pending_ops=((), ()),
+            stream_ids=("a", "b"),
+            policy_spec=tuple(aux_v1["policy"].items()),
+            stats=tuple(aux_v1["stats"].items()),
+            pending_order=(),
+        )
+    )
+    assert svc.pending("a") == 2 and svc.pending("b") == 0
+
+
+_RESTORE_WARM_SCRIPT = textwrap.dedent("""
+    import json, sys
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np, jax.numpy as jnp
+    from repro.core.svd_update import TruncatedSvd
+    from repro.serve import SvdService
+
+    mode, ckpt_dir = sys.argv[1:3]
+    rng = np.random.default_rng(13)
+    M, N, R, S = 8, 10, 3, 4
+    streams = [TruncatedSvd(
+        jnp.asarray(np.linalg.qr(rng.normal(size=(M, R)))[0]),
+        jnp.asarray(np.sort(np.abs(rng.normal(size=R)))[::-1].copy()),
+        jnp.asarray(np.linalg.qr(rng.normal(size=(N, R)))[0]),
+    ) for _ in range(S)]
+
+    def feed_round(svc):
+        for i in range(S):
+            svc.enqueue(f"s{i}", jnp.asarray(rng.normal(size=M)),
+                        jnp.asarray(rng.normal(size=N)))
+
+    if mode == "save":
+        svc = SvdService(max_batch=S)
+        for i, t in enumerate(streams):
+            svc.register(f"s{i}", t)
+        feed_round(svc)          # auto-flush warms the (S, M, N, R) geometry
+        svc.drain()
+        snap = svc.snapshot()
+        assert len(snap.warmed) >= 1, snap.warmed
+        svc.save(ckpt_dir, step=1)
+        print(json.dumps({"warmed": [list(w) for w in snap.warmed]}))
+        sys.exit(0)
+
+    # resume phase: restore must eagerly AOT-warm the recorded geometries so
+    # the FIRST post-restore flush never compiles (ROADMAP cold-start item)
+    step, svc = SvdService.restore(ckpt_dir)
+    eng = svc._engine_for(R)
+    info0 = eng.cache_info()
+    assert info0.entries >= 1, info0          # warmup populated the cache
+    feed_round(svc)
+    svc.drain()                               # first flush after restore
+    info1 = eng.cache_info()
+    print(json.dumps({
+        "entries_before": info0.entries, "misses_before": info0.misses,
+        "misses_after": info1.misses, "hits_gained": info1.hits - info0.hits,
+    }))
+""")
+
+
+def test_restore_then_first_flush_does_not_recompile(tmp_path):
+    """ServiceSnapshot records the warmed (kind, geometry) set; restore in a
+    FRESH process api.warmup's it eagerly, so the first flush is a pure plan
+    cache hit — zero new compiles under traffic."""
+    env = {
+        "PYTHONPATH": str(REPO / "src"),
+        "PATH": "/usr/bin:/bin",
+        "JAX_PLATFORMS": "cpu",
+        "HOME": "/tmp",
+    }
+    save = subprocess.run(
+        [sys.executable, "-c", _RESTORE_WARM_SCRIPT, "save", str(tmp_path)],
+        capture_output=True, text=True, timeout=420, env=env,
+    )
+    assert save.returncode == 0, f"save stderr:\n{save.stderr[-4000:]}"
+    warmed = json.loads(save.stdout.strip().splitlines()[-1])["warmed"]
+    assert any(w[0] == "trunc_batch" for w in warmed)
+
+    resume = subprocess.run(
+        [sys.executable, "-c", _RESTORE_WARM_SCRIPT, "resume", str(tmp_path)],
+        capture_output=True, text=True, timeout=420, env=env,
+    )
+    assert resume.returncode == 0, f"resume stderr:\n{resume.stderr[-4000:]}"
+    out = json.loads(resume.stdout.strip().splitlines()[-1])
+    assert out["misses_after"] == out["misses_before"]   # no recompile
+    assert out["hits_gained"] >= 1                       # traffic hit the cache
+
+
+# ---------------------------------------------------------------------------
 # the async double buffer
 # ---------------------------------------------------------------------------
 

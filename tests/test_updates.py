@@ -1,0 +1,462 @@
+"""``repro.updates`` — op algebra, planner lowering, and exact-reference
+parity on every dispatch route (ISSUE 5 acceptance).
+
+Parity contract: ``api.apply(state, op).materialize()`` must match the
+rank-r reconstruction of ``jnp.linalg.svd(op.apply_dense(A))`` for every op
+type and ``Compose`` ordering, on the single, batched, truncated, and
+mesh-sharded routes (the golden-harness style of ``test_api_compat.py``).
+Truncated routes use rank-budgeted problems (low-rank data inside a roomy
+state) where the Brand truncation discards exact zeros, so the comparison
+is tight.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.api import SvdState, UpdatePolicy
+from repro.core.engine import default_engine
+from repro.updates import (
+    AppendCols,
+    AppendRows,
+    Compose,
+    Decay,
+    DenseDelta,
+    RankK,
+    apply_many,
+    lower,
+    schedule_cache_info,
+    skeleton_from_spec,
+    spec_from_json,
+    spec_to_json,
+    warmup_plan,
+)
+
+RNG = np.random.default_rng(11)
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _lowrank(m, n, r, rng=RNG):
+    """A dense (m, n) matrix of exact rank r."""
+    return rng.normal(size=(m, r)) @ rng.normal(size=(r, n))
+
+
+def _top_r_reconstruction(dense, r):
+    u, s, vt = np.linalg.svd(np.asarray(dense), full_matrices=False)
+    return (u[:, :r] * s[:r]) @ vt[:r]
+
+
+def _assert_parity(state, op, *, atol=1e-10):
+    """api.apply(state, op).materialize() == top-rank reconstruction of the
+    dense reference — the ISSUE acceptance identity."""
+    out = api.apply(state, op)
+    dense = np.asarray(op.apply_dense(np.asarray(state.materialize())))
+    rec = _top_r_reconstruction(dense, out.rank)
+    np.testing.assert_allclose(np.asarray(out.materialize()), rec, atol=atol)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# op algebra: dense semantics, geometry, specs, pytree behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_op_dense_semantics_and_geometry():
+    a_mat = RNG.normal(size=(4, 6))
+    uk, vk = RNG.normal(size=(4, 2)), RNG.normal(size=(6, 2))
+    np.testing.assert_allclose(
+        np.asarray(RankK(uk, vk).apply_dense(a_mat)), a_mat + uk @ vk.T
+    )
+    rows = RNG.normal(size=(3, 6))
+    op = AppendRows(rows)
+    assert op.out_shape(4, 6) == (7, 6)
+    np.testing.assert_allclose(
+        np.asarray(op.apply_dense(a_mat)), np.concatenate([a_mat, rows])
+    )
+    cols = RNG.normal(size=(4, 2))
+    assert AppendCols(cols).out_shape(4, 6) == (4, 8)
+    np.testing.assert_allclose(
+        np.asarray(Decay(0.25).apply_dense(a_mat)), 0.25 * a_mat
+    )
+    comp = Compose((Decay(2.0), AppendRows(rows), RankK(np.zeros((7, 1)),
+                                                        np.zeros((6, 1)))))
+    assert comp.out_shape(4, 6) == (7, 6)
+    np.testing.assert_allclose(
+        np.asarray(comp.apply_dense(a_mat)),
+        np.concatenate([2.0 * a_mat, rows]),
+    )
+
+
+def test_op_validation():
+    with pytest.raises(ValueError, match="either rows= or from_svd"):
+        AppendRows()
+    with pytest.raises(ValueError, match="either rows= or from_svd"):
+        AppendRows(rows=np.zeros((1, 2)), u=np.zeros((1, 1)),
+                   s=np.zeros(1), v=np.zeros((2, 1)))
+    with pytest.raises(ValueError, match="sketch rank"):
+        DenseDelta(np.zeros((2, 2)), rank=0)
+    with pytest.raises(TypeError, match="UpdateOps"):
+        Compose((Decay(0.5), "not-an-op"))
+
+
+def test_specs_roundtrip_and_skeletons():
+    ops = [
+        RankK(np.zeros((3, 2)), np.zeros((4, 2))),
+        AppendRows(np.zeros((2, 4))),
+        AppendRows.from_svd(np.zeros((2, 1)), np.zeros(1), np.zeros((4, 1))),
+        AppendCols.from_svd(np.zeros((3, 1)), np.zeros(1), np.zeros((2, 1))),
+        DenseDelta(np.zeros((3, 4)), rank=2),
+        Decay(0.5),
+        Compose((Decay(0.9), RankK(np.zeros((3, 1)), np.zeros((4, 1))))),
+    ]
+    for op in ops:
+        spec = op.spec()
+        assert hash(spec) is not None                       # cache-key-able
+        assert spec_from_json(json.loads(json.dumps(spec_to_json(spec)))) == spec
+        skel = skeleton_from_spec(spec)
+        assert jax.tree.structure(skel) == jax.tree.structure(op)
+
+
+def test_ops_are_pytrees():
+    op = Compose((Decay(0.5), RankK(jnp.ones((2, 1)), jnp.ones((3, 1)))))
+    doubled = jax.tree.map(lambda x: 2 * x, op)
+    assert isinstance(doubled, Compose)
+    assert float(np.asarray(doubled.ops[0].lam)) == 1.0
+    assert len(jax.tree.leaves(op)) == 3                    # lam + u + v
+
+
+# ---------------------------------------------------------------------------
+# parity: full (single + batched) routes
+# ---------------------------------------------------------------------------
+
+
+def _full_state(m, n, rng=RNG):
+    return SvdState.from_dense(jnp.asarray(rng.uniform(1, 9, (m, n))))
+
+
+@pytest.mark.parametrize("make_op", [
+    lambda m, n, rng: RankK(rng.normal(size=(m, 3)), rng.normal(size=(n, 3))),
+    lambda m, n, rng: DenseDelta(_lowrank(m, n, 2, rng), rank=2),
+    lambda m, n, rng: Decay(0.7),
+    lambda m, n, rng: Compose((
+        Decay(0.9),
+        RankK(rng.normal(size=(m, 2)), rng.normal(size=(n, 2))),
+        DenseDelta(_lowrank(m, n, 1, rng), rank=1),
+    )),
+], ids=["rank_k", "dense_delta", "decay", "compose"])
+def test_full_single_parity(make_op):
+    rng = np.random.default_rng(0)
+    st = _full_state(6, 9, rng)
+    _assert_parity(st, make_op(6, 9, rng), atol=1e-9)
+
+
+def test_full_batched_parity_matches_loop_of_singles():
+    rng = np.random.default_rng(1)
+    b_sz, m, n = 4, 5, 7
+    singles = [_full_state(m, n, rng) for _ in range(b_sz)]
+    stacked = SvdState(
+        u=jnp.stack([s.u for s in singles]),
+        s=jnp.stack([s.s for s in singles]),
+        v=jnp.stack([s.v for s in singles]),
+    )
+    uk = rng.normal(size=(b_sz, m, 2))
+    vk = rng.normal(size=(b_sz, n, 2))
+    out = api.apply(stacked, RankK(uk, vk))
+    assert out.is_batched and out.batch == b_sz
+    for i in range(b_sz):
+        ref = api.apply(singles[i], RankK(uk[i], vk[i]))
+        np.testing.assert_allclose(np.asarray(out.materialize()[i]),
+                                   np.asarray(ref.materialize()), atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# parity: truncated routes (appends live here; rank-budgeted exactness)
+# ---------------------------------------------------------------------------
+
+
+def _roomy_state(m, n, data_rank, state_rank, rng=RNG):
+    """Truncated state over exact-rank-``data_rank`` data with headroom."""
+    return SvdState.from_dense(jnp.asarray(_lowrank(m, n, data_rank, rng)),
+                               rank=state_rank)
+
+
+@pytest.mark.parametrize("make_op", [
+    lambda m, n, rng: RankK(rng.normal(size=(m, 1)), rng.normal(size=(n, 1))),
+    lambda m, n, rng: AppendRows(_lowrank(3, n, 1, rng)),
+    lambda m, n, rng: AppendRows.from_svd(
+        np.linalg.qr(rng.normal(size=(3, 2)))[0],
+        np.abs(rng.normal(size=2)) + 1,
+        np.linalg.qr(rng.normal(size=(n, 2)))[0]),
+    lambda m, n, rng: AppendCols(_lowrank(m, 2, 1, rng)),
+    lambda m, n, rng: Compose((
+        Decay(0.8),
+        AppendRows(_lowrank(2, n, 1, rng)),
+        RankK(rng.normal(size=(m + 2, 1)), rng.normal(size=(n, 1))),
+    )),
+], ids=["rank1", "append_rows", "append_rows_factored", "append_cols",
+        "compose_decay_append_rank1"])
+def test_truncated_single_parity(make_op):
+    rng = np.random.default_rng(2)
+    m, n = 7, 10
+    st = _roomy_state(m, n, data_rank=2, state_rank=6, rng=rng)
+    _assert_parity(st, make_op(m, n, rng), atol=1e-8)
+
+
+def test_compose_orderings_differ_and_each_matches():
+    """Decay-then-RankK != RankK-then-Decay; both lower exactly."""
+    rng = np.random.default_rng(3)
+    m, n = 6, 8
+    st = _roomy_state(m, n, data_rank=2, state_rank=5, rng=rng)
+    uk, vk = rng.normal(size=(m, 1)), rng.normal(size=(n, 1))
+    ab = Compose((Decay(0.5), RankK(uk, vk)))
+    ba = Compose((RankK(uk, vk), Decay(0.5)))
+    out_ab = _assert_parity(st, ab, atol=1e-8)
+    out_ba = _assert_parity(st, ba, atol=1e-8)
+    gap = np.abs(np.asarray(out_ab.materialize())
+                 - np.asarray(out_ba.materialize())).max()
+    assert gap > 1e-3          # genuinely different operators
+
+
+def test_truncated_batched_parity():
+    rng = np.random.default_rng(4)
+    b_sz, m, n, r = 5, 6, 8, 4
+    singles = [_roomy_state(m, n, 2, r, rng) for _ in range(b_sz)]
+    stacked = SvdState(
+        u=jnp.stack([s.u for s in singles]),
+        s=jnp.stack([s.s for s in singles]),
+        v=jnp.stack([s.v for s in singles]),
+    )
+    uk = rng.normal(size=(b_sz, m, 2))
+    vk = rng.normal(size=(b_sz, n, 2))
+    out = api.apply(stacked, RankK(uk, vk))
+    for i in range(b_sz):
+        dense = np.asarray(singles[i].materialize()) + uk[i] @ vk[i].T
+        np.testing.assert_allclose(np.asarray(out.materialize()[i]),
+                                   _top_r_reconstruction(dense, r), atol=1e-8)
+
+
+def test_append_requires_truncated_state():
+    st = _full_state(4, 6)
+    with pytest.raises(ValueError, match="truncated state"):
+        api.apply(st, AppendRows(np.zeros((2, 6))))
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded route (8 fake devices, subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_sharded_apply_parity_on_8_devices():
+    script = textwrap.dedent("""
+        import json
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        import jax.numpy as jnp, numpy as np
+        from repro import api
+        from repro.updates import RankK
+
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        B, m, n, r, k = 8, 6, 8, 4, 3
+
+        def lowrank(m, n, q):
+            return rng.normal(size=(m, q)) @ rng.normal(size=(q, n))
+
+        dense = np.stack([lowrank(m, n, 1) for _ in range(B)])
+        sts = [api.SvdState.from_dense(jnp.asarray(d), rank=r) for d in dense]
+        stacked = api.SvdState(
+            u=jnp.stack([s.u for s in sts]),
+            s=jnp.stack([s.s for s in sts]),
+            v=jnp.stack([s.v for s in sts]),
+        )
+        uk = rng.normal(size=(B, m, k)); vk = rng.normal(size=(B, n, k))
+        pol = api.UpdatePolicy(method="direct", mesh=mesh, batch_axis="data")
+        out = api.apply(stacked, RankK(uk, vk), pol)
+        err = 0.0
+        for i in range(B):
+            d = dense[i] + uk[i] @ vk[i].T
+            u, s, vt = np.linalg.svd(d, full_matrices=False)
+            rec = (u[:, :r] * s[:r]) @ vt[:r]
+            err = max(err, float(np.abs(np.asarray(out.materialize()[i]) - rec).max()))
+        print(json.dumps({"err": err, "devices": jax.device_count()}))
+    """)
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, timeout=420,
+        env={
+            "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+            "PYTHONPATH": str(REPO / "src"),
+            "PATH": "/usr/bin:/bin",
+            "JAX_PLATFORMS": "cpu",
+            "HOME": "/tmp",
+        },
+    )
+    assert proc.returncode == 0, f"stderr:\n{proc.stderr[-4000:]}"
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["devices"] == 8
+    assert out["err"] < 1e-8
+
+
+# ---------------------------------------------------------------------------
+# planner: schedule cache, free decay, cross-op batching
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_cache_hits_on_same_shape():
+    rng = np.random.default_rng(5)
+    st = _roomy_state(6, 8, 2, 4, rng)
+    op1 = RankK(rng.normal(size=(6, 2)), rng.normal(size=(8, 2)))
+    op2 = RankK(rng.normal(size=(6, 2)), rng.normal(size=(8, 2)))
+    lower(op1, st)
+    before = schedule_cache_info()
+    plan = lower(op2, st)                # same spec + geometry -> cache hit
+    after = schedule_cache_info()
+    assert after.hits == before.hits + 1
+    assert after.misses == before.misses
+    assert [s[0] for s in plan] == ["rank1", "rank1"]
+
+
+def test_decay_is_free_of_engine_dispatches():
+    rng = np.random.default_rng(6)
+    st = _roomy_state(6, 8, 2, 4, rng)
+    # a private engine configuration: any dispatch would show up here
+    pol = UpdatePolicy(method="direct", deflate_rtol=3.25e-13)
+    eng = default_engine("direct", deflate_rtol=3.25e-13)
+    before = eng.cache_info()
+    out = api.apply(st, Decay(0.5), pol)
+    after = eng.cache_info()
+    assert (after.hits, after.misses) == (before.hits, before.misses)
+    np.testing.assert_allclose(np.asarray(out.s), 0.5 * np.asarray(st.s),
+                               rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(out.u), np.asarray(st.u), rtol=0, atol=0)
+
+
+def test_apply_many_batches_rank_k_across_streams():
+    """B streams x rank-k: the planner runs k BATCHED dispatches (one
+    geometry entry, k calls), not B*k singles — and matches the sequential
+    reference exactly."""
+    rng = np.random.default_rng(7)
+    b_sz, m, n, r, k = 6, 6, 8, 4, 3
+    sts = [_roomy_state(m, n, 1, r, rng) for _ in range(b_sz)]
+    ops = [RankK(rng.normal(size=(m, k)), rng.normal(size=(n, k)))
+           for _ in range(b_sz)]
+
+    # private engine config so dispatch accounting is isolated
+    pol = UpdatePolicy(method="direct", deflate_rtol=7.25e-13)
+    eng = default_engine("direct", deflate_rtol=7.25e-13)
+    assert eng.cache_info().entries == 0
+    outs = apply_many(sts, ops, pol)
+    info = eng.cache_info()
+    assert info.entries == 1               # ONE batched geometry, reused
+    assert info.misses == 1 and info.hits == k - 1
+
+    for st, op, out in zip(sts, ops, outs):
+        seq = st
+        for i in range(k):
+            seq = api.update(seq, op.u[:, i], op.v[:, i], pol)
+        np.testing.assert_allclose(np.asarray(out.materialize()),
+                                   np.asarray(seq.materialize()), atol=1e-9)
+
+
+def test_apply_many_mixed_ops_and_geometries():
+    rng = np.random.default_rng(8)
+    sts = [
+        _roomy_state(6, 8, 1, 4, rng),
+        _roomy_state(6, 8, 1, 4, rng),
+        _roomy_state(5, 9, 1, 3, rng),
+    ]
+    ops = [
+        RankK(rng.normal(size=(6, 2)), rng.normal(size=(8, 2))),
+        Compose((Decay(0.5), RankK(rng.normal(size=(6, 2)),
+                                   rng.normal(size=(8, 2))))),
+        Decay(0.25),
+    ]
+    outs = apply_many(sts, ops, UpdatePolicy(method="direct"))
+    for st, op, out in zip(sts, ops, outs):
+        dense = np.asarray(op.apply_dense(np.asarray(st.materialize())))
+        np.testing.assert_allclose(np.asarray(out.materialize()),
+                                   _top_r_reconstruction(dense, out.rank),
+                                   atol=1e-8)
+
+
+def test_warmup_plan_covers_append_geometries():
+    pol = UpdatePolicy(method="direct")
+    op = Compose((AppendRows(np.zeros((2, 8))),
+                  RankK(np.zeros((8, 1)), np.zeros((8, 1)))))
+    geoms = warmup_plan(pol, op, m=6, n=8, rank=4, dtype=jnp.float64)
+    assert geoms == [(8, 8)]               # post-append geometry warmed
+
+
+# ---------------------------------------------------------------------------
+# api surface
+# ---------------------------------------------------------------------------
+
+
+def test_api_exposes_apply():
+    from repro.updates import planner
+
+    assert api.apply is planner.apply
+    assert api.apply_many is planner.apply_many
+    assert "apply" in api.__all__ and "apply_many" in api.__all__
+
+
+def test_apply_many_rejects_stacked_states():
+    st = SvdState(u=jnp.zeros((2, 4, 3)), s=jnp.ones((2, 3)),
+                  v=jnp.zeros((2, 5, 3)))
+    with pytest.raises(ValueError, match="unbatched"):
+        apply_many([st], [Decay(0.5)])
+
+
+# ---------------------------------------------------------------------------
+# dist.merge: mixed-height shards ride the AppendRows lowering
+# ---------------------------------------------------------------------------
+
+
+def test_merge_append_matches_dense_svd():
+    from repro.dist.merge import merge_append, merge_tree
+
+    rng = np.random.default_rng(9)
+    n, r = 10, 3
+    blocks = [jnp.asarray(_lowrank(m_i, n, 1, rng)) for m_i in (6, 4, 3)]
+    shards = [SvdState.from_dense(b, rank=r) for b in blocks]
+
+    merged = merge_append(shards[0], shards[1], rank=r)
+    dense = np.concatenate([np.asarray(b) for b in blocks[:2]])
+    got = np.asarray(merged.u) * np.asarray(merged.s) @ np.asarray(merged.v).T
+    np.testing.assert_allclose(got, _top_r_reconstruction(dense, r), atol=1e-8)
+
+    # the tree merge routes mixed heights through the same lowering
+    out = merge_tree(shards, rank=r)
+    dense = np.concatenate([np.asarray(b) for b in blocks])
+    got = np.asarray(out.u) * np.asarray(out.s) @ np.asarray(out.v).T
+    np.testing.assert_allclose(got, _top_r_reconstruction(dense, r), atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# optim: rank-k tracker absorb through the planner
+# ---------------------------------------------------------------------------
+
+
+def test_compression_tracker_rank_k():
+    from repro.optim import compression as C
+
+    key = jax.random.PRNGKey(0)
+    m, n, r = 12, 10, 4
+    st = C.compression_init(key, m, n, r, jnp.float64)
+    g = jnp.asarray(np.random.default_rng(10).normal(size=(m, n)))
+    gh1, s1 = C.compress_decompress(st, g, tracker_rank=1)
+    gh3, s3 = C.compress_decompress(st, g, tracker_rank=3)
+    # the compressed gradient is tracker-independent
+    np.testing.assert_allclose(np.asarray(gh1), np.asarray(gh3), rtol=0, atol=0)
+    # a rank-k absorb captures strictly more spectral mass than rank-1
+    assert float(s3.tracker.s.sum()) > float(s1.tracker.s.sum())
+    assert int((np.asarray(s3.tracker.s) > 1e-8).sum()) >= 3
