@@ -148,4 +148,5 @@ def run() -> dict:
 
 
 if __name__ == "__main__":
+    jax.config.update("jax_enable_x64", True)
     run()

@@ -5,6 +5,12 @@ states, run (a) as a Python loop of plan-cached single `SvdEngine.update`
 calls and (b) as ONE `SvdEngine.update_batch` call, plus the same comparison for the
 rank-r streaming truncated update (the optimizer/serving hot path).
 
+On top of the unfused (direct) route, each batch size gets fused-megakernel
+cells (`method="fused"`, kernels.fused_update — the whole update resident
+per batch element) and a bf16-storage fused cell (the mixed-precision mode,
+DESIGN.md §11).  All speedups are against the SAME per-update direct loop
+baseline, so fused-vs-unfused reads straight off the rows.
+
 CSV rows (benchmarks/run.py style):
   bench_engine/<kind>/<method>/B=<b>,us,updates_per_s=... speedup=...
 
@@ -60,6 +66,9 @@ def run() -> dict:
     rng = np.random.default_rng(0)
     results: list[dict] = []
 
+    fused_engine = SvdEngine(method="fused")
+    fused_bf16_engine = SvdEngine(method="fused", storage_dtype=jnp.bfloat16)
+
     for method in METHODS:
         engine = SvdEngine(method=method)
 
@@ -97,6 +106,38 @@ def run() -> dict:
                 f"updates_per_s={row['updates_per_s_batch']:.0f} speedup={row['speedup']:.2f}x",
             )
 
+            # fused megakernel and bf16-storage fused, against the SAME
+            # direct per-update loop baseline (fused-vs-unfused cells)
+            for fm, feng, cast in (
+                ("fused", fused_engine, lambda x: x),
+                ("fused_bf16", fused_bf16_engine,
+                 lambda x: x.astype(jnp.bfloat16)),
+            ):
+                fu, fs, fv, fa, fbb = (cast(x) for x in (u, s, v, a, bb))
+
+                def batch_fused(fu, fs, fv, fa, fbb):
+                    return feng.update_batch(fu, fs, fv, fa, fbb).s
+
+                us_f = time_fn(batch_fused, fu, fs, fv, fa, fbb)
+                row = {
+                    "kind": "full",
+                    "method": fm,
+                    "batch": b,
+                    "m": M,
+                    "n": N,
+                    "us_loop": us_loop,
+                    "us_batch": us_f,
+                    "updates_per_s_loop": b / (us_loop * 1e-6),
+                    "updates_per_s_batch": b / (us_f * 1e-6),
+                    "speedup": us_loop / us_f,
+                }
+                results.append(row)
+                emit(
+                    f"bench_engine/full/{fm}/B={b}",
+                    us_f,
+                    f"updates_per_s={row['updates_per_s_batch']:.0f} speedup={row['speedup']:.2f}x",
+                )
+
             t, ta, tb = _trunc_problem(rng, b)
 
             def loop_trunc(t, ta, tb):
@@ -130,6 +171,30 @@ def run() -> dict:
             emit(
                 f"bench_engine/truncated/{method}/B={b}",
                 us_batch,
+                f"updates_per_s={row['updates_per_s_batch']:.0f} speedup={row['speedup']:.2f}x",
+            )
+
+            def batch_trunc_fused(t, ta, tb):
+                return fused_engine.update_truncated_batch(t, ta, tb).s
+
+            us_tf = time_fn(batch_trunc_fused, t, ta, tb)
+            row = {
+                "kind": "truncated",
+                "method": "fused",
+                "batch": b,
+                "m": M,
+                "n": N,
+                "rank": RANK,
+                "us_loop": us_loop,
+                "us_batch": us_tf,
+                "updates_per_s_loop": b / (us_loop * 1e-6),
+                "updates_per_s_batch": b / (us_tf * 1e-6),
+                "speedup": us_loop / us_tf,
+            }
+            results.append(row)
+            emit(
+                f"bench_engine/truncated/fused/B={b}",
+                us_tf,
                 f"updates_per_s={row['updates_per_s_batch']:.0f} speedup={row['speedup']:.2f}x",
             )
 

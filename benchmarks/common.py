@@ -7,8 +7,12 @@ import time
 import jax
 
 
-def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall time (us) of fn(*args) with block_until_ready."""
+def time_fn(fn, *args, warmup: int = 2, iters: int = 7) -> float:
+    """Min wall time (us) of fn(*args) with block_until_ready.
+
+    Min, not median: scheduler noise on a shared box is strictly additive,
+    so the fastest repetition is the best estimate of the true cost.
+    """
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
@@ -18,8 +22,7 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
         out = fn(*args)
         jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
-    ts.sort()
-    return ts[len(ts) // 2] * 1e6
+    return min(ts) * 1e6
 
 
 def time_host_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:

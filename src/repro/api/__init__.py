@@ -30,7 +30,7 @@ Docstrings on this surface carry runnable ``>>>`` examples, enforced by
 
 from repro.api.policy import METHODS, UpdatePolicy
 from repro.api.state import SvdState, as_state
-from repro.api.update import engine_for, update, update_many, warmup
+from repro.api.update import engine_for, update, update_many, update_rank_k, warmup
 
 __all__ = [
     "METHODS",
@@ -42,6 +42,7 @@ __all__ = [
     "engine_for",
     "update",
     "update_many",
+    "update_rank_k",
     "warmup",
 ]
 

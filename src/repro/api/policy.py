@@ -17,16 +17,20 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
+import numpy as np
+
 from repro.core.eigh_update import _FMM_MIN_N  # auto-resolution matches core's floor
 
 __all__ = ["UpdatePolicy", "METHODS", "policy_from_legacy"]
 
 # "pallas" is the public name for the Pallas Cauchy-kernel route (engine name
-# "kernel" is kept as an alias).  "fast" (Gerasoulis FAST, core.fast) is part
-# of the enum for completeness but is a host-side numpy benchmark baseline —
-# it cannot run inside the jitted engine and dispatch rejects it with a
-# pointer to benchmarks/framework_bench.py.
-METHODS = ("auto", "direct", "fmm", "fast", "pallas", "kernel")
+# "kernel" is kept as an alias).  "fused" is the single-kernel megakernel
+# route (kernels.fused_update): the whole update resident per batch element —
+# auto prefers it whenever the geometry fits its VMEM budget.  "fast"
+# (Gerasoulis FAST, core.fast) is part of the enum for completeness but is a
+# host-side numpy benchmark baseline — it cannot run inside the jitted engine
+# and dispatch rejects it with a pointer to benchmarks/framework_bench.py.
+METHODS = ("auto", "direct", "fmm", "fast", "pallas", "kernel", "fused")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,11 +38,14 @@ class UpdatePolicy:
     """Declarative description of HOW a rank-1 update should run.
 
     Numerics:
-      method       auto | direct | fmm | pallas (| kernel alias | fast: bench only)
-      fmm_p        Chebyshev interpolation order of the FMM route
-      sign_fix     reconcile left/right singular-vector signs (paper gap)
-      deflate_rtol deflation tolerance override (None = core default)
-      precision    jax matmul precision for the update ("highest", ...; None = default)
+      method        auto | direct | fmm | pallas | fused (| kernel alias | fast: bench only)
+      fmm_p         Chebyshev interpolation order of the FMM route
+      sign_fix      reconcile left/right singular-vector signs (paper gap)
+      deflate_rtol  deflation tolerance override (None = core default)
+      precision     jax matmul precision for the update ("highest", ...; None = default)
+      storage_dtype keep SvdState factors in this dtype (e.g. jnp.bfloat16);
+                    16-bit storage computes in f32 inside the engine — the
+                    mixed-precision mode, error budget in DESIGN.md §11
 
     Placement:
       mesh         jax.sharding.Mesh to spread a batched update over (None = local)
@@ -58,7 +65,7 @@ class UpdatePolicy:
     >>> UpdatePolicy(method="svd")
     Traceback (most recent call last):
         ...
-    ValueError: unknown method 'svd'; one of ('auto', 'direct', 'fmm', 'fast', 'pallas', 'kernel')
+    ValueError: unknown method 'svd'; one of ('auto', 'direct', 'fmm', 'fast', 'pallas', 'kernel', 'fused')
     """
 
     method: str = "auto"
@@ -66,6 +73,7 @@ class UpdatePolicy:
     sign_fix: bool = True
     deflate_rtol: float | None = None
     precision: str | None = None
+    storage_dtype: Any = None
     mesh: Any = None
     batch_axis: str = "data"
     truncate_to: int | None = None
@@ -75,15 +83,25 @@ class UpdatePolicy:
             raise ValueError(f"unknown method {self.method!r}; one of {METHODS}")
         if self.truncate_to is not None and self.truncate_to < 1:
             raise ValueError(f"truncate_to must be >= 1; got {self.truncate_to}")
+        if self.storage_dtype is not None:
+            # canonicalize to np.dtype: hashable, comparable, serializable
+            object.__setattr__(self, "storage_dtype", np.dtype(self.storage_dtype))
 
     def replace(self, **kw) -> "UpdatePolicy":
         return dataclasses.replace(self, **kw)
 
     # -- engine folding -----------------------------------------------------
 
-    def resolve_method(self, problem_n: int) -> str:
+    def resolve_method(self, problem_n: int, *, m: int | None = None,
+                       n: int | None = None, rank: int | None = None) -> str:
         """Concrete engine method for a problem of secular size ``problem_n``
         (``n`` for full updates, ``rank + 1`` for truncated ones).
+
+        ``auto`` prefers the fused megakernel whenever enough geometry is
+        known (``m``, plus ``n``/``rank`` where they differ from
+        ``problem_n``) and it fits the kernel's VMEM budget; otherwise it
+        falls back to the FMM-above-the-tree-floor rule.  Callers without
+        geometry get the pre-fused behavior unchanged:
 
         >>> from repro.api import UpdatePolicy
         >>> UpdatePolicy(method="fmm").resolve_method(problem_n=256)
@@ -92,30 +110,42 @@ class UpdatePolicy:
         'direct'
         >>> UpdatePolicy(method="pallas").resolve_method(64)  # public kernel name
         'kernel'
+        >>> UpdatePolicy().resolve_method(48, m=32)  # auto + geometry: fused
+        'fused'
         """
         if self.method == "fast":
             raise NotImplementedError(
                 "method='fast' (Gerasoulis FAST) is the host-side numpy "
                 "benchmark baseline — see benchmarks/framework_bench.py; it "
-                "is not a jittable engine route. Use auto/direct/fmm/pallas."
+                "is not a jittable engine route. Use auto/direct/fmm/pallas/fused."
             )
         if self.method == "pallas":
             return "kernel"
         if self.method == "auto":
+            if m is not None:
+                from repro.kernels.fused_update import fused_supported
+
+                dt = self.storage_dtype if self.storage_dtype is not None else np.float32
+                if fused_supported(m, n if n is not None else problem_n,
+                                   rank, dtype=dt):
+                    return "fused"
             # FMM pays off only above the tree floor; tiny problems (incl.
             # every truncated (r+1)-sized core) run the stable direct route.
             return "fmm" if problem_n >= _FMM_MIN_N else "direct"
         return self.method
 
-    def engine_key(self, problem_n: int) -> tuple:
-        """The (method, fmm_p, sign_fix, deflate_rtol, precision) tuple that
-        keys ``core.engine.default_engine`` — the policy's plan-cache fold."""
+    def engine_key(self, problem_n: int, *, m: int | None = None,
+                   n: int | None = None, rank: int | None = None) -> tuple:
+        """The (method, fmm_p, sign_fix, deflate_rtol, precision,
+        storage_dtype) tuple that keys ``core.engine.default_engine`` — the
+        policy's plan-cache fold."""
         return (
-            self.resolve_method(problem_n),
+            self.resolve_method(problem_n, m=m, n=n, rank=rank),
             self.fmm_p,
             self.sign_fix,
             self.deflate_rtol,
             self.precision,
+            self.storage_dtype,
         )
 
 

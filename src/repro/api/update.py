@@ -37,23 +37,29 @@ from repro.core.engine import (
 )
 from repro.core.svd_update import TruncatedSvd
 
-__all__ = ["engine_for", "update", "update_many", "warmup"]
+__all__ = ["engine_for", "update", "update_many", "update_rank_k", "warmup"]
 
 _DEFAULT_POLICY = UpdatePolicy()
 
 
-def engine_from_key(policy: UpdatePolicy, problem_n: int) -> SvdEngine:
+def engine_from_key(policy: UpdatePolicy, problem_n: int, *,
+                    m: int | None = None, n: int | None = None,
+                    rank: int | None = None) -> SvdEngine:
     """The ONE place a policy's ``engine_key`` unpacks into ``default_engine``
     — every layer (api, dist.merge, serve) resolves through here, so the
     shared-plan-cache invariant ("equal policies never recompile") has a
-    single definition."""
-    method, fmm_p, sign_fix, deflate_rtol, precision = policy.engine_key(problem_n)
+    single definition.  The optional geometry lets ``method="auto"`` prefer
+    the fused megakernel when the problem fits its VMEM budget."""
+    method, fmm_p, sign_fix, deflate_rtol, precision, storage_dtype = (
+        policy.engine_key(problem_n, m=m, n=n, rank=rank)
+    )
     return default_engine(
         method,
         fmm_p=fmm_p,
         sign_fix=sign_fix,
         deflate_rtol=deflate_rtol,
         precision=precision,
+        storage_dtype=storage_dtype,
     )
 
 
@@ -70,7 +76,29 @@ def engine_for(policy: UpdatePolicy, state: SvdState) -> SvdEngine:
     >>> api.engine_for(pol, st) is api.engine_for(pol.replace(truncate_to=2), st)
     True
     """
-    return engine_from_key(policy, state.n if state.is_full else state.rank + 1)
+    if state.is_full:
+        return engine_from_key(policy, state.n, m=state.m, n=state.n)
+    return engine_from_key(policy, state.rank + 1, m=state.m, n=state.n,
+                           rank=state.rank)
+
+
+def _apply_storage_dtype(policy: UpdatePolicy, st: SvdState, a, b):
+    """Cast state + perturbation to the policy's storage dtype (bf16 mode).
+
+    The cast IS the policy: engine geometry keys then carry the narrow
+    dtype, and the engine's compute_dtype upcasts inside the update."""
+    if policy.storage_dtype is None:
+        return st, a, b
+    dt = jnp.dtype(policy.storage_dtype)
+    if st.dtype == dt:
+        return st, jnp.asarray(a, dt), jnp.asarray(b, dt)
+    st = SvdState(
+        u=st.u.astype(dt), s=st.s.astype(dt), v=st.v.astype(dt),
+        d_left=None if st.d_left is None else st.d_left.astype(dt),
+        d_right=None if st.d_right is None else st.d_right.astype(dt),
+        mesh=st.mesh,
+    )
+    return st, jnp.asarray(a, dt), jnp.asarray(b, dt)
 
 
 def _finish(state: SvdState, out: SvdState, policy: UpdatePolicy) -> SvdState:
@@ -110,6 +138,7 @@ def update(state, a, b, policy: UpdatePolicy | None = None) -> SvdState:
     """
     policy = policy if policy is not None else _DEFAULT_POLICY
     st = as_state(state)
+    st, a, b = _apply_storage_dtype(policy, st, a, b)
     eng = engine_for(policy, st)
     mesh = policy.mesh if policy.mesh is not None else st.mesh
     if st.is_full:
@@ -190,6 +219,59 @@ def update_many(
     return tuple(out)
 
 
+def update_rank_k(state, A, B, policy: UpdatePolicy | None = None) -> SvdState:
+    """SVD of ``state + A^T B`` applied as k sequential rank-1 updates through
+    ONE ``lax.scan`` — trace/compile cost is k-independent (the hot path for
+    long ``repro.updates`` schedules; ``updates.planner`` lowers k >=
+    ``_SCAN_MIN`` schedules here).
+
+    ``A``: (k, m) rows of left vectors, ``B``: (k, n) rows of right vectors
+    (leading batch axis before k iff the state is stacked).  ``truncate_to``
+    falls back to the unrolled per-pair path (the rule must re-apply between
+    pairs, which a scan carry of fixed rank cannot express).
+
+    >>> import numpy as np
+    >>> from repro import api
+    >>> rng = np.random.default_rng(2)
+    >>> x = rng.normal(size=(4, 6))
+    >>> st = api.SvdState.from_dense(x)
+    >>> A = rng.normal(size=(3, 4)); B = rng.normal(size=(3, 6))
+    >>> out = api.update_rank_k(st, A, B, api.UpdatePolicy(method="direct"))
+    >>> ref = np.linalg.svd(x + A.T @ B, compute_uv=False)
+    >>> bool(np.allclose(out.s, ref, atol=1e-9))
+    True
+    """
+    policy = policy if policy is not None else _DEFAULT_POLICY
+    st = as_state(state)
+    if policy.truncate_to is not None and policy.truncate_to < st.rank:
+        out = st
+        k = jnp.asarray(A).shape[-2]
+        for i in range(k):
+            out = update(out, jnp.asarray(A)[..., i, :], jnp.asarray(B)[..., i, :],
+                         policy)
+        return out
+    st, A, B = _apply_storage_dtype(policy, st, A, B)
+    eng = engine_for(policy, st)
+    mesh = policy.mesh if policy.mesh is not None else st.mesh
+    if st.is_full:
+        if st.is_batched:
+            res = eng.update_rank_k_batch(st.u, st.s, st.v, A, B, mesh=mesh,
+                                          batch_axis=policy.batch_axis)
+        else:
+            res = eng.update_rank_k(st.u, st.s, st.v, A, B)
+        out = SvdState(u=res.u, s=res.s, v=res.v, d_left=res.d_left,
+                       d_right=res.d_right, mesh=st.mesh)
+    else:
+        t = TruncatedSvd(u=st.u, s=st.s, v=st.v)
+        if st.is_batched:
+            t2 = eng.update_truncated_rank_k_batch(t, A, B, mesh=mesh,
+                                                   batch_axis=policy.batch_axis)
+        else:
+            t2 = eng.update_truncated_rank_k(t, A, B)
+        out = SvdState(u=t2.u, s=t2.s, v=t2.v, mesh=st.mesh)
+    return _finish(st, out, policy)
+
+
 def warmup(
     policy: UpdatePolicy,
     *,
@@ -197,11 +279,14 @@ def warmup(
     n: int,
     batch: int | None = None,
     rank: int | None = None,
+    k: int | None = None,
     dtype=jnp.float32,
 ):
     """AOT-compile the executable a (policy, geometry) pair will use, before
     traffic arrives (serving cold-start control).  ``rank=None`` warms the
-    full route, else the truncated one; ``batch=None`` warms single-instance.
+    full route, else the truncated one; ``batch=None`` warms single-instance;
+    ``k`` warms the rank-k scan route.  With ``policy.storage_dtype`` set the
+    warmed geometry uses the storage dtype (what real casts will carry).
 
     >>> import jax.numpy as jnp
     >>> from repro import api
@@ -210,5 +295,8 @@ def warmup(
     >>> info.entries >= 1          # the (policy, geometry) plan is cached
     True
     """
-    eng = engine_from_key(policy, n if rank is None else rank + 1)
-    return eng.warmup(batch=batch, m=m, n=n, rank=rank, dtype=dtype)
+    if policy.storage_dtype is not None:
+        dtype = policy.storage_dtype
+    eng = engine_from_key(policy, n if rank is None else rank + 1,
+                          m=m, n=n, rank=rank)
+    return eng.warmup(batch=batch, m=m, n=n, rank=rank, k=k, dtype=dtype)

@@ -136,15 +136,25 @@ class SvdEngine:
         sign_fix: bool = True,
         deflate_rtol: float | None = None,
         precision: str | None = None,
+        storage_dtype=None,
         sharding: jax.sharding.Sharding | None = None,
     ):
-        if method not in ("direct", "fmm", "kernel"):
+        if method not in ("direct", "fmm", "kernel", "fused"):
             raise ValueError(f"unknown method {method!r}")
         self.method = method
         self.fmm_p = fmm_p
         self.sign_fix = sign_fix
         self.deflate_rtol = deflate_rtol
         self.precision = precision
+        # Mixed precision: with a 16-bit storage dtype the factors arrive
+        # narrow; every impl then computes in f32 (in-kernel upcast on the
+        # fused route, explicit cast on the phase-chain routes).
+        self.storage_dtype = None if storage_dtype is None else jnp.dtype(storage_dtype)
+        self.compute_dtype = (
+            jnp.dtype(jnp.float32)
+            if self.storage_dtype is not None and self.storage_dtype.itemsize <= 2
+            else None
+        )
         self.sharding = sharding
         self._cache: dict[tuple, _CacheEntry] = {}
         self._hits = 0
@@ -200,6 +210,7 @@ class SvdEngine:
             fmm_p=self.fmm_p,
             sign_fix=self.sign_fix,
             deflate_rtol=self.deflate_rtol,
+            compute_dtype=self.compute_dtype,
         )
         return self._with_precision(lambda u, s, v, a, b: impl(u, s, v, a, b))
 
@@ -209,8 +220,42 @@ class SvdEngine:
             method=self.method,
             fmm_p=self.fmm_p,
             deflate_rtol=self.deflate_rtol,
+            compute_dtype=self.compute_dtype,
         )
         return self._with_precision(lambda t, a, b: impl(t, a, b))
+
+    # -- rank-k scan impls ---------------------------------------------------
+    # A sequence of k rank-1 pairs applied through ONE lax.scan, so a long
+    # repro.updates schedule traces k-independently (updates.planner lowers
+    # k >= _SCAN_MIN schedules here). Diagnostics are the LAST step's.
+
+    def _rank_k_fn(self) -> Callable:
+        """Unjitted scan-of-updates body (exposed for trace-cost tests)."""
+        impl = self._full_impl()
+
+        def fn(u, s, v, va, vb):
+            def step(carry, ab):
+                res = impl(*carry, ab[0], ab[1])
+                return (res.u, res.s, res.v), (res.d_left, res.d_right)
+
+            (u2, s2, v2), (dls, drs) = jax.lax.scan(step, (u, s, v), (va, vb))
+            return SvdUpdateResult(u=u2, s=s2, v=v2,
+                                   d_left=dls[-1], d_right=drs[-1])
+
+        return fn
+
+    def _trunc_rank_k_fn(self) -> Callable:
+        impl = self._trunc_impl()
+
+        def fn(t, va, vb):
+            def step(carry, ab):
+                res = impl(TruncatedSvd(*carry), ab[0], ab[1])
+                return (res.u, res.s, res.v), None
+
+            carry, _ = jax.lax.scan(step, (t.u, t.s, t.v), (va, vb))
+            return TruncatedSvd(*carry)
+
+        return fn
 
     def _build_single(self) -> Callable:
         return jax.jit(self._full_impl())
@@ -228,6 +273,18 @@ class SvdEngine:
 
     def _build_truncated_batch(self) -> Callable:
         return jax.jit(jax.vmap(self._trunc_impl()), **self._batch_jit_kwargs())
+
+    def _build_rank_k(self) -> Callable:
+        return jax.jit(self._rank_k_fn())
+
+    def _build_rank_k_batch(self) -> Callable:
+        return jax.jit(jax.vmap(self._rank_k_fn()), **self._batch_jit_kwargs())
+
+    def _build_trunc_rank_k(self) -> Callable:
+        return jax.jit(self._trunc_rank_k_fn())
+
+    def _build_trunc_rank_k_batch(self) -> Callable:
+        return jax.jit(jax.vmap(self._trunc_rank_k_fn()), **self._batch_jit_kwargs())
 
     # -- mesh-aware (shard_map) builders ------------------------------------
     # Per-shard: the same vmapped impl, batch split over one mesh axis. The
@@ -360,6 +417,78 @@ class SvdEngine:
         out = self._call(ent, TruncatedSvd(u_, s_, v_), a_, b_)
         return jax.tree.map(lambda x: x[:b_orig], out)
 
+    # -- rank-k (scan) entry points -----------------------------------------
+
+    def update_rank_k(self, u, s, v, va, vb) -> SvdUpdateResult:
+        """k sequential rank-1 updates through one lax.scan.
+
+        ``va``: (k, m), ``vb``: (k, n) — rank-1 pairs applied in row order.
+        Trace/compile cost is k-independent (one step body); diagnostics
+        (``d_left``/``d_right``) are the final step's.
+        """
+        key = _geometry("rank_k", u, s, v, va, vb)
+        ent = self._entry(key, self._build_rank_k)
+        return self._call(ent, u, s, v, va, vb)
+
+    def update_rank_k_batch(self, u, s, v, va, vb, *, mesh=None,
+                            batch_axis: str = "data") -> SvdUpdateResult:
+        """B stacked k-step scans: ``u`` (B, m, m), ``va`` (B, k, m), ...."""
+        if u.ndim != 3:
+            raise ValueError(f"update_rank_k_batch expects stacked (B, m, m) u; got {u.shape}")
+        if mesh is None:
+            key = _geometry("rank_k_batch", u, s, v, va, vb)
+            ent = self._entry(key, self._build_rank_k_batch)
+            return self._call(ent, *self._constrain(u, s, v, va, vb))
+        size = self._mesh_axis_size(mesh, batch_axis)
+        (u, s, v, va, vb), b_orig = self._pad_batch((u, s, v, va, vb), size)
+        key = ("shard", mesh, batch_axis) + _geometry("rank_k_batch", u, s, v, va, vb)
+        ent = self._entry(
+            key,
+            lambda: jax.jit(shard_map(
+                jax.vmap(self._rank_k_fn()), mesh=mesh,
+                in_specs=(PartitionSpec(batch_axis),) * 5,
+                out_specs=PartitionSpec(batch_axis), check_rep=False,
+            )),
+        )
+        out = self._call(ent, u, s, v, va, vb)
+        return jax.tree.map(lambda x: x[:b_orig], out)
+
+    def update_truncated_rank_k(self, tsvd: TruncatedSvd, va, vb) -> TruncatedSvd:
+        """k sequential truncated updates through one lax.scan."""
+        key = _geometry("trunc_rank_k", tsvd.u, tsvd.s, tsvd.v, va, vb)
+        ent = self._entry(key, self._build_trunc_rank_k)
+        return self._call(ent, TruncatedSvd(tsvd.u, tsvd.s, tsvd.v), va, vb)
+
+    def update_truncated_rank_k_batch(self, tsvd: TruncatedSvd, va, vb, *,
+                                      mesh=None, batch_axis: str = "data") -> TruncatedSvd:
+        """B stacked k-step truncated scans (mesh-shardable like the rest)."""
+        if tsvd.u.ndim != 3:
+            raise ValueError(
+                f"update_truncated_rank_k_batch expects stacked (B, m, r) u; got {tsvd.u.shape}"
+            )
+        if mesh is None:
+            key = _geometry("trunc_rank_k_batch", tsvd.u, tsvd.s, tsvd.v, va, vb)
+            ent = self._entry(key, self._build_trunc_rank_k_batch)
+            u_, s_, v_, va_, vb_ = self._constrain(tsvd.u, tsvd.s, tsvd.v, va, vb)
+            return self._call(ent, TruncatedSvd(u_, s_, v_), va_, vb_)
+        size = self._mesh_axis_size(mesh, batch_axis)
+        (u_, s_, v_, va_, vb_), b_orig = self._pad_batch(
+            (tsvd.u, tsvd.s, tsvd.v, va, vb), size
+        )
+        key = ("shard", mesh, batch_axis) + _geometry(
+            "trunc_rank_k_batch", u_, s_, v_, va_, vb_
+        )
+        ent = self._entry(
+            key,
+            lambda: jax.jit(shard_map(
+                jax.vmap(self._trunc_rank_k_fn()), mesh=mesh,
+                in_specs=(PartitionSpec(batch_axis),) * 3,
+                out_specs=PartitionSpec(batch_axis), check_rep=False,
+            )),
+        )
+        out = self._call(ent, TruncatedSvd(u_, s_, v_), va_, vb_)
+        return jax.tree.map(lambda x: x[:b_orig], out)
+
     # -- warmup -------------------------------------------------------------
 
     def warmup(
@@ -369,17 +498,19 @@ class SvdEngine:
         m: int,
         n: int,
         rank: int | None = None,
+        k: int | None = None,
         dtype=jnp.float32,
     ) -> EngineCacheInfo:
         """AOT-compile the executable for one geometry before traffic.
 
         ``rank=None`` warms the full-update path, otherwise the truncated
-        path; ``batch=None`` warms the single-instance variant. The cache key
+        path; ``batch=None`` warms the single-instance variant; ``k`` warms
+        the rank-k scan variant (k sequential pairs per call). The cache key
         includes ``dtype`` — warm with the dtype real traffic uses (default
         float32 matches ``compression_init``/``spectral_init`` trackers;
         pass ``jnp.float64`` for x64 workloads).
         """
-        self._warm_entry(batch=batch, m=m, n=n, rank=rank, dtype=dtype)
+        self._warm_entry(batch=batch, m=m, n=n, rank=rank, k=k, dtype=dtype)
         return self.cache_info()
 
     def aot_compiled(
@@ -389,6 +520,7 @@ class SvdEngine:
         m: int,
         n: int,
         rank: int | None = None,
+        k: int | None = None,
         dtype=jnp.float32,
     ):
         """The AOT-compiled executable for one geometry (warming it first).
@@ -398,7 +530,8 @@ class SvdEngine:
         (``repro.launch.perf_iter``) without re-lowering outside the shared
         plan cache.
         """
-        return self._warm_entry(batch=batch, m=m, n=n, rank=rank, dtype=dtype).compiled
+        return self._warm_entry(batch=batch, m=m, n=n, rank=rank, k=k,
+                                dtype=dtype).compiled
 
     def _warm_entry(
         self,
@@ -407,6 +540,7 @@ class SvdEngine:
         m: int,
         n: int,
         rank: int | None = None,
+        k: int | None = None,
         dtype=jnp.float32,
     ) -> _CacheEntry:
         dt = jnp.dtype(dtype)
@@ -414,31 +548,41 @@ class SvdEngine:
         def sds(*shape):
             return jax.ShapeDtypeStruct(shape, dt)
 
+        def vshape(*shape):
+            # perturbation-pair shapes: (m,)/(n,) or (k, m)/(k, n) under scan
+            return shape if k is None else (k,) + shape
+
         if rank is None:
+            pair = (sds(*vshape(m)), sds(*vshape(n)))
             if batch is None:
-                args = (sds(m, m), sds(m), sds(n, n), sds(m), sds(n))
-                key = _geometry("single", *args)
-                ent = self._entry(key, self._build_single)
+                args = (sds(m, m), sds(m), sds(n, n), *pair)
+                kind = "single" if k is None else "rank_k"
+                build = self._build_single if k is None else self._build_rank_k
             else:
-                args = (sds(batch, m, m), sds(batch, m), sds(batch, n, n),
-                        sds(batch, m), sds(batch, n))
-                key = _geometry("batch", *args)
-                ent = self._entry(key, self._build_batch)
+                pair = tuple(jax.ShapeDtypeStruct((batch,) + p.shape, dt) for p in pair)
+                args = (sds(batch, m, m), sds(batch, m), sds(batch, n, n), *pair)
+                kind = "batch" if k is None else "rank_k_batch"
+                build = self._build_batch if k is None else self._build_rank_k_batch
+            key = _geometry(kind, *args)
+            ent = self._entry(key, build)
             if ent.compiled is None:
                 ent.compiled = ent.fn.lower(*args).compile()
         else:
+            pair = (sds(*vshape(m)), sds(*vshape(n)))
             if batch is None:
                 leaves = (sds(m, rank), sds(rank), sds(n, rank))
-                args = (sds(m), sds(n))
-                key = _geometry("trunc", *leaves, *args)
-                ent = self._entry(key, self._build_truncated)
+                kind = "trunc" if k is None else "trunc_rank_k"
+                build = self._build_truncated if k is None else self._build_trunc_rank_k
             else:
+                pair = tuple(jax.ShapeDtypeStruct((batch,) + p.shape, dt) for p in pair)
                 leaves = (sds(batch, m, rank), sds(batch, rank), sds(batch, n, rank))
-                args = (sds(batch, m), sds(batch, n))
-                key = _geometry("trunc_batch", *leaves, *args)
-                ent = self._entry(key, self._build_truncated_batch)
+                kind = "trunc_batch" if k is None else "trunc_rank_k_batch"
+                build = (self._build_truncated_batch if k is None
+                         else self._build_trunc_rank_k_batch)
+            key = _geometry(kind, *leaves, *pair)
+            ent = self._entry(key, build)
             if ent.compiled is None:
-                ent.compiled = ent.fn.lower(TruncatedSvd(*leaves), *args).compile()
+                ent.compiled = ent.fn.lower(TruncatedSvd(*leaves), *pair).compile()
         return ent
 
 
@@ -457,6 +601,7 @@ def default_engine(
     sign_fix: bool = True,
     deflate_rtol: float | None = None,
     precision: str | None = None,
+    storage_dtype=None,
 ) -> SvdEngine:
     """Process-wide shared engine for a configuration (shared plan cache).
 
@@ -464,11 +609,13 @@ def default_engine(
     so policy-equal callers (old facades, the api layer, consumers) land on
     the SAME engine instance and plan cache — policy folds into the cache key.
     """
-    key = (method, fmm_p, sign_fix, deflate_rtol, precision)
+    sd = None if storage_dtype is None else jnp.dtype(storage_dtype)
+    key = (method, fmm_p, sign_fix, deflate_rtol, precision, sd)
     with _default_lock:
         eng = _default_engines.get(key)
         if eng is None:
             eng = SvdEngine(method=method, fmm_p=fmm_p, sign_fix=sign_fix,
-                            deflate_rtol=deflate_rtol, precision=precision)
+                            deflate_rtol=deflate_rtol, precision=precision,
+                            storage_dtype=sd)
             _default_engines[key] = eng
         return eng

@@ -99,16 +99,41 @@ def _svd_update_impl(
     fmm_p: int = 20,
     sign_fix: bool = True,
     deflate_rtol: float | None = None,
+    compute_dtype=None,
 ) -> SvdUpdateResult:
     """Unjitted Algorithm 6.1 body — pure, static-shape, and vmap-clean.
 
     ``core.engine`` maps this over a leading batch axis; ``svd_update`` is the
-    jitted single-instance wrapper.
+    jitted single-instance wrapper.  ``compute_dtype`` (mixed precision):
+    inputs may be stored narrower (bf16) — the fused route upcasts inside the
+    kernel, the phase-chain routes upcast here and cast results back.
     """
     m = u.shape[0]
     n = v.shape[0]
     if m > n:
         raise ValueError("svd_update expects m <= n; transpose the problem (swap u/v, a/b).")
+
+    if method == "fused":
+        # one-kernel route: whole update resident (kernels.fused_update);
+        # the storage->compute cast happens inside the body/kernel.
+        from repro.kernels import ops as _kops
+
+        out = _kops.fused_update(u, s, v, a, b, sign_fix=sign_fix,
+                                 deflate_rtol=deflate_rtol,
+                                 compute_dtype=compute_dtype)
+        return SvdUpdateResult(u=out[0], s=out[1], v=out[2],
+                               d_left=out[3], d_right=out[4])
+
+    store_dt = u.dtype
+    if compute_dtype is not None and jnp.dtype(compute_dtype) != store_dt:
+        cdt = jnp.dtype(compute_dtype)
+        res = _svd_update_impl(
+            u.astype(cdt), s.astype(cdt), v.astype(cdt),
+            a.astype(cdt), b.astype(cdt),
+            method=method, fmm_p=fmm_p, sign_fix=sign_fix,
+            deflate_rtol=deflate_rtol,
+        )
+        return SvdUpdateResult(*(x.astype(store_dt) for x in res))
 
     dt = u.dtype
     s = s.astype(dt)
@@ -187,12 +212,32 @@ def _svd_update_truncated_impl(
     method: str = "direct",
     fmm_p: int = 20,
     deflate_rtol: float | None = None,
+    compute_dtype=None,
 ) -> TruncatedSvd:
     """Unjitted truncated-update body (vmap-clean, see ``core.engine``).
 
     Accepts any (u, s, v)-carrying container (``TruncatedSvd`` or an
     ``repro.api.SvdState``); returns ``TruncatedSvd``."""
     u, s, v = tsvd.u, tsvd.s, tsvd.v
+
+    if method == "fused":
+        from repro.kernels import ops as _kops
+
+        out = _kops.fused_update_truncated(u, s, v, a, b,
+                                           deflate_rtol=deflate_rtol,
+                                           compute_dtype=compute_dtype)
+        return TruncatedSvd(u=out[0], s=out[1], v=out[2])
+
+    if compute_dtype is not None and jnp.dtype(compute_dtype) != u.dtype:
+        cdt = jnp.dtype(compute_dtype)
+        store_dt = u.dtype
+        res = _svd_update_truncated_impl(
+            TruncatedSvd(u.astype(cdt), s.astype(cdt), v.astype(cdt)),
+            a.astype(cdt), b.astype(cdt),
+            method=method, fmm_p=fmm_p, deflate_rtol=deflate_rtol,
+        )
+        return TruncatedSvd(*(x.astype(store_dt) for x in res))
+
     m, r = u.shape
     n = v.shape[0]
     dt = u.dtype

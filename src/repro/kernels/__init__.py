@@ -3,10 +3,12 @@
 cauchy_matmul   — on-the-fly U1 @ C(lambda, mu) (Trummer, MXU)
 secular_newton  — in-VMEM secular-equation bisection+Newton (VPU)
 nearfield       — FMM near-field block-tridiagonal product (MXU)
+fused_update    — the whole rank-1 update (Alg. 6.1) in one (B,)-grid kernel
+secular_body    — the ONE bisection/Newton loop body the above share
 
 Each has a pure-jnp oracle in ref.py; ops.py is the dispatching jit wrapper
 (interpret=True on CPU, Mosaic on TPU). core.eigh_update routes here via
-method="kernel".
+method="kernel"; core.svd_update routes the megakernel via method="fused".
 """
 
 from repro.kernels import ops, ref  # noqa: F401

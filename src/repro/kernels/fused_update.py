@@ -1,0 +1,625 @@
+"""Fused rank-1 SVD update: the whole of Algorithm 6.1 in one kernel body.
+
+The engine's other routes run the update as a chain of separate XLA
+dispatches — project, deflate, secular solve, Cauchy rotation, sign fix —
+with every intermediate bouncing through HBM, which is why *full* batched
+updates historically ran at ~1.4x over the per-update loop while truncated
+ones reached 12.5x (BENCH_engine.json).  This module is the designated
+hot-path fix (ROADMAP): ONE body that keeps the whole per-update state
+resident, expressed so the SAME code traces
+
+* as a plain-jnp XLA fusion (``fused_update_xla``) — the CPU path and the
+  natural ``jax.vmap`` target, and
+* inside a Pallas kernel (``fused_update_pallas`` /
+  ``fused_update_pallas_batched``) — grid ``(B,)``, one program per update,
+  everything in VMEM; ``interpret=True`` executes the body on CPU in tests.
+
+To make the body kernel-clean it eliminates every construct that is slow
+under vmap or unsupported in Mosaic:
+
+* **no argsort / gather** — the eigenvalue orders of all four phases are
+  static reversals (``d = s^2`` is descending, negation flips), and the one
+  data-dependent reorder (deflated passthrough values interleaving secular
+  roots) is done with a stable comparison-matrix rank + one-hot permutation
+  matmul (MXU-friendly);
+* **no lax.cond / per-rotation scan** — the direct path's sequential Givens
+  deflation chain (a both-branches scan under vmap that copies the full
+  (B, m, n) operand per step — the actual 1.4x bottleneck) is replaced by a
+  closed-form grouped Householder merge of (near-)coincident poles, built
+  as one dense (k, k) matrix from masks;
+* **shared secular loop** — the bisection/Newton iteration is
+  ``kernels.secular_body.secular_iterate``, the same body the standalone
+  secular kernel and its oracle use.  The Newton phase is a *safeguarded
+  pole-free* iteration on ``f(tau) = tau * w(tau)`` (smooth across the
+  anchor pole, bracket maintained every step — see ``secular_body``), so
+  each Newton step is at worst one more bisection halving and typically
+  quadratic.  That lets the fused defaults run 16 bisection + 6 Newton
+  steps (vs the standalone kernel's 58+4): the bisections localize into
+  the Newton basin (observed requirement is ~12 even for clustered
+  spectra; 16 doubles the margin) and the pole-free Newton then converges
+  to machine precision — even pole-hugging streaming roots measure
+  ~1e-13 one-step error.  The secular loop is the fused hot path, so
+  dropping the dead rounds is a ~35% end-to-end win at (32, 48).  Parity
+  vs the 58+4 direct route stays at working-precision level even for
+  clustered spectra just above the deflation gap (tests/test_fused.py).
+
+Mixed precision: the body takes a ``compute_dtype`` — bf16/f16 *storage*
+factors are upcast on entry (inside the kernel, after the bf16 HBM->VMEM
+load — that is the bandwidth win on TPU), the secular solve and all
+rotations run in f32/f64, and outputs are cast back to the storage dtype.
+The documented error budget for bf16 storage is ``BF16_ERROR_BUDGET``
+(enforced in tests/test_fused.py, table in DESIGN.md §11).
+
+Deflation semantics vs the direct path: coincident-pole handling merges by
+pole *gap* (``gap <= rtol * scale``) instead of by Givens off-diagonal
+size.  Exact duplicates (the n-m structural zeros of the right-hand
+problem, repeated deflated eigenvalues feeding later phases) merge
+identically; *near*-coincident poles may deflate slightly differently —
+both choices perturb the problem by O(rtol * scale), so the routes agree
+to the tolerances the parity tests pin.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.kernels.secular_body import secular_iterate
+
+__all__ = [
+    "BF16_ERROR_BUDGET",
+    "FUSED_VMEM_BUDGET",
+    "fused_supported",
+    "fused_update_xla",
+    "fused_update_truncated_xla",
+    "fused_update_pallas",
+    "fused_update_pallas_batched",
+    "fused_update_truncated_pallas",
+    "fused_update_truncated_pallas_batched",
+]
+
+
+# Per-core VMEM the fused body may claim (half of a TPU core's ~16 MiB,
+# leaving headroom for double buffering and control).  See DESIGN.md §11.
+FUSED_VMEM_BUDGET = 8 * 1024 * 1024
+
+# bf16-storage error budget vs the f64 dense reference (DESIGN.md §11).
+# Pinned by tests/test_fused.py; measured on the bench geometry (32, 48)
+# with ~4x headroom over observed worst cases.  bf16 eps ~= 7.8e-3: one
+# update costs a few eps in sigma, reconstruction is dominated by the bf16
+# quantization of the stored factors themselves, and sequential-update
+# drift grows roughly linearly (Peña–Sauer-style accumulation).
+BF16_ERROR_BUDGET = {
+    "sigma_rel": 5e-2,        # max_i |s_i - s_ref_i| / s_ref_0, single update
+    "recon_rel": 8e-2,        # ||U S V^T - ref||_F / ||ref||_F, single update
+    "drift_sigma_rel": 2e-1,  # sigma_rel after 8 sequential updates
+}
+
+
+def _compute_dtype_for(storage_dtype) -> jnp.dtype:
+    dt = jnp.dtype(storage_dtype)
+    return jnp.dtype(jnp.float32) if dt.itemsize <= 2 else dt
+
+
+def fused_supported(m: int, n: int, rank: int | None = None,
+                    dtype=jnp.float32) -> bool:
+    """Whether the fused body's working set fits ``FUSED_VMEM_BUDGET``.
+
+    ``rank=None`` is the full update (working set dominated by the dense
+    (n, n) phase operators); otherwise the truncated route, whose secular
+    core is (rank+1)-sized with (m, rank+1)/(n, rank+1) factor blocks.
+    """
+    isz = _compute_dtype_for(dtype).itemsize
+    if rank is None:
+        if m > n:
+            return False
+        est = (10 * n * n + 10 * m * m + 8 * (m + n)) * isz
+    else:
+        k = rank + 1
+        est = (10 * k * k + 4 * k * (m + n) + 8 * (m + n)) * isz
+    return est <= FUSED_VMEM_BUDGET
+
+
+# ---------------------------------------------------------------------------
+# kernel-clean primitives
+# ---------------------------------------------------------------------------
+
+
+def _iota1(k: int):
+    # 1D iota is unsupported on TPU; broadcast a 2D one and slice.
+    return lax.broadcasted_iota(jnp.int32, (k, 1), 0)[:, 0]
+
+
+def _mm(a, b):
+    return jnp.dot(a, b, preferred_element_type=a.dtype)
+
+
+def _flip2(x):
+    return jnp.flip(jnp.flip(x, 0), 1)
+
+
+def _stable_sort_perm(mu, iota_c):
+    """One-hot permutation P with P[i, r] = 1 iff stable-rank(mu_i) == r.
+
+    ``x_sorted = x @ P`` (vectors), ``Q_sorted = Q @ P`` (columns) — the
+    argsort-free reorder used for the phase output ordering.
+    """
+    k = mu.shape[0]
+    dt = mu.dtype
+    idx = _iota1(k)
+    lt = (mu[None, :] < mu[:, None]).astype(jnp.int32)       # mu_j <  mu_i
+    eq = (mu[None, :] == mu[:, None]) & (idx[None, :] < idx[:, None])
+    rank = jnp.sum(lt, axis=1) + jnp.sum(eq.astype(jnp.int32), axis=1)
+    return (rank[:, None] == iota_c).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# one diagonal-plus-rank-1 eigen phase:  eig(diag(d) + rho z z^T),  rho > 0
+# ---------------------------------------------------------------------------
+
+
+def _phase(d, z, rho, *, rtol, n_bisect, n_newton):
+    """Eigen-update of ``diag(d) + rho z z^T`` (d ascending, rho > 0).
+
+    Returns ``(mu_sorted, Phi)``: eigenvalues ascending and the dense (k, k)
+    rotation with eigenvector columns in that order (``W_new = W @ Phi``).
+    Structured as Householder-merge -> tiny-z deflation -> bracketed secular
+    solve (anchored) -> Loewner zhat -> scaled-Cauchy columns -> stable
+    one-hot output permutation; every step is masks + matmuls + the two
+    fixed-count secular loops.
+    """
+    k = d.shape[0]
+    dt = d.dtype
+    eps = jnp.finfo(dt).eps
+    tiny = jnp.finfo(dt).tiny
+    rtol_v = 64.0 * float(eps) if rtol is None else rtol
+
+    idx = _iota1(k)
+    iota_r = lax.broadcasted_iota(jnp.int32, (k, k), 0)
+    iota_c = lax.broadcasted_iota(jnp.int32, (k, k), 1)
+    eye = (iota_r == iota_c).astype(dt)
+
+    z2_raw = z * z
+    scale = jnp.maximum(jnp.max(jnp.abs(d)), rho * jnp.sum(z2_raw)) + tiny
+    tol = rtol_v * scale
+
+    # -- group (near-)coincident poles: leader = first pole within gap tol.
+    # d is ascending so {j <= i : d_i - d_j <= tol} is a suffix; the min is
+    # the group leader.  log2(k) rounds of leader <- leader[leader] close
+    # chains (a gather, expressed as a one-hot matvec for the MXU).
+    ok = (iota_c <= iota_r) & ((d[:, None] - d[None, :]) <= tol)
+    leader = jnp.min(jnp.where(ok, iota_c, k), axis=1)
+    for _ in range(max(1, math.ceil(math.log2(max(k, 2))))):
+        hop = (leader[:, None] == iota_c).astype(dt)
+        leader = _mm(hop, leader.astype(dt)).astype(jnp.int32)
+
+    # -- grouped Householder merge: per group H z|_g = r e_rep (disjoint
+    # supports, so all groups share one dense symmetric-orthogonal H).
+    same = (leader[:, None] == leader[None, :])
+    sf = same.astype(dt)
+    is_rep = (leader == idx).astype(dt)
+    gz2 = _mm(sf, z2_raw)                       # group ||z||^2, broadcast
+    z_rep = _mm(sf, z * is_rep)                 # group rep's z, broadcast
+    sgn = jnp.where(z_rep < 0.0, 1.0, -1.0).astype(dt)
+    r_vec = sgn * jnp.sqrt(gz2)                 # r = -sign(z_rep) ||z_g||
+    wv = z - r_vec * is_rep                     # Householder vector (no
+    gn2 = _mm(sf, wv * wv)                      # cancellation by sign choice)
+    denom = jnp.where(gn2 > 0.0, gn2, 1.0)
+    hh = eye - jnp.where(same & (gn2[:, None] > 0.0),
+                         2.0 * wv[:, None] * wv[None, :] / denom[:, None], 0.0)
+    z_m = r_vec * is_rep                        # merged z: exact zeros off-rep
+
+    # -- tiny-z deflation on the merged weights
+    z2 = z_m * z_m
+    keep = rho * z2 > tol
+    z2k = jnp.where(keep, z2, 0.0)
+    zn2 = jnp.sum(z2k)
+
+    # -- brackets: (d_i, next kept pole) per kept i; last kept gets the
+    # Weyl cap d_i + rho ||z||^2.  Merging guarantees kept gaps > tol.
+    big = jnp.asarray(jnp.finfo(dt).max, dt) * 0.25
+    cand = jnp.where((iota_c > iota_r) & keep[None, :],
+                     jnp.broadcast_to(d[None, :], (k, k)), big)
+    nxt = jnp.min(cand, axis=1)
+    is_last = keep & (nxt >= 0.5 * big)
+    right = jnp.where(is_last, d + rho * zn2, nxt)
+    left = d
+    width = jnp.where(keep, right - left, 0.0)
+
+    # -- anchor by midpoint sign (w increasing on the bracket); the last
+    # interval's right end is not a pole, so it always anchors left.
+    delta_mid = (d[None, :] - left[:, None]) - (0.5 * width)[:, None]
+    safe_mid = jnp.where(delta_mid == 0.0, 1.0, delta_mid)
+    inv_mid = jnp.where(delta_mid != 0.0, 1.0 / safe_mid, 0.0)
+    w_mid = 1.0 + rho * jnp.sum(z2k[None, :] * inv_mid, axis=1)
+    use_left = (w_mid > 0.0) | is_last
+    anchor = jnp.where(use_left, left, right)
+    lo = jnp.where(use_left, 0.0, -0.5 * width)
+    hi = jnp.where(is_last, width, jnp.where(use_left, 0.5 * width, 0.0))
+
+    diff = d[None, :] - anchor[:, None]         # (roots, poles), anchored
+    tau = secular_iterate(diff, z2k, rho, lo, hi,
+                          n_bisect=n_bisect, n_newton=n_newton, poles_axis=1)
+    tau = jnp.where(keep, tau, 0.0)
+    mu = jnp.where(keep, anchor + tau, d)
+
+    # -- Loewner zhat (Gu–Eisenstat), log-magnitude space, anchored deltas
+    delta_md = (anchor[:, None] - d[None, :]) + tau[:, None]   # mu_i - d_j
+    num = jnp.where(keep[:, None], delta_md, 1.0)
+    log_num = jnp.sum(jnp.log(jnp.abs(num) + tiny), axis=0)
+    dd = d[:, None] - d[None, :]
+    den = jnp.where((iota_r != iota_c) & keep[:, None], dd, 1.0)
+    log_den = jnp.sum(jnp.log(jnp.abs(den) + tiny), axis=0)
+    log_zhat2 = log_num - log_den - jnp.log(rho)
+    zhat = jnp.sign(z_m) * jnp.exp(0.5 * log_zhat2)
+    zhat = jnp.where(keep, zhat, 0.0)
+
+    # -- scaled-Cauchy eigenvector columns; deflated columns pass through
+    cden = (diff - tau[:, None]).T              # [j, i] = d_j - mu_i, anchored
+    safe = jnp.where(cden == 0.0, 1.0, cden)
+    invc = jnp.where(cden != 0.0, 1.0 / safe, 0.0)
+    nrm2 = jnp.sum((zhat * zhat)[:, None] * invc * invc, axis=0)
+    colnorm = jnp.where(keep, jnp.sqrt(nrm2), 1.0)
+    qt = jnp.where(keep[None, :], zhat[:, None] * invc / colnorm[None, :], eye)
+
+    perm = _stable_sort_perm(mu, iota_c)
+    phi = _mm(_mm(hh, qt), perm)
+    return _mm(mu[None, :], perm)[0], phi
+
+
+def _chain(d0_asc, z1, z2w, rho_pos, rho_neg, *, rtol, n_bisect, n_newton):
+    """Two chained phases (paper STEPS 4-5 or 6-7) in ascending coords.
+
+    ``z1``/``z2w`` are the two update vectors already rotated into the
+    ascending basis of ``d0_asc``; ``rho_pos > 0 > rho_neg`` (static signs
+    from the 2x2 Schur split).  The rho<0 phase solves the negated problem
+    (eig(D + rho zz^T) = -eig(-D + |rho| zz^T), reversed order), which in
+    ascending coordinates is a pure double flip.  Returns final eigenvalues
+    (ascending) and the composed operator G with Q_final = Q0_asc @ G.
+    """
+    kw = dict(rtol=rtol, n_bisect=n_bisect, n_newton=n_newton)
+    mu1, phi1 = _phase(d0_asc, z1, rho_pos, **kw)
+    z2 = _mm(phi1.T, z2w[:, None])[:, 0]
+    mu_b, phi_b = _phase(jnp.flip(-mu1, 0), jnp.flip(z2, 0), -rho_neg, **kw)
+    mu2 = jnp.flip(-mu_b, 0)
+    phi2 = _flip2(phi_b)
+    return mu2, _mm(phi1, phi2)
+
+
+# ---------------------------------------------------------------------------
+# the fused Algorithm 6.1 body (full update) + Brand truncated body
+# ---------------------------------------------------------------------------
+
+
+def _fused_body(u, s, v, a, b, *, sign_fix=True, deflate_rtol=None,
+                n_bisect=16, n_newton=6, compute_dtype=None):
+    """One full rank-1 SVD update, resident end to end.
+
+    Same contract as ``core.svd_update._svd_update_impl`` (m <= n enforced
+    by callers; shapes static): returns ``(u, s, v, d_left, d_right)`` with
+    descending singular values and the structured sign fix applied.
+    """
+    m = u.shape[0]
+    n = v.shape[0]
+    store_dt = u.dtype
+    cdt = jnp.dtype(compute_dtype) if compute_dtype is not None \
+        else _compute_dtype_for(store_dt)
+    u = u.astype(cdt)
+    s = s.astype(cdt)
+    v = v.astype(cdt)
+    a = a.astype(cdt)
+    b = b.astype(cdt)
+    kw = dict(rtol=deflate_rtol, n_bisect=n_bisect, n_newton=n_newton)
+
+    # STEP 1 — structured products (A never materialized)
+    vtb = _mm(v.T, b[:, None])[:, 0]
+    b_t = _mm(u, (s * vtb[:m])[:, None])[:, 0]
+    uta = _mm(u.T, a[:, None])[:, 0]
+    sv = jnp.concatenate([s * uta, jnp.zeros((n - m,), cdt)])
+    a_t = _mm(v, sv[:, None])[:, 0]
+    beta = jnp.sum(b * b)
+    alpha = jnp.sum(a * a)
+
+    # STEP 2/3 — analytic 2x2 Schur of [[beta, 1], [1, 0]]: eigenvalues
+    # h ± sqrt(h^2+1) (one positive, one negative), unit vectors
+    # [rho_i, 1] / sqrt(1 + rho_i^2).
+    def split(c):
+        h = 0.5 * c
+        r = jnp.sqrt(h * h + 1.0)
+        rho_p, rho_n = h + r, h - r
+        np_ = jnp.sqrt(1.0 + rho_p * rho_p)
+        nn_ = jnp.sqrt(1.0 + rho_n * rho_n)
+        return rho_p, rho_n, (rho_p / np_, 1.0 / np_), (rho_n / nn_, 1.0 / nn_)
+
+    rho1, rho2, qp, qn = split(beta)
+    a1 = qp[0] * a + qp[1] * b_t
+    b1 = qn[0] * a + qn[1] * b_t
+    rho3, rho4, qpv, qnv = split(alpha)
+    a2 = qpv[0] * b + qpv[1] * a_t
+    b2 = qnv[0] * b + qnv[1] * a_t
+
+    # STEPS 4-7 — chained eigen-updates; s^2 is descending, so ascending
+    # order is a static flip on both sides (right side: n-m zeros lead).
+    d0u = jnp.flip(s * s, 0)
+    z1u = jnp.flip(_mm(u.T, a1[:, None])[:, 0], 0)
+    z2u = jnp.flip(_mm(u.T, b1[:, None])[:, 0], 0)
+    d_left_asc, g_u_asc = _chain(d0u, z1u, z2u, rho1, rho2, **kw)
+
+    va2 = _mm(v.T, a2[:, None])[:, 0]
+    vb2 = _mm(v.T, b2[:, None])[:, 0]
+
+    # STEP 8 (left) — descending outputs; ascending -> descending is a
+    # double flip back into the original (descending) coordinates of u.
+    g_u = _flip2(g_u_asc)
+    d_left = jnp.flip(d_left_asc, 0)
+    s_n = jnp.sqrt(jnp.clip(d_left, 0.0, None))
+    u_n = _mm(u, g_u)
+
+    if n - m > 2:
+        # Structural-zero compression.  A full m<n state gives the right
+        # problem n-m poles that are *structurally* zero (the null-space
+        # directions of A), and the rank-1 update only excites the 2-dim
+        # slice of that null space spanned by the null components of a2/b2.
+        # Instead of dragging n-m dead coordinates through both phases, build
+        # an orthonormal M (two Householders) whose first two columns span
+        # that slice, solve the chain on m+2 coordinates, and pass the other
+        # n-m-2 null directions through untouched (eigenvalue exactly 0).
+        # Shrinks every right-side tensor from (n+1)^2-ish to (m+2)^2 —
+        # at (32, 48) that is 2.1x fewer secular elements on the right.
+        k0 = n - m
+        c1 = va2[m:]
+        c2 = vb2[m:]
+        eps = jnp.finfo(cdt).eps
+        tiny = jnp.finfo(cdt).tiny
+        idx0 = _iota1(k0)
+        e1 = (idx0 == 0).astype(cdt)
+        e2 = (idx0 == 1).astype(cdt)
+
+        # q1, q2: Gram-Schmidt on (c1, c2) with branchless fallbacks so the
+        # basis stays orthonormal even when a2/b2 have no null component.
+        na2 = jnp.sqrt(jnp.sum(va2 * va2))
+        r11 = jnp.sqrt(jnp.sum(c1 * c1))
+        q1 = jnp.where(r11 > eps * na2, c1, e1)
+        q1 = q1 / jnp.sqrt(jnp.sum(q1 * q1))
+        c2p = c2 - jnp.sum(q1 * c2) * q1
+        r22 = jnp.sqrt(jnp.sum(c2p * c2p))
+        nb2 = jnp.sqrt(jnp.sum(vb2 * vb2))
+        f1 = e1 - q1 * q1[0]          # fallbacks orthogonal to q1; at least
+        f2 = e2 - q1 * q1[1]          # one has norm^2 >= 1/2
+        fb = jnp.where(jnp.sum(f1 * f1) >= jnp.sum(f2 * f2), f1, f2)
+        q2 = jnp.where(r22 > eps * (na2 + nb2), c2p, fb)
+        q2 = q2 - jnp.sum(q1 * q2) * q1
+        q2 = q2 / jnp.sqrt(jnp.sum(q2 * q2))
+
+        # M = H1 @ H2: exactly orthogonal, M[:, 0] = ±q1, M[:, 1] ≈ ±q2.
+        iota_r0 = lax.broadcasted_iota(jnp.int32, (k0, k0), 0)
+        iota_c0 = lax.broadcasted_iota(jnp.int32, (k0, k0), 1)
+        eye0 = (iota_r0 == iota_c0).astype(cdt)
+        sgn1 = jnp.where(q1[0] >= 0.0, 1.0, -1.0).astype(cdt)
+        w1 = q1 + sgn1 * e1           # ||w1||^2 = 2 + 2|q1[0]| >= 2
+        h1 = eye0 - (2.0 / jnp.sum(w1 * w1)) * (w1[:, None] * w1[None, :])
+        q2h = _mm(h1, q2[:, None])[:, 0] * (1.0 - e1)   # coord 0 exactly 0
+        q2h = q2h / jnp.sqrt(jnp.maximum(jnp.sum(q2h * q2h), tiny))
+        sgn2 = jnp.where(q2h[1] >= 0.0, 1.0, -1.0).astype(cdt)
+        w2 = q2h + sgn2 * e2
+        h2 = eye0 - (2.0 / jnp.sum(w2 * w2)) * (w2[:, None] * w2[None, :])
+        mq = _mm(h1, h2)
+        m2 = mq[:, :2]
+
+        # chained eigen-updates on the m+2 active coordinates (ascending:
+        # the two compressed zero poles lead, then s^2 ascending).
+        d0v = jnp.concatenate([jnp.zeros((2,), cdt), jnp.flip(s * s, 0)])
+        z1v = jnp.concatenate([_mm(m2.T, c1[:, None])[:, 0],
+                               jnp.flip(va2[:m], 0)])
+        z2v = jnp.concatenate([_mm(m2.T, c2[:, None])[:, 0],
+                               jnp.flip(vb2[:m], 0)])
+        d_act_asc, g_act = _chain(d0v, z1v, z2v, rho3, rho4, **kw)
+
+        v_null = v[:, m:]
+        v_act = jnp.concatenate([_mm(v_null, m2), jnp.flip(v[:, :m], 1)], 1)
+        v_rot = _mm(v_act, g_act)
+        v_inert = _mm(v_null, mq[:, 2:])
+        v_n = jnp.concatenate([jnp.flip(v_rot, 1), v_inert], 1)
+        d_right = jnp.concatenate([jnp.flip(d_act_asc, 0),
+                                   jnp.zeros((k0 - 2,), cdt)])
+        # old-v coordinates of the first m new right vectors (descending),
+        # for the sign fix: rows 2.. of g_act are the v[:, :m] coords in
+        # ascending order on both axes.
+        gv_mm = _flip2(g_act[2:, :])[:, :m]
+        btva = jnp.concatenate([_mm(vtb[m:][None, :], m2)[0],
+                                jnp.flip(vtb[:m], 0)])
+        bv = jnp.flip(_mm(btva[None, :], g_act)[0], 0)[:m]
+    else:
+        d0v = jnp.flip(jnp.concatenate([s * s, jnp.zeros((n - m,), cdt)]), 0)
+        z1v = jnp.flip(va2, 0)
+        z2v = jnp.flip(vb2, 0)
+        d_right_asc, g_v_asc = _chain(d0v, z1v, z2v, rho3, rho4, **kw)
+        g_v = _flip2(g_v_asc)
+        d_right = jnp.flip(d_right_asc, 0)
+        v_n = _mm(v, g_v)
+        gv_mm = g_v[:m, :m]
+        bv = _mm(vtb[None, :], g_v[:, :m])[0]
+
+    if sign_fix:
+        # diag_i = u_i^T (A + a b^T) v_i from the structured factors
+        core = jnp.sum((s[:, None] * g_u) * gv_mm, axis=0)
+        au = _mm(uta[None, :], g_u)[0]
+        diag = core + au * bv
+        flip = jnp.where(diag < 0.0, -1.0, 1.0).astype(cdt)
+        flip_full = jnp.concatenate([flip, jnp.ones((n - m,), cdt)])
+        v_n = v_n * flip_full[None, :]
+
+    return (u_n.astype(store_dt), s_n.astype(store_dt), v_n.astype(store_dt),
+            d_left.astype(store_dt), d_right.astype(store_dt))
+
+
+def _fused_truncated_body(u, s, v, a, b, *, deflate_rtol=None, n_bisect=28,
+                          n_newton=4, compute_dtype=None):
+    """Brand augmentation + the fused core, resident end to end.
+
+    Same contract as ``core.svd_update._svd_update_truncated_impl``:
+    ``u``: (m, r), ``s``: (r,), ``v``: (n, r) -> same shapes.
+    """
+    m, r = u.shape
+    n = v.shape[0]
+    store_dt = u.dtype
+    cdt = jnp.dtype(compute_dtype) if compute_dtype is not None \
+        else _compute_dtype_for(store_dt)
+    uc = u.astype(cdt)
+    sc = s.astype(cdt)
+    vc = v.astype(cdt)
+    ac = a.astype(cdt)
+    bc = b.astype(cdt)
+
+    p_vec = _mm(uc.T, ac[:, None])[:, 0]
+    a_perp = ac - _mm(uc, p_vec[:, None])[:, 0]
+    ra = jnp.sqrt(jnp.sum(a_perp * a_perp))
+    ok_a = ra > 1e-12
+    p_unit = jnp.where(ok_a, a_perp / jnp.where(ok_a, ra, 1.0), 0.0)
+    ra = jnp.where(ok_a, ra, 0.0)
+
+    q_vec = _mm(vc.T, bc[:, None])[:, 0]
+    b_perp = bc - _mm(vc, q_vec[:, None])[:, 0]
+    rb = jnp.sqrt(jnp.sum(b_perp * b_perp))
+    ok_b = rb > 1e-12
+    q_unit = jnp.where(ok_b, b_perp / jnp.where(ok_b, rb, 1.0), 0.0)
+    rb = jnp.where(ok_b, rb, 0.0)
+
+    s_aug = jnp.concatenate([sc, jnp.zeros((1,), cdt)])
+    ak = jnp.concatenate([p_vec, ra[None]])
+    bk = jnp.concatenate([q_vec, rb[None]])
+    eye = jnp.eye(r + 1, dtype=cdt)
+    uu, ss, vv, _, _ = _fused_body(
+        eye, s_aug, eye, ak, bk, sign_fix=True, deflate_rtol=deflate_rtol,
+        n_bisect=n_bisect, n_newton=n_newton, compute_dtype=cdt,
+    )
+
+    u_aug = jnp.concatenate([uc, p_unit[:, None]], axis=1)
+    v_aug = jnp.concatenate([vc, q_unit[:, None]], axis=1)
+    u_new = _mm(u_aug, uu[:, :r])
+    v_new = _mm(v_aug, vv[:, :r])
+    return (u_new.astype(store_dt), ss[:r].astype(store_dt),
+            v_new.astype(store_dt))
+
+
+# ---------------------------------------------------------------------------
+# XLA entry points (jit / vmap targets)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "sign_fix", "n_bisect", "n_newton", "compute_dtype"))
+def fused_update_xla(u, s, v, a, b, *, sign_fix=True, deflate_rtol=None,
+                     n_bisect=16, n_newton=6, compute_dtype=None):
+    """The fused body as one XLA fusion (CPU path; vmaps cleanly)."""
+    return _fused_body(u, s, v, a, b, sign_fix=sign_fix,
+                       deflate_rtol=deflate_rtol, n_bisect=n_bisect,
+                       n_newton=n_newton, compute_dtype=compute_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_bisect", "n_newton", "compute_dtype"))
+def fused_update_truncated_xla(u, s, v, a, b, *, deflate_rtol=None,
+                               n_bisect=16, n_newton=6, compute_dtype=None):
+    return _fused_truncated_body(u, s, v, a, b, deflate_rtol=deflate_rtol,
+                                 n_bisect=n_bisect, n_newton=n_newton,
+                                 compute_dtype=compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pallas entry points — grid (B,), one program per update, all phases in VMEM
+# ---------------------------------------------------------------------------
+
+
+def _full_kernel(u_ref, s_ref, v_ref, a_ref, b_ref,
+                 uo_ref, so_ref, vo_ref, dl_ref, dr_ref, *, statics):
+    out = _fused_body(u_ref[0], s_ref[0], v_ref[0], a_ref[0], b_ref[0],
+                      **statics)
+    uo_ref[0] = out[0]
+    so_ref[0] = out[1]
+    vo_ref[0] = out[2]
+    dl_ref[0] = out[3]
+    dr_ref[0] = out[4]
+
+
+def _trunc_kernel(u_ref, s_ref, v_ref, a_ref, b_ref,
+                  uo_ref, so_ref, vo_ref, *, statics):
+    out = _fused_truncated_body(u_ref[0], s_ref[0], v_ref[0], a_ref[0],
+                                b_ref[0], **statics)
+    uo_ref[0] = out[0]
+    so_ref[0] = out[1]
+    vo_ref[0] = out[2]
+
+
+def _batched_specs(batch, shapes):
+    return [pl.BlockSpec((1,) + sh, lambda i, _nz=len(sh): (i,) + (0,) * _nz)
+            for sh in shapes]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "sign_fix", "n_bisect", "n_newton", "compute_dtype", "interpret"))
+def fused_update_pallas_batched(u, s, v, a, b, *, sign_fix=True,
+                                deflate_rtol=None, n_bisect=16, n_newton=6,
+                                compute_dtype=None, interpret=False):
+    """B stacked fused updates, batch folded into the Pallas grid.
+
+    ``u``: (B, m, m), ``s``: (B, m), ``v``: (B, n, n), ``a``: (B, m),
+    ``b``: (B, n) -> the 5-tuple of stacked ``SvdUpdateResult`` leaves.
+    """
+    bsz, m, _ = u.shape
+    n = v.shape[-1]
+    dt = u.dtype
+    statics = dict(sign_fix=sign_fix, deflate_rtol=deflate_rtol,
+                   n_bisect=n_bisect, n_newton=n_newton,
+                   compute_dtype=compute_dtype)
+    kern = functools.partial(_full_kernel, statics=statics)
+    out_shapes = [(m, m), (m,), (n, n), (m,), (n,)]
+    return pl.pallas_call(
+        kern,
+        grid=(bsz,),
+        in_specs=_batched_specs(bsz, [(m, m), (m,), (n, n), (m,), (n,)]),
+        out_specs=_batched_specs(bsz, out_shapes),
+        out_shape=[jax.ShapeDtypeStruct((bsz,) + sh, dt) for sh in out_shapes],
+        interpret=interpret,
+    )(u, s.astype(dt), v, a.astype(dt), b.astype(dt))
+
+
+def fused_update_pallas(u, s, v, a, b, **kw):
+    """Single fused update via the (B,)-grid kernel with B = 1."""
+    out = fused_update_pallas_batched(u[None], s[None], v[None],
+                                      a[None], b[None], **kw)
+    return tuple(x[0] for x in out)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_bisect", "n_newton", "compute_dtype", "interpret"))
+def fused_update_truncated_pallas_batched(u, s, v, a, b, *, deflate_rtol=None,
+                                          n_bisect=16, n_newton=6,
+                                          compute_dtype=None, interpret=False):
+    """B stacked fused truncated updates (Brand + fused core per program)."""
+    bsz, m, r = u.shape
+    n = v.shape[-2]
+    dt = u.dtype
+    statics = dict(deflate_rtol=deflate_rtol, n_bisect=n_bisect,
+                   n_newton=n_newton, compute_dtype=compute_dtype)
+    kern = functools.partial(_trunc_kernel, statics=statics)
+    out_shapes = [(m, r), (r,), (n, r)]
+    return pl.pallas_call(
+        kern,
+        grid=(bsz,),
+        in_specs=_batched_specs(bsz, [(m, r), (r,), (n, r), (m,), (n,)]),
+        out_specs=_batched_specs(bsz, out_shapes),
+        out_shape=[jax.ShapeDtypeStruct((bsz,) + sh, dt) for sh in out_shapes],
+        interpret=interpret,
+    )(u, s.astype(dt), v, a.astype(dt), b.astype(dt))
+
+
+def fused_update_truncated_pallas(u, s, v, a, b, **kw):
+    out = fused_update_truncated_pallas_batched(u[None], s[None], v[None],
+                                                a[None], b[None], **kw)
+    return tuple(x[0] for x in out)

@@ -13,15 +13,32 @@ batch axis folded into the Pallas grid — not B sequential kernel calls.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax import custom_batching
 
 from repro.kernels.cauchy_matmul import cauchy_matmul_pallas, cauchy_matmul_pallas_batched
+from repro.kernels.fused_update import (
+    fused_update_pallas,
+    fused_update_pallas_batched,
+    fused_update_truncated_pallas,
+    fused_update_truncated_pallas_batched,
+    fused_update_truncated_xla,
+    fused_update_xla,
+)
 from repro.kernels.nearfield import nearfield_pallas
 from repro.kernels.secular_newton import secular_solve_pallas
 
-__all__ = ["interpret_default", "cauchy_matmul_stable", "secular_solve", "nearfield"]
+__all__ = [
+    "interpret_default",
+    "cauchy_matmul_stable",
+    "secular_solve",
+    "nearfield",
+    "fused_update",
+    "fused_update_truncated",
+]
 
 
 def interpret_default() -> bool:
@@ -97,3 +114,94 @@ def nearfield(w_near, x_near, av_b, tau_b, tgt_mask, *, interpret=None):
     if interpret is None:
         interpret = interpret_default()
     return nearfield_pallas(w_near, x_near, av_b, tau_b, tgt_mask, interpret=interpret)
+
+
+# --- fused rank-1 update (kernels.fused_update) ---------------------------
+#
+# On TPU the single-update entry carries a custom_vmap rule (one factory per
+# static config), so ``jax.vmap`` — what core.engine does for batched
+# updates — lowers to ONE fused_update_pallas_batched launch with the batch
+# folded into the Pallas grid.  Off-TPU the body runs as a plain XLA fusion
+# (fused_update_xla), which vmaps natively; interpret-mode Pallas is for the
+# kernel-body tests, not the production dispatch.
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_pallas_vmapped(sign_fix, deflate_rtol, compute_dtype):
+    kw = dict(sign_fix=sign_fix, deflate_rtol=deflate_rtol,
+              compute_dtype=compute_dtype)
+
+    @custom_batching.custom_vmap
+    def f(u, s, v, a, b):
+        return fused_update_pallas(u, s, v, a, b,
+                                   interpret=interpret_default(), **kw)
+
+    @f.def_vmap
+    def _f_vmap(axis_size, in_batched, u, s, v, a, b):
+        def bcast(x, batched):
+            return x if batched else jnp.broadcast_to(x, (axis_size,) + x.shape)
+
+        args = [bcast(x, bb) for x, bb in zip((u, s, v, a, b), in_batched)]
+        out = fused_update_pallas_batched(*args, interpret=interpret_default(),
+                                          **kw)
+        return tuple(out), (True,) * 5
+
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_trunc_pallas_vmapped(deflate_rtol, compute_dtype):
+    kw = dict(deflate_rtol=deflate_rtol, compute_dtype=compute_dtype)
+
+    @custom_batching.custom_vmap
+    def f(u, s, v, a, b):
+        return fused_update_truncated_pallas(u, s, v, a, b,
+                                             interpret=interpret_default(), **kw)
+
+    @f.def_vmap
+    def _f_vmap(axis_size, in_batched, u, s, v, a, b):
+        def bcast(x, batched):
+            return x if batched else jnp.broadcast_to(x, (axis_size,) + x.shape)
+
+        args = [bcast(x, bb) for x, bb in zip((u, s, v, a, b), in_batched)]
+        out = fused_update_truncated_pallas_batched(
+            *args, interpret=interpret_default(), **kw)
+        return tuple(out), (True,) * 3
+
+    return f
+
+
+def fused_update(u, s, v, a, b, *, sign_fix=True, deflate_rtol=None,
+                 compute_dtype=None, interpret=None):
+    """Dispatching entry for the fused full update (core method="fused").
+
+    Returns the plain ``(u, s, v, d_left, d_right)`` tuple.  ``interpret``
+    forces interpret-mode Pallas (tests); otherwise Pallas on TPU, the XLA
+    fusion elsewhere.
+    """
+    if interpret:
+        return fused_update_pallas(u, s, v, a, b, sign_fix=sign_fix,
+                                   deflate_rtol=deflate_rtol,
+                                   compute_dtype=compute_dtype, interpret=True)
+    if jax.default_backend() == "tpu":
+        fn = _fused_pallas_vmapped(sign_fix, deflate_rtol, compute_dtype)
+        return fn(u, s, v, a, b)
+    return fused_update_xla(u, s, v, a, b, sign_fix=sign_fix,
+                            deflate_rtol=deflate_rtol,
+                            compute_dtype=compute_dtype)
+
+
+def fused_update_truncated(u, s, v, a, b, *, deflate_rtol=None,
+                           compute_dtype=None, interpret=None):
+    """Dispatching entry for the fused truncated update: (u, s, v) tuple."""
+    if interpret:
+        return fused_update_truncated_pallas(u, s, v, a, b,
+                                             deflate_rtol=deflate_rtol,
+                                             compute_dtype=compute_dtype,
+                                             interpret=True)
+    if jax.default_backend() == "tpu":
+        fn = _fused_trunc_pallas_vmapped(deflate_rtol, compute_dtype)
+        return fn(u, s, v, a, b)
+    return fused_update_truncated_xla(u, s, v, a, b,
+                                      deflate_rtol=deflate_rtol,
+                                      compute_dtype=compute_dtype)

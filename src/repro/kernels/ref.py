@@ -1,12 +1,26 @@
-"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests).
+
+The secular oracle shares its bisection/Newton loop body with the kernel
+itself (``kernels.secular_body``) so the two cannot drift; the fused-update
+oracle is the *unfused* chain of per-phase dispatches
+(``core.svd_update._svd_update_impl(method="direct")``) — an independent
+implementation of the same algorithm, which is what makes it a real
+reference for the megakernel rather than a restatement of it.
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
-__all__ = ["cauchy_matmul_ref", "secular_solve_ref", "nearfield_ref"]
+from repro.kernels.secular_body import secular_iterate
+
+__all__ = [
+    "cauchy_matmul_ref",
+    "secular_solve_ref",
+    "nearfield_ref",
+    "svd_update_fused_ref",
+]
 
 
 def cauchy_matmul_ref(w, src, anchor_vals, tau, tgt_mask):
@@ -19,32 +33,24 @@ def cauchy_matmul_ref(w, src, anchor_vals, tau, tgt_mask):
 
 def secular_solve_ref(dc, zc2, rho, anchor_vals, lo, hi, *, n_bisect=58, n_newton=4):
     """Oracle for kernels.secular_newton.secular_solve_pallas."""
-    dt = dc.dtype
     diff = dc[:, None] - anchor_vals[None, :]
+    return secular_iterate(diff, zc2, rho, lo, hi,
+                           n_bisect=n_bisect, n_newton=n_newton, poles_axis=0)
 
-    def w_of(tau):
-        delta = diff - tau[None, :]
-        safe = jnp.where(delta == 0.0, 1.0, delta)
-        inv = jnp.where(delta != 0.0, 1.0 / safe, 0.0)
-        w = 1.0 + rho * jnp.sum(zc2[:, None] * inv, axis=0)
-        wp = rho * jnp.sum(zc2[:, None] * inv * inv, axis=0)
-        return w, wp
 
-    def bis(_, carry):
-        lo_c, hi_c = carry
-        mid = 0.5 * (lo_c + hi_c)
-        w, _ = w_of(mid)
-        right = w < 0.0
-        return jnp.where(right, mid, lo_c), jnp.where(right, hi_c, mid)
+def svd_update_fused_ref(u, s, v, a, b, *, sign_fix=True, deflate_rtol=None):
+    """Oracle for kernels.fused_update: the unfused per-phase dispatch chain.
 
-    lo_f, hi_f = lax.fori_loop(0, n_bisect, bis, (lo, hi))
-    tau = 0.5 * (lo_f + hi_f)
+    Returns the plain ``(u, s, v, d_left, d_right)`` tuple.  Differences vs
+    the fused body are limited to floating-point op order and the deflation
+    strategy for *near*-coincident poles (the fused body merges by pole gap,
+    the chain by Givens off-diagonal size) — tests compare at f64 tolerances.
+    """
+    from repro.core.svd_update import _svd_update_impl
 
-    def newton(_, t):
-        w, wp = w_of(t)
-        return jnp.clip(t - w / jnp.maximum(wp, jnp.finfo(dt).tiny), lo_f, hi_f)
-
-    return lax.fori_loop(0, n_newton, newton, tau)
+    res = _svd_update_impl(u, s, v, a, b, method="direct",
+                           sign_fix=sign_fix, deflate_rtol=deflate_rtol)
+    return (res.u, res.s, res.v, res.d_left, res.d_right)
 
 
 def nearfield_ref(w_near, x_near, av_b, tau_b, tgt_mask):

@@ -18,8 +18,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 from jax.experimental import pallas as pl
+
+from repro.kernels.secular_body import secular_iterate
 
 __all__ = ["secular_solve_pallas"]
 
@@ -31,34 +32,12 @@ def _kernel(dc_ref, zc2_ref, rho_ref, av_ref, lo_ref, hi_ref, tau_ref, *, n_bise
     av = av_ref[...][0]     # (BM,)
     lo = lo_ref[...][0]
     hi = hi_ref[...][0]
-    dt = dc.dtype
 
     diff = dc[:, None] - av[None, :]  # (N, BM) — resident for all iterations
-
-    def w_of(tau):
-        delta = diff - tau[None, :]
-        safe = jnp.where(delta == 0.0, 1.0, delta)
-        inv = jnp.where(delta != 0.0, 1.0 / safe, 0.0)
-        w = 1.0 + rho * jnp.sum(zc2[:, None] * inv, axis=0)
-        wp = rho * jnp.sum(zc2[:, None] * inv * inv, axis=0)
-        return w, wp
-
-    def bis_step(_, carry):
-        lo_c, hi_c = carry
-        mid = 0.5 * (lo_c + hi_c)
-        w, _ = w_of(mid)
-        go_right = w < 0.0
-        return jnp.where(go_right, mid, lo_c), jnp.where(go_right, hi_c, mid)
-
-    lo_f, hi_f = lax.fori_loop(0, n_bisect, bis_step, (lo, hi))
-    tau = 0.5 * (lo_f + hi_f)
-
-    def newton_step(_, tau_c):
-        w, wp = w_of(tau_c)
-        step = w / jnp.maximum(wp, jnp.finfo(dt).tiny)
-        return jnp.clip(tau_c - step, lo_f, hi_f)
-
-    tau = lax.fori_loop(0, n_newton, newton_step, tau)
+    # the loop body is shared with kernels.ref / kernels.fused_update
+    # (kernels.secular_body) so the kernel and its oracle cannot drift
+    tau = secular_iterate(diff, zc2, rho, lo, hi,
+                          n_bisect=n_bisect, n_newton=n_newton, poles_axis=0)
     tau_ref[...] = tau[None, :]
 
 

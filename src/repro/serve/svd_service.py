@@ -108,19 +108,30 @@ _POLICY_SPEC_FIELDS = (
     "sign_fix",
     "deflate_rtol",
     "precision",
+    "storage_dtype",
     "batch_axis",
     "truncate_to",
 )
 
+# policy fields added after SNAPSHOT_VERSION was minted: old snapshots lack
+# them, so restore falls back to each field's UpdatePolicy default
+_POLICY_SPEC_DEFAULTS = {"storage_dtype": None}
+
 
 def _policy_spec(policy: UpdatePolicy) -> dict:
     spec = {f: getattr(policy, f) for f in _POLICY_SPEC_FIELDS}
+    if spec["storage_dtype"] is not None:
+        spec["storage_dtype"] = np.dtype(spec["storage_dtype"]).name
     spec["had_mesh"] = policy.mesh is not None
     return spec
 
 
 def _policy_from_spec(spec: dict, mesh=None) -> UpdatePolicy:
-    return UpdatePolicy(mesh=mesh, **{f: spec[f] for f in _POLICY_SPEC_FIELDS})
+    kw = {
+        f: spec.get(f, _POLICY_SPEC_DEFAULTS.get(f))
+        for f in _POLICY_SPEC_FIELDS
+    }
+    return UpdatePolicy(mesh=mesh, **kw)
 
 
 @dataclass
@@ -387,7 +398,9 @@ class SvdService:
                 m += step[1]
             elif step[0] == "pad_cols":
                 n += step[1]
-            elif step[0] == "rank1":
+            elif step[0] in ("rank1", "rank1_scan"):
+                # scan steps dispatch the same truncated geometry (the k-loop
+                # is inside the executable), so one warm record covers both
                 self._record_warm("trunc", None, m, n, state.rank, state.dtype)
 
     def _effective_shape(self, stream_id: str) -> tuple[int, int]:

@@ -34,7 +34,7 @@ from jax import lax
 
 from repro.api.policy import UpdatePolicy
 from repro.api.state import SvdState, as_state
-from repro.api.update import update, warmup
+from repro.api.update import update, update_rank_k, warmup
 from repro.updates.ops import (
     AppendCols,
     AppendRows,
@@ -86,18 +86,32 @@ def schedule_cache_clear() -> None:
 #   ("decay", path)                 s *= lam            (free)
 #   ("pad_rows", p) / ("pad_cols", p)                   (free)
 #   ("rank1", path, kind, i)        one engine dispatch
+#   ("rank1_scan", path, kind, k)   k dispatches through ONE lax.scan
 #
 # ``path`` locates the source op inside Compose nesting; ``i`` names the
 # component.  Steps are static (no array data) — data binds at execution.
+#
+# Long component runs (k >= _SCAN_MIN) lower to a single scanned step
+# (``api.update_rank_k``): trace/compile cost stays k-independent instead of
+# unrolling k copies of the update body into the jaxpr.  Short runs stay
+# unrolled — they interleave with other ops' steps in ``apply_many`` waves.
 # ---------------------------------------------------------------------------
+
+_SCAN_MIN = 17
+
+
+def _component_steps(path: tuple, kind: str, count: int) -> list:
+    if count >= _SCAN_MIN:
+        return [("rank1_scan", path, kind, count)]
+    return [("rank1", path, kind, i) for i in range(count)]
 
 
 def _build(spec: tuple, m: int, n: int, rank: int, is_full: bool, path: tuple):
     kind = spec[0]
     if kind == "rank_k":
-        return [("rank1", path, kind, i) for i in range(spec[1])], (m, n)
+        return _component_steps(path, kind, spec[1]), (m, n)
     if kind == "dense_delta":
-        return [("rank1", path, kind, i) for i in range(spec[1])], (m, n)
+        return _component_steps(path, kind, spec[1]), (m, n)
     if kind == "decay":
         return [("decay", path)], (m, n)
     if kind in ("append_rows", "append_cols"):
@@ -108,7 +122,7 @@ def _build(spec: tuple, m: int, n: int, rank: int, is_full: bool, path: tuple):
             )
         p, q = spec[1], spec[2]
         pad = ("pad_rows", p) if kind == "append_rows" else ("pad_cols", p)
-        steps = [pad] + [("rank1", path, kind, i) for i in range(q)]
+        steps = [pad] + _component_steps(path, kind, q)
         out = (m + p, n) if kind == "append_rows" else (m, n + p)
         return steps, out
     if kind == "compose":
@@ -210,6 +224,26 @@ def _bind(cur: SvdState, op: UpdateOp, step: tuple, ctx: dict):
     return comp, b
 
 
+def _bind_block(cur: SvdState, op: UpdateOp, step: tuple, ctx: dict):
+    """The full (k, m)/(k, n) pair blocks of one scanned rank-k step."""
+    _, path, kind, _count = step
+    src = _resolve(op, path)
+    if kind == "rank_k":
+        return (jnp.swapaxes(jnp.asarray(src.u), -1, -2),
+                jnp.swapaxes(jnp.asarray(src.v), -1, -2))
+    u, s, v = _block_factors(src, ctx, path)
+    comp = jnp.swapaxes(u * s[..., None, :], -1, -2)      # (..., k, rows)
+    vt = jnp.swapaxes(v, -1, -2)                          # (..., k, cols)
+    if kind == "dense_delta":
+        return comp, vt
+    if kind == "append_rows":
+        z = jnp.zeros(comp.shape[:-1] + (cur.m - src.p,), comp.dtype)
+        return jnp.concatenate([z, comp], axis=-1), vt
+    # append_cols
+    z = jnp.zeros(vt.shape[:-1] + (cur.n - src.p,), vt.dtype)
+    return comp, jnp.concatenate([z, vt], axis=-1)
+
+
 def _pad_rows(cur: SvdState, p: int) -> SvdState:
     pad = jnp.zeros(cur.u.shape[:-2] + (p, cur.rank), cur.u.dtype)
     return cur.replace(u=jnp.concatenate([cur.u, pad], axis=-2))
@@ -256,6 +290,9 @@ def apply(state, op: UpdateOp, policy: UpdatePolicy | None = None) -> SvdState:
         if step[0] == "rank1":
             a, b = _bind(st, op, step, ctx)
             st = update(st, a, b, policy)
+        elif step[0] == "rank1_scan":
+            va, vb = _bind_block(st, op, step, ctx)
+            st = update_rank_k(st, va, vb, policy)
         else:
             st = _exec_free(st, op, step)
     return st
@@ -331,6 +368,14 @@ def apply_many(
                 a = jnp.stack([p[0] for p in pairs])
                 b = jnp.stack([p[1] for p in pairs])
                 cur = update(cur, a, b, policy)
+            elif step[0] == "rank1_scan":
+                blocks = [
+                    _bind_block(cur, op, step, ctx)
+                    for op, ctx in zip(group_ops, ctxs)
+                ]
+                va = jnp.stack([p[0] for p in blocks])
+                vb = jnp.stack([p[1] for p in blocks])
+                cur = update_rank_k(cur, va, vb, policy)
             elif step[0] == "decay":
                 lams = jnp.stack(
                     [jnp.asarray(_resolve(op, step[1]).lam) for op in group_ops]
@@ -365,14 +410,19 @@ def warmup_plan(
     spec = op.spec()
     steps, _ = _build(spec, m, n, r, rank is None, ())
     geoms: list[tuple[int, int]] = []
+    entries: list[tuple[int, int, int | None]] = []
     cur_m, cur_n = m, n
     for step in steps:
         if step[0] == "pad_rows":
             cur_m += step[1]
         elif step[0] == "pad_cols":
             cur_n += step[1]
-        elif step[0] == "rank1" and (cur_m, cur_n) not in geoms:
-            geoms.append((cur_m, cur_n))
-    for gm, gn in geoms:
-        warmup(policy, m=gm, n=gn, batch=batch, rank=rank, dtype=dtype)
+        elif step[0] in ("rank1", "rank1_scan"):
+            k = step[3] if step[0] == "rank1_scan" else None
+            if (cur_m, cur_n, k) not in entries:
+                entries.append((cur_m, cur_n, k))
+            if (cur_m, cur_n) not in geoms:
+                geoms.append((cur_m, cur_n))
+    for gm, gn, k in entries:
+        warmup(policy, m=gm, n=gn, batch=batch, rank=rank, k=k, dtype=dtype)
     return geoms

@@ -27,6 +27,7 @@ API_SURFACE = [
     "engine_for",
     "update",
     "update_many",
+    "update_rank_k",  # scan-lowered rank-k schedules (DESIGN §11)
     "warmup",
 ]
 

@@ -37,7 +37,8 @@ REPO = Path(__file__).resolve().parent.parent
 
 # (policy method, engine method) pairs — "pallas" is the public name of the
 # engine's "kernel" route
-ROUTES = [("direct", "direct"), ("fmm", "fmm"), ("pallas", "kernel")]
+ROUTES = [("direct", "direct"), ("fmm", "fmm"), ("pallas", "kernel"),
+          ("fused", "fused")]
 
 
 def _problem(m, n):
