@@ -6,9 +6,17 @@ singles.  This bench measures that gap at the ISSUE 5 acceptance point
 (k=8, B=16 on CPU; target >= 1.5x) plus neighboring shapes, and the cost of
 a ``Decay`` fold (which must be engine-free, i.e. ~host-speed).
 
+ISSUE 7 adds the extraction cells: the randomized range-finder sketch
+(``updates.sketch.sketch_svd``) vs the dense ``jnp.linalg.svd`` it replaced
+at m=n=1024, k=8 (target >= 3x), and the ``Sparse`` COO lowering
+(``sparse_sketch_svd``, O((m+n)l^2 + nnz*l)) vs densify-then-``DenseDelta``
+at 1% density (target >= 5x).
+
 CSV rows (benchmarks/run.py style):
   bench_updates/rank_k/B=<b>/k=<k>,us,speedup=...
   bench_updates/decay/B=<b>,us,engine_calls=0
+  bench_updates/sketch/m=<m>/k=<k>,us,speedup=...
+  bench_updates/sparse/m=<m>/nnz=<nnz>,us,speedup=...
 
 and a machine-readable summary at benchmarks/BENCH_updates.json.
 """
@@ -26,7 +34,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit, time_fn
 from repro import api
 from repro.api import SvdState, UpdatePolicy
-from repro.updates import Decay, RankK
+from repro.updates import Decay, RankK, sketch_svd, sparse_sketch_svd
 
 M, N, RANK = 32, 48, 8    # the bench_engine.py truncated geometry
 CELLS = [(16, 8), (16, 4), (8, 8)]     # (B streams, k) — first is acceptance
@@ -86,14 +94,81 @@ def run() -> dict:
     emit(f"bench_updates/decay/B={b}", us_decay, "engine_calls=0")
     results["decay"] = {"B": b, "us": us_decay}
 
+    results["sketch"] = _bench_sketch(rng)
+    results["sparse"] = _bench_sparse(rng)
+
     accept = results["cells"][0]
     results["acceptance"] = {
         "target_speedup": 1.5,
         "measured_speedup": accept["speedup"],
         "pass": accept["speedup"] >= 1.5,
     }
+    results["acceptance_sketch"] = {
+        "target_speedup": 3.0,
+        "measured_speedup": results["sketch"]["speedup"],
+        "pass": results["sketch"]["speedup"] >= 3.0,
+    }
+    results["acceptance_sparse"] = {
+        "target_speedup": 5.0,
+        "measured_speedup": results["sparse"]["speedup"],
+        "pass": results["sparse"]["speedup"] >= 5.0,
+    }
     OUT.write_text(json.dumps(results, indent=1))
     return results
+
+
+SKETCH_M = SKETCH_N = 1024
+SKETCH_K = 8
+SPARSE_DENSITY = 0.01
+
+
+def _bench_sketch(rng) -> dict:
+    """Randomized range-finder vs the dense LAPACK SVD it replaced, on the
+    DenseDelta lowering shape (extract top-k of an m x n delta)."""
+    m, n, k = SKETCH_M, SKETCH_N, SKETCH_K
+    delta = jnp.asarray(rng.normal(size=(m, n)))
+
+    @jax.jit
+    def dense_topk(d):
+        du, ds, dvt = jnp.linalg.svd(d, full_matrices=False)
+        return du[:, :k] * ds[:k], dvt[:k]
+
+    us_dense = time_fn(lambda: jax.block_until_ready(dense_topk(delta)))
+    us_sketch = time_fn(lambda: jax.block_until_ready(sketch_svd(delta, k)))
+    speedup = us_dense / us_sketch
+    emit(f"bench_updates/sketch/m={m}/k={k}", us_sketch,
+         f"speedup={speedup:.2f} dense_svd_us={us_dense:.0f}")
+    return {"m": m, "n": n, "k": k, "sketch_us": us_sketch,
+            "dense_svd_us": us_dense, "speedup": speedup}
+
+
+def _bench_sparse(rng) -> dict:
+    """O(nnz) Sparse lowering vs the densify-then-DenseDelta route (scatter
+    the COO entries into an m x n buffer, then sketch the dense delta)."""
+    m, n, k = SKETCH_M, SKETCH_N, SKETCH_K
+    nnz = int(SPARSE_DENSITY * m * n)
+    rows = jnp.asarray(rng.integers(0, m, nnz), jnp.int32)
+    cols = jnp.asarray(rng.integers(0, n, nnz), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=nnz))
+
+    @jax.jit
+    def densify_then_sketch(r, c, v):
+        dense = jnp.zeros((m, n), v.dtype).at[r, c].add(v)
+        return sketch_svd(dense, k)
+
+    us_densify = time_fn(
+        lambda: jax.block_until_ready(densify_then_sketch(rows, cols, vals))
+    )
+    us_sparse = time_fn(
+        lambda: jax.block_until_ready(
+            sparse_sketch_svd(rows, cols, vals, m=m, n=n, k=k)
+        )
+    )
+    speedup = us_densify / us_sparse
+    emit(f"bench_updates/sparse/m={m}/nnz={nnz}", us_sparse,
+         f"speedup={speedup:.2f} densify_us={us_densify:.0f}")
+    return {"m": m, "n": n, "k": k, "nnz": nnz, "sparse_us": us_sparse,
+            "densify_us": us_densify, "speedup": speedup}
 
 
 if __name__ == "__main__":

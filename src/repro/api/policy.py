@@ -47,6 +47,16 @@ class UpdatePolicy:
                     16-bit storage computes in f32 inside the engine — the
                     mixed-precision mode, error budget in DESIGN.md §11
 
+    Sketching (the randomized range-finder every DenseDelta/Sparse lowering
+    runs through — ``updates.sketch``, DESIGN.md §12):
+      sketch_oversample   extra sample columns beyond the target rank; the
+                          sketch is exact when rank + oversample covers the
+                          delta's true rank
+      sketch_power_iters  subspace (power) iterations sharpening truncating
+                          DENSE sketches (a dense pass is a cheap GEMM); the
+                          sparse single-pass path has no power iterations by
+                          design — its accuracy lever is sketch_oversample
+
     Placement:
       mesh         jax.sharding.Mesh to spread a batched update over (None = local)
       batch_axis   mesh axis name carrying the batch
@@ -74,6 +84,8 @@ class UpdatePolicy:
     deflate_rtol: float | None = None
     precision: str | None = None
     storage_dtype: Any = None
+    sketch_oversample: int = 8
+    sketch_power_iters: int = 1
     mesh: Any = None
     batch_axis: str = "data"
     truncate_to: int | None = None
@@ -83,6 +95,14 @@ class UpdatePolicy:
             raise ValueError(f"unknown method {self.method!r}; one of {METHODS}")
         if self.truncate_to is not None and self.truncate_to < 1:
             raise ValueError(f"truncate_to must be >= 1; got {self.truncate_to}")
+        if self.sketch_oversample < 0:
+            raise ValueError(
+                f"sketch_oversample must be >= 0; got {self.sketch_oversample}"
+            )
+        if self.sketch_power_iters < 0:
+            raise ValueError(
+                f"sketch_power_iters must be >= 0; got {self.sketch_power_iters}"
+            )
         if self.storage_dtype is not None:
             # canonicalize to np.dtype: hashable, comparable, serializable
             object.__setattr__(self, "storage_dtype", np.dtype(self.storage_dtype))
@@ -137,8 +157,12 @@ class UpdatePolicy:
     def engine_key(self, problem_n: int, *, m: int | None = None,
                    n: int | None = None, rank: int | None = None) -> tuple:
         """The (method, fmm_p, sign_fix, deflate_rtol, precision,
-        storage_dtype) tuple that keys ``core.engine.default_engine`` — the
-        policy's plan-cache fold."""
+        storage_dtype, sketch_oversample, sketch_power_iters) tuple that
+        keys compiled artifacts — the policy's full numerics fold.  The
+        first six select ``core.engine.default_engine`` (the rank-1 plan
+        cache); the sketch fields key the planner's schedule cache + the
+        jitted ``updates.sketch`` executables (the engine body itself is
+        sketch-independent)."""
         return (
             self.resolve_method(problem_n, m=m, n=n, rank=rank),
             self.fmm_p,
@@ -146,7 +170,15 @@ class UpdatePolicy:
             self.deflate_rtol,
             self.precision,
             self.storage_dtype,
+            self.sketch_oversample,
+            self.sketch_power_iters,
         )
+
+    @property
+    def sketch_params(self) -> tuple[int, int]:
+        """(oversample, power_iters) — the schedule-cache fold of the
+        range-finder knobs (``updates.planner.lower``)."""
+        return (self.sketch_oversample, self.sketch_power_iters)
 
 
 def policy_from_legacy(

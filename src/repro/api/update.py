@@ -49,10 +49,12 @@ def engine_from_key(policy: UpdatePolicy, problem_n: int, *,
     — every layer (api, dist.merge, serve) resolves through here, so the
     shared-plan-cache invariant ("equal policies never recompile") has a
     single definition.  The optional geometry lets ``method="auto"`` prefer
-    the fused megakernel when the problem fits its VMEM budget."""
-    method, fmm_p, sign_fix, deflate_rtol, precision, storage_dtype = (
-        policy.engine_key(problem_n, m=m, n=n, rank=rank)
-    )
+    the fused megakernel when the problem fits its VMEM budget.  The key's
+    trailing sketch fields (oversample, power_iters) key the planner's
+    schedule cache, not the engine — the rank-1 executables are
+    sketch-independent, so they are dropped here."""
+    (method, fmm_p, sign_fix, deflate_rtol, precision, storage_dtype,
+     _sketch_os, _sketch_pi) = policy.engine_key(problem_n, m=m, n=n, rank=rank)
     return default_engine(
         method,
         fmm_p=fmm_p,

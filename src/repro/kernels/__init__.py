@@ -5,10 +5,14 @@ secular_newton  — in-VMEM secular-equation bisection+Newton (VPU)
 nearfield       — FMM near-field block-tridiagonal product (MXU)
 fused_update    — the whole rank-1 update (Alg. 6.1) in one (B,)-grid kernel
 secular_body    — the ONE bisection/Newton loop body the above share
+sparse_proj     — COO gather/scatter projection out = S @ mat (SMEM coords,
+                  batch-in-grid custom_vmap) for the Sparse op's O(nnz)
+                  lowering via updates.sketch (DESIGN.md §12)
 
-Each has a pure-jnp oracle in ref.py; ops.py is the dispatching jit wrapper
-(interpret=True on CPU, Mosaic on TPU). core.eigh_update routes here via
-method="kernel"; core.svd_update routes the megakernel via method="fused".
+Each has a pure-jnp oracle in ref.py (sparse_proj's is its XLA segment-sum
+fallback); ops.py is the dispatching jit wrapper (interpret=True on CPU,
+Mosaic on TPU). core.eigh_update routes here via method="kernel";
+core.svd_update routes the megakernel via method="fused".
 """
 
 from repro.kernels import ops, ref  # noqa: F401

@@ -26,7 +26,7 @@ import re
 from dataclasses import dataclass
 
 __all__ = ["HW", "collective_bytes", "roofline_terms", "model_flops",
-           "svd_update_flops"]
+           "svd_update_flops", "sketch_flops", "sparse_lowering_flops"]
 
 # TPU v5e, per chip
 PEAK_FLOPS = 197e12
@@ -172,6 +172,41 @@ def svd_update_flops(m: int, n: int, r: int, batch: int = 1) -> float:
     """
     per = 4.0 * r * (m + n) + 2.0 * r * (r + 1) * (m + n) + 24.0 * (r + 1) ** 3
     return batch * per
+
+
+def sketch_flops(m: int, n: int, k: int, *, oversample: int = 8,
+                 power_iters: int = 1, batch: int = 1) -> float:
+    """Analytic MODEL_FLOPS of one randomized range-finder sketch
+    (``updates.sketch.sketch_svd``) at l = min(k + oversample, m, n) samples:
+    the (1 + 2·power_iters + 1) dense l-wide passes over the delta, the tall
+    QRs ``~2(m + n)l²`` per orthonormalization, and the (2l)³-scale
+    Jordan-Wielandt core.  The dense-SVD sketch this replaces costs
+    ``~4·min(m,n)·m·n`` — the gap is the ≥3x bench gate in
+    ``benchmarks/bench_updates.py``."""
+    l = max(1, min(k + oversample, m, n))
+    passes = 2.0 * (2.0 + 2.0 * power_iters) * m * n * l
+    qr = 2.0 * (1.0 + 2.0 * power_iters) * (m + n) * l * l
+    core = 24.0 * (2 * l) ** 3
+    return batch * (passes + qr + core)
+
+
+def sparse_lowering_flops(m: int, n: int, k: int, nnz: int, *,
+                          oversample: int = 8, batch: int = 1) -> float:
+    """Analytic MODEL_FLOPS of lowering one ``Sparse`` COO delta to its k
+    pairs (``updates.sketch.sparse_sketch_svd``, the two-sided SINGLE-pass
+    sketch): exactly two ``kernels.sparse_proj`` applications (``Y = SΩ``,
+    ``W = SᵀΨ``, ``2·nnz·l`` each — the sparse scatter is the serialized
+    hot loop, which is why there is no power-iteration knob here), two tall
+    QRs, the ``ΨᵀQ``/``ΨᵀY``/``PᵀΩ`` core GEMMs with their two l×l solves,
+    and the Jordan-Wielandt core.  O((m + n)·l² + nnz·l), never the
+    densified ``m·n`` the densify-then-``DenseDelta`` route pays."""
+    l = max(1, min(k + oversample, m, n))
+    passes = 2.0 * 2.0 * nnz * l
+    qr = 2.0 * 2.0 * (m + n) * l * l
+    core_gemms = 2.0 * (2.0 * m + n) * l * l
+    solves = 2.0 * (2.0 / 3.0) * l ** 3
+    core = 24.0 * (2 * l) ** 3
+    return batch * (passes + qr + core_gemms + solves + core)
 
 
 def _active_param_count(cfg) -> float:

@@ -150,10 +150,15 @@ def compress_decompress_batch(
         decayed = as_state(tracker).replace(s=tracker.s * 0.99)
         k = min(tracker_rank, q.shape[-1])
         if k > 1:
-            sig = jnp.linalg.norm(q[:, :, :k], axis=1)             # (B, k)
-            root = jnp.sqrt(sig)[:, None, :]
-            uk = p_hat[:, :, :k] * root                            # (B, m, k)
-            vk = q[:, :, :k] / (sig + 1e-30)[:, None, :] * root    # (B, n, k)
+            # exact top-k of g_hat = p_hat @ qᵀ through the sketch module's
+            # factored core (updates.sketch): no dense product, no LAPACK
+            # SVD — the same no-svd path every delta lowering runs on
+            from repro.updates.sketch import factored_svd
+
+            uc, sig, vc = factored_svd(p_hat, jnp.swapaxes(q, -1, -2), k)
+            root = jnp.sqrt(sig)[:, None, :]                       # (B, 1, k)
+            uk = uc * root                                         # (B, m, k)
+            vk = vc * root                                         # (B, n, k)
             if engine is not None:
                 from repro.core.svd_update import TruncatedSvd
 

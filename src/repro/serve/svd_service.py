@@ -20,9 +20,15 @@ and flushes *one batched engine call* per round:
 * Structured events (``repro.updates`` ops): ``enqueue_op`` lowers
   geometry-preserving ops (``RankK``, ``DenseDelta``, ``Compose`` of them)
   into the pair FIFO — a rank-k op becomes a k-deep flush bucket whose
-  steps batch with other streams' heads — while geometry-changing appends
-  and ``Decay`` folds stay whole and apply through the planner at flush.
-  Snapshots (v2) carry them bitwise (``pending_ops``/``pending_order``).
+  steps batch with other streams' heads (``DenseDelta`` sketches through
+  the planner's shared ``op_low_rank_factors`` range-finder — serve and
+  planner can never drift) — while geometry-changing appends and ``Decay``
+  folds stay whole and apply through the planner at flush.  ``Sparse``
+  events stay whole too (snapshots carry their COO leaves bitwise) but
+  expand into their rank-1 pairs at the head of a flush round — the
+  deterministic sketch makes pre/post-snapshot expansion bitwise identical
+  — so sparse events batch into rounds like every other pair.
+  Snapshots (v3) carry ops bitwise (``pending_ops``/``pending_order``).
 * Cold-start control: every flush records its ``(kind, geometry)`` in the
   warmed set; snapshots persist it and ``restore`` eagerly ``api.warmup``s
   each entry, so the first post-failover flush never compiles under
@@ -88,6 +94,7 @@ from repro.dist.merge import merge_tree
 from repro.train import checkpoint as _checkpoint
 from repro.updates import ops as _ops
 from repro.updates import planner as _planner
+from repro.updates import sketch as _sketch
 
 __all__ = [
     "SNAPSHOT_VERSION",
@@ -96,7 +103,7 @@ __all__ = [
     "SvdServiceStats",
 ]
 
-SNAPSHOT_VERSION = 2
+SNAPSHOT_VERSION = 3
 _SNAPSHOT_FORMAT = "repro.serve.ServiceSnapshot"
 
 # UpdatePolicy fields a snapshot records verbatim. ``mesh`` is deliberately
@@ -109,13 +116,19 @@ _POLICY_SPEC_FIELDS = (
     "deflate_rtol",
     "precision",
     "storage_dtype",
+    "sketch_oversample",
+    "sketch_power_iters",
     "batch_axis",
     "truncate_to",
 )
 
 # policy fields added after SNAPSHOT_VERSION was minted: old snapshots lack
 # them, so restore falls back to each field's UpdatePolicy default
-_POLICY_SPEC_DEFAULTS = {"storage_dtype": None}
+_POLICY_SPEC_DEFAULTS = {
+    "storage_dtype": None,
+    "sketch_oversample": 8,
+    "sketch_power_iters": 1,
+}
 
 
 def _policy_spec(policy: UpdatePolicy) -> dict:
@@ -182,7 +195,13 @@ class ServiceSnapshot:
     upgrades older ones in place.  v1 -> v2 added ``pending_ops`` /
     ``pending_order`` / ``warmed``; v1 snapshots (all-pair FIFOs, nothing
     warmed) load as v2 with the empty defaults — their leaf list is
-    unchanged, so restore stays bitwise.
+    unchanged, so restore stays bitwise.  v2 -> v3 added ``Sparse`` op
+    events (their COO leaves ride ``pending_ops`` bitwise), the sketch
+    policy knobs in ``policy_spec``, and ``sketch_*`` warmed kinds — no
+    structural change, so v1/v2 snapshots load as v3 unchanged (the sketch
+    knobs fall back to their ``UpdatePolicy`` defaults); the bump exists so
+    pre-sparse builds refuse v3 snapshots cleanly instead of failing inside
+    ``skeleton_from_spec``.
     """
 
     states: tuple          # tuple[SvdState, ...] — diagnostics-free, per stream
@@ -391,9 +410,13 @@ class SvdService:
 
     def _record_op_warm(self, state: SvdState, op) -> None:
         """Record every single-update geometry an op's schedule dispatches
-        (appends shift it mid-schedule), so restore warms those too."""
+        (appends shift it mid-schedule) plus every sketch site the lowering
+        runs through, so restore warms those too."""
         m, n = state.m, state.n
-        for step in _planner.lower(op, state):
+        for sm, sn, sk, snnz in _planner._sketch_sites(op.spec(), m, n)[0]:
+            kind = "sketch_dense" if snnz is None else "sketch_sparse"
+            self._record_warm(kind, snnz, sm, sn, sk, state.dtype)
+        for step in _planner.lower(op, state, self.policy):
             if step[0] == "pad_rows":
                 m += step[1]
             elif step[0] == "pad_cols":
@@ -507,8 +530,11 @@ class SvdService:
         into ``rank`` pairs, ``Compose`` decomposes child-by-child.
         Geometry-changing ops (appends) and ``Decay`` stay whole as op
         events: appends re-plan the stream's geometry at flush; decay folds
-        into the singular values without an engine dispatch.  FIFO order
-        with previously queued pairs is preserved either way.
+        into the singular values without an engine dispatch.  ``Sparse``
+        deltas also stay whole — snapshots then carry their O(nnz) COO
+        leaves bitwise instead of sketched pairs — and expand into their
+        ``rank`` pairs only when they reach the head of a flush round.
+        FIFO order with previously queued pairs is preserved either way.
         """
         with self._lock:
             if stream_id not in self._streams:
@@ -546,11 +572,27 @@ class SvdService:
                     f"DenseDelta shape {delta.shape} does not match stream "
                     f"{sid!r} geometry ({m}, {n})"
                 )
-            du, ds, dvt = jnp.linalg.svd(delta, full_matrices=False)
+            # the planner's shared range-finder (updates.sketch) — the ONE
+            # low-rank extraction path; serve can never drift from plan
+            self._record_warm("sketch_dense", None, m, n, op.rank, delta.dtype)
+            du, ds, dv = _planner.op_low_rank_factors(op, m, n, self.policy)
             return (
-                [("pair", du[:, i] * ds[i], dvt[i]) for i in range(op.rank)],
+                [("pair", du[:, i] * ds[i], dv[:, i]) for i in range(op.rank)],
                 (m, n),
             )
+        if isinstance(op, _ops.Sparse):
+            rows, cols = jnp.asarray(op.rows), jnp.asarray(op.cols)
+            vals = jnp.asarray(op.vals)
+            if not (rows.shape == cols.shape == vals.shape and vals.ndim == 1):
+                raise ValueError(
+                    f"Sparse coordinates must be matching 1-D (nnz,) arrays; "
+                    f"got {rows.shape}/{cols.shape}/{vals.shape} for stream "
+                    f"{sid!r}"
+                )
+            # queued WHOLE so snapshots carry the COO leaves bitwise (v3);
+            # _flush_round expands the head into its rank pairs — the
+            # deterministic sketch makes pre/post-restore expansion identical
+            return [("op", op)], (m, n)
         if isinstance(op, (_ops.AppendRows, _ops.AppendCols)):
             width_ok = (
                 (op.rows.shape[1] == n if op.rows is not None else op.v.shape[0] == n)
@@ -564,6 +606,29 @@ class SvdService:
                 )
             return [("op", op)], op.out_shape(m, n)
         return [("op", op)], op.out_shape(m, n)   # Decay and future scalars
+
+    def _expand_sparse_head(self, sid: str) -> None:
+        """Lower the ``Sparse`` op at the head of ``sid``'s queue into its
+        ``rank`` pairs, in place — O((m+n)·rank + nnz) through the planner's
+        shared range-finder, never densifying.  Factors are computed BEFORE
+        the pop so a raising sketch leaves the event queued (the flush
+        failure-atomicity contract)."""
+        op = self._pending[sid][0][1]
+        st = self._streams[sid]
+        self._record_warm(
+            "sketch_sparse", op.nnz, st.m, st.n, op.rank,
+            jnp.asarray(op.vals).dtype,
+        )
+        u, s, v = _planner.op_low_rank_factors(op, st.m, st.n, self.policy)
+        self._pending[sid].popleft()
+        self._pending[sid].extendleft(
+            ("pair", u[:, i] * s[i], v[:, i])
+            for i in range(op.rank - 1, -1, -1)
+        )
+        # one structured event became ``rank`` pair events; keep the
+        # enqueued-vs-applied ledger balanced
+        self.stats.enqueued += op.rank - 1
+        self.stats.ops_applied += 1
 
     def _maybe_autoflush(self) -> None:
         ready = sum(1 for q in self._pending.values() if q)
@@ -630,6 +695,13 @@ class SvdService:
         round_ids = []
         for sid in live_ids:
             head = self._pending[sid][0]
+            if head[0] == "op" and isinstance(head[1], _ops.Sparse):
+                # expand a Sparse head into its rank pairs IN PLACE so sparse
+                # events batch into pair rounds like everything else; the
+                # deterministic sketch makes this bitwise-identical whether
+                # it runs before or after a snapshot/restore cycle
+                self._expand_sparse_head(sid)
+                head = self._pending[sid][0]
             if head[0] == "op":
                 # apply BEFORE popping: a raising engine call leaves the
                 # event queued, mirroring the pair path's peek-don't-pop
@@ -840,6 +912,18 @@ class SvdService:
         # shard_map route keys on the live mesh, which warmup cannot AOT).
         if engine is None and policy.mesh is None:
             for kind, batch, m, n, r, dtype_name in svc._warmed:
+                if kind in ("sketch_dense", "sketch_sparse"):
+                    # sketch executables warm by running on zeros (the jit
+                    # call cache, not the engine plan cache); ``batch`` slot
+                    # carries nnz for the sparse kind
+                    _sketch.warmup_sketch(
+                        m=m, n=n, k=r,
+                        oversample=policy.sketch_oversample,
+                        power_iters=policy.sketch_power_iters,
+                        nnz=batch if kind == "sketch_sparse" else None,
+                        dtype=jnp.dtype(dtype_name),
+                    )
+                    continue
                 _api_warmup(
                     svc.policy, m=m, n=n,
                     batch=batch if kind == "trunc_batch" else None,

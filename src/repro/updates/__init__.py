@@ -2,9 +2,12 @@
 engine (DESIGN.md §10).
 
 Declarative ops (``RankK``, ``AppendRows``/``AppendCols``, ``DenseDelta``,
-``Decay``, ``Compose``) with exact dense reference semantics, and a planner
-that compiles any of them into a minimal schedule of plan-cached
-``repro.api`` rank-1 dispatches:
+``Sparse``, ``Decay``, ``Compose``) with exact dense reference semantics,
+and a planner that compiles any of them into a minimal schedule of
+plan-cached ``repro.api`` rank-1 dispatches.  All low-rank extraction runs
+through the randomized range-finder in ``repro.updates.sketch`` (no dense
+SVD on any lowering path); ``Sparse`` deltas scale with nnz via the
+``kernels.sparse_proj`` projection kernel:
 
     from repro import api
     from repro.updates import RankK, Decay, Compose
@@ -24,6 +27,7 @@ from repro.updates.ops import (
     Decay,
     DenseDelta,
     RankK,
+    Sparse,
     UpdateOp,
     skeleton_from_spec,
     spec_from_json,
@@ -33,9 +37,17 @@ from repro.updates.planner import (
     apply,
     apply_many,
     lower,
+    op_low_rank_factors,
     schedule_cache_clear,
     schedule_cache_info,
     warmup_plan,
+)
+from repro.updates.sketch import (
+    factored_svd,
+    range_finder,
+    sketch_svd,
+    sparse_sketch_svd,
+    warmup_sketch,
 )
 
 __all__ = [
@@ -45,13 +57,19 @@ __all__ = [
     "Decay",
     "DenseDelta",
     "RankK",
+    "Sparse",
     "UpdateOp",
     "apply",
     "apply_many",
+    "factored_svd",
     "lower",
+    "op_low_rank_factors",
+    "range_finder",
     "schedule_cache_clear",
     "schedule_cache_info",
     "skeleton_from_spec",
+    "sketch_svd",
+    "sparse_sketch_svd",
     "spec_from_json",
     "spec_to_json",
     "warmup_plan",

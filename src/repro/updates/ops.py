@@ -16,7 +16,10 @@ Ops:
   ``(p, n)`` / columns ``(m, p)``; ``from_svd`` carries a pre-factored block
   (the form ``dist.merge`` feeds) so lowering skips the dense SVD.
 * ``DenseDelta(delta, rank)`` — ``A + delta`` lowered through a top-``rank``
-  SVD sketch of ``delta`` (exact when ``rank >= rank(delta)``).
+  randomized sketch of ``delta`` (exact when ``rank >= rank(delta)``).
+* ``Sparse(rows, cols, vals, rank)`` — ``A + S`` for a static-nnz COO delta;
+  the lowering cost scales with nnz (``updates.sketch`` +
+  ``kernels.sparse_proj``), never densifying m x n.
 * ``Decay(lam)`` — ``lam * A``; folds into the singular values for free
   (zero engine dispatches).
 * ``Compose(ops)`` — apply a tuple of ops left-to-right.
@@ -58,6 +61,7 @@ __all__ = [
     "Decay",
     "DenseDelta",
     "RankK",
+    "Sparse",
     "UpdateOp",
     "skeleton_from_spec",
     "spec_from_json",
@@ -233,12 +237,14 @@ class AppendCols(UpdateOp):
 )
 @dataclasses.dataclass(frozen=True)
 class DenseDelta(UpdateOp):
-    """``A + delta`` lowered through a top-``rank`` SVD sketch of ``delta``.
+    """``A + delta`` lowered through a top-``rank`` randomized sketch of
+    ``delta`` (``updates.sketch.sketch_svd`` — O(m·n·rank), no LAPACK SVD).
 
-    Exact when ``rank >= rank(delta)``; otherwise the lowering absorbs the
-    best rank-``rank`` approximation of the delta (the reference semantics
-    ``apply_dense`` stays the exact dense sum — parity tests should feed
-    deltas within the sketch budget).
+    Exact when ``rank >= rank(delta)``; otherwise the lowering absorbs a
+    near-best rank-``rank`` approximation of the delta (the reference
+    semantics ``apply_dense`` stays the exact dense sum — parity tests
+    should feed deltas within the sketch budget; the policy's
+    ``sketch_oversample`` / ``sketch_power_iters`` knobs tune the tail).
 
     >>> import numpy as np
     >>> DenseDelta(np.ones((3, 4)), rank=1).spec()
@@ -257,6 +263,73 @@ class DenseDelta(UpdateOp):
 
     def spec(self) -> tuple:
         return ("dense_delta", self.rank)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["rows", "cols", "vals"],
+    meta_fields=["rank"],
+)
+@dataclasses.dataclass(frozen=True)
+class Sparse(UpdateOp):
+    """``A + S`` for a static-nnz COO sparse delta ``S[rows[e], cols[e]] +=
+    vals[e]`` — the representation-learning workload (each event touches a
+    few rows of an embedding matrix; Deng et al., arXiv:2401.09703).
+
+    ``rows``/``cols``/``vals``: (…, nnz) int/int/float with a leading batch
+    axis iff one sparse delta per stacked problem.  ``nnz`` is static (it
+    keys the schedule cache); streams with varying event counts pad to a
+    bucket size with zero-valued entries at coordinate (0, 0) — exact
+    no-ops.  Duplicate coordinates accumulate.  ``rank`` budgets the
+    lowering (``rank >= rank(S)`` is exact; nnz entries touching ``r`` rows
+    or ``c`` columns have ``rank(S) <= min(r, c) <= nnz``).
+
+    The planner lowers through ``updates.sketch.sparse_sketch_svd`` +
+    ``kernels.sparse_proj`` at O((m+n)·k² + nnz·k) — never densifying m·n.
+
+    >>> import numpy as np
+    >>> op = Sparse(np.array([0, 2]), np.array([1, 0]), np.array([5.0, -1.0]))
+    >>> op.nnz, op.spec()
+    (2, ('sparse', 2, 1))
+    >>> np.asarray(op.apply_dense(np.zeros((3, 2))))
+    array([[ 0.,  5.],
+           [ 0.,  0.],
+           [-1.,  0.]])
+    """
+
+    rows: jax.Array
+    cols: jax.Array
+    vals: jax.Array
+    rank: int = 1
+
+    def __post_init__(self):
+        if self.rank < 1:
+            raise ValueError(f"sketch rank must be >= 1; got {self.rank}")
+
+    @property
+    def nnz(self) -> int:
+        """Static entry count (padding entries included)."""
+        return self.vals.shape[-1]
+
+    def apply_dense(self, a_mat):
+        a_mat = jnp.asarray(a_mat)
+        rows = jnp.asarray(self.rows)
+        cols = jnp.asarray(self.cols)
+        vals = jnp.asarray(self.vals)
+
+        def one(base, r, c, v):
+            return base.at[r, c].add(v)
+
+        if vals.ndim == 1:
+            if a_mat.ndim == 2:
+                return one(a_mat, rows, cols, vals)
+            return jax.vmap(lambda base: one(base, rows, cols, vals))(a_mat)
+        if a_mat.ndim == 2:
+            a_mat = jnp.broadcast_to(a_mat, vals.shape[:-1] + a_mat.shape)
+        return jax.vmap(one)(a_mat, rows, cols, vals)
+
+    def spec(self) -> tuple:
+        return ("sparse", self.nnz, self.rank)
 
 
 @partial(jax.tree_util.register_dataclass, data_fields=["lam"], meta_fields=[])
@@ -350,6 +423,8 @@ def skeleton_from_spec(spec: tuple) -> UpdateOp:
         return cls.from_svd(0.0, 0.0, 0.0)
     if kind == "dense_delta":
         return DenseDelta(delta=0.0, rank=spec[1])
+    if kind == "sparse":
+        return Sparse(rows=0.0, cols=0.0, vals=0.0, rank=spec[2])
     if kind == "decay":
         return Decay(lam=0.0)
     if kind == "compose":

@@ -4,14 +4,26 @@
 minimal *schedule* of existing ``repro.api`` calls and executes it:
 
 * ``RankK``      -> k plan-cached rank-1 ``api.update`` dispatches;
-* ``DenseDelta`` -> top-``rank`` SVD sketch of the delta, then rank-1 steps;
+* ``DenseDelta`` -> top-``rank`` randomized sketch of the delta
+  (``updates.sketch.sketch_svd``, O(m·n·rank) — no LAPACK SVD anywhere),
+  then rank-1 steps;
+* ``Sparse``     -> top-``rank`` sketch through the COO projection kernel
+  (``sketch.sparse_sketch_svd`` + ``kernels.sparse_proj``) at
+  O((m+n)·rank² + nnz·rank) — the delta is never densified;
 * ``AppendRows`` / ``AppendCols`` -> zero-pad the state's geometry, then one
-  rank-1 step per component of the appended block (pre-factored blocks skip
-  the dense SVD);
+  rank-1 step per component of the appended block (dense blocks sketch at
+  their full block rank — exact; pre-factored blocks bind directly);
 * ``Decay``      -> folded into the singular values for FREE — zero engine
   dispatches;
 * ``Compose``    -> children's schedules concatenated in order, geometry
   threaded through appends.
+
+All low-rank extraction funnels through ``op_low_rank_factors`` — the ONE
+sketch entry point (``serve.svd_service`` lowers its op events through the
+same helper, so planner and serve can never drift).  The policy's
+``sketch_oversample`` / ``sketch_power_iters`` knobs fold into the schedule
+cache key, and ``warmup_plan`` AOT-warms the jitted sketch executables
+alongside the engine geometries — no sketch compile on the hot path.
 
 ``apply_many(states, ops, policy)`` executes many (state, op) pairs in
 lockstep waves: at each wave, every op's next rank-1 step is batched with all
@@ -42,17 +54,26 @@ from repro.updates.ops import (
     Decay,
     DenseDelta,
     RankK,
+    Sparse,
     UpdateOp,
 )
+from repro.updates.sketch import sketch_svd, sparse_sketch_svd, warmup_sketch
 
 __all__ = [
     "apply",
     "apply_many",
     "lower",
+    "op_low_rank_factors",
     "schedule_cache_clear",
     "schedule_cache_info",
     "warmup_plan",
 ]
+
+_DEFAULT_SKETCH = UpdatePolicy().sketch_params
+
+
+def _sketch_params(policy: UpdatePolicy | None) -> tuple[int, int]:
+    return _DEFAULT_SKETCH if policy is None else policy.sketch_params
 
 
 class ScheduleCacheInfo(NamedTuple):
@@ -112,6 +133,8 @@ def _build(spec: tuple, m: int, n: int, rank: int, is_full: bool, path: tuple):
         return _component_steps(path, kind, spec[1]), (m, n)
     if kind == "dense_delta":
         return _component_steps(path, kind, spec[1]), (m, n)
+    if kind == "sparse":
+        return _component_steps(path, kind, spec[2]), (m, n)
     if kind == "decay":
         return [("decay", path)], (m, n)
     if kind in ("append_rows", "append_cols"):
@@ -134,8 +157,11 @@ def _build(spec: tuple, m: int, n: int, rank: int, is_full: bool, path: tuple):
     raise ValueError(f"unknown op spec {spec!r}")
 
 
-def lower(op: UpdateOp, state) -> tuple:
+def lower(op: UpdateOp, state, policy: UpdatePolicy | None = None) -> tuple:
     """The cached schedule for ``op`` applied to ``state``'s geometry.
+
+    The cache key folds the policy's ``sketch_params`` — sketch-knob changes
+    can never serve a schedule planned under different accuracy settings.
 
     >>> import numpy as np
     >>> from repro.api import SvdState
@@ -147,7 +173,7 @@ def lower(op: UpdateOp, state) -> tuple:
     """
     global _hits, _misses
     st = as_state(state)
-    key = (op.spec(), st.m, st.n, st.rank, st.is_full)
+    key = (op.spec(), st.m, st.n, st.rank, st.is_full, _sketch_params(policy))
     with _lock:
         plan = _cache.get(key)
         if plan is not None:
@@ -172,22 +198,48 @@ def _resolve(op: UpdateOp, path: tuple) -> UpdateOp:
     return op
 
 
-def _block_factors(op, ctx: dict, path: tuple):
-    """(u, s, v) factors of an op's low-rank block, SVD'd once per apply."""
+def op_low_rank_factors(op, m: int, n: int,
+                        policy: UpdatePolicy | None = None):
+    """(u, s, v) rank-1 components of an op's low-rank block at geometry
+    (m, n) — the ONE sketch entry point for planner AND serve (no dense
+    ``jnp.linalg.svd`` anywhere on this path).
+
+    ``DenseDelta`` sketches at its rank budget; ``Sparse`` sketches through
+    the COO projection kernel; dense append blocks sketch at their full
+    block rank (``l >= rank(block)`` — exact); pre-factored append blocks
+    bind as carried.  Everything runs inside the jitted sketch executables,
+    so ``warmup_plan`` / serve restore AOT-cover it and no per-op host work
+    remains.
+    """
+    oversample, power_iters = _sketch_params(policy)
+    if isinstance(op, DenseDelta):
+        return sketch_svd(jnp.asarray(op.delta), op.rank,
+                          oversample=oversample, power_iters=power_iters)
+    if isinstance(op, Sparse):
+        # single-pass two-sided sketch: no power_iters knob (sketch module doc)
+        return sparse_sketch_svd(op.rows, op.cols, op.vals, m=m, n=n,
+                                 k=op.rank, oversample=oversample)
+    if isinstance(op, AppendRows) and op.rows is not None:
+        return sketch_svd(jnp.asarray(op.rows), op.block_rank,
+                          oversample=oversample, power_iters=power_iters)
+    if isinstance(op, AppendCols) and op.cols is not None:
+        return sketch_svd(jnp.asarray(op.cols), op.block_rank,
+                          oversample=oversample, power_iters=power_iters)
+    if isinstance(op, (AppendRows, AppendCols)):  # pre-factored block
+        return (jnp.asarray(op.u), jnp.asarray(op.s), jnp.asarray(op.v))
+    raise TypeError(f"{type(op).__name__} has no low-rank block to extract")
+
+
+def _block_factors(op, ctx: dict, path: tuple, cur: SvdState,
+                   policy: UpdatePolicy | None):
+    """Per-apply memo over ``op_low_rank_factors`` (one sketch per block).
+
+    ``Sparse`` needs the CURRENT geometry (appends earlier in a Compose may
+    have grown it); appends use their own block shape, deltas their own.
+    """
     key = (path, "factors")
     if key not in ctx:
-        if isinstance(op, DenseDelta):
-            u, s, vt = jnp.linalg.svd(jnp.asarray(op.delta), full_matrices=False)
-            r = op.rank
-            ctx[key] = (u[..., :, :r], s[..., :r], jnp.swapaxes(vt, -1, -2)[..., :, :r])
-        elif isinstance(op, AppendRows) and op.rows is not None:
-            u, s, vt = jnp.linalg.svd(jnp.asarray(op.rows), full_matrices=False)
-            ctx[key] = (u, s, jnp.swapaxes(vt, -1, -2))
-        elif isinstance(op, AppendCols) and op.cols is not None:
-            u, s, vt = jnp.linalg.svd(jnp.asarray(op.cols), full_matrices=False)
-            ctx[key] = (u, s, jnp.swapaxes(vt, -1, -2))
-        else:  # pre-factored append block
-            ctx[key] = (jnp.asarray(op.u), jnp.asarray(op.s), jnp.asarray(op.v))
+        ctx[key] = op_low_rank_factors(op, cur.m, cur.n, policy)
     return ctx[key]
 
 
@@ -203,16 +255,17 @@ def _col(x, i: int):
     return lax.index_in_dim(x, i, axis=-1, keepdims=False)
 
 
-def _bind(cur: SvdState, op: UpdateOp, step: tuple, ctx: dict):
+def _bind(cur: SvdState, op: UpdateOp, step: tuple, ctx: dict,
+          policy: UpdatePolicy | None = None):
     """The (a, b) pair of one rank-1 step, shaped for the CURRENT geometry."""
     _, path, kind, i = step
     src = _resolve(op, path)
     if kind == "rank_k":
         return _col(jnp.asarray(src.u), i), _col(jnp.asarray(src.v), i)
-    if kind == "dense_delta":
-        u, s, v = _block_factors(src, ctx, path)
+    if kind in ("dense_delta", "sparse"):
+        u, s, v = _block_factors(src, ctx, path, cur, policy)
         return _col(u, i) * lax.index_in_dim(s, i, axis=-1), _col(v, i)
-    u, s, v = _block_factors(src, ctx, path)
+    u, s, v = _block_factors(src, ctx, path, cur, policy)
     comp = _col(u, i) * lax.index_in_dim(s, i, axis=-1)
     if kind == "append_rows":
         # the block's rows live at the bottom of the (already padded) state
@@ -224,17 +277,18 @@ def _bind(cur: SvdState, op: UpdateOp, step: tuple, ctx: dict):
     return comp, b
 
 
-def _bind_block(cur: SvdState, op: UpdateOp, step: tuple, ctx: dict):
+def _bind_block(cur: SvdState, op: UpdateOp, step: tuple, ctx: dict,
+                policy: UpdatePolicy | None = None):
     """The full (k, m)/(k, n) pair blocks of one scanned rank-k step."""
     _, path, kind, _count = step
     src = _resolve(op, path)
     if kind == "rank_k":
         return (jnp.swapaxes(jnp.asarray(src.u), -1, -2),
                 jnp.swapaxes(jnp.asarray(src.v), -1, -2))
-    u, s, v = _block_factors(src, ctx, path)
+    u, s, v = _block_factors(src, ctx, path, cur, policy)
     comp = jnp.swapaxes(u * s[..., None, :], -1, -2)      # (..., k, rows)
     vt = jnp.swapaxes(v, -1, -2)                          # (..., k, cols)
-    if kind == "dense_delta":
+    if kind in ("dense_delta", "sparse"):
         return comp, vt
     if kind == "append_rows":
         z = jnp.zeros(comp.shape[:-1] + (cur.m - src.p,), comp.dtype)
@@ -284,14 +338,14 @@ def apply(state, op: UpdateOp, policy: UpdatePolicy | None = None) -> SvdState:
     True
     """
     st = as_state(state)
-    plan = lower(op, st)
+    plan = lower(op, st, policy)
     ctx: dict = {}
     for step in plan:
         if step[0] == "rank1":
-            a, b = _bind(st, op, step, ctx)
+            a, b = _bind(st, op, step, ctx, policy)
             st = update(st, a, b, policy)
         elif step[0] == "rank1_scan":
-            va, vb = _bind_block(st, op, step, ctx)
+            va, vb = _bind_block(st, op, step, ctx, policy)
             st = update_rank_k(st, va, vb, policy)
         else:
             st = _exec_free(st, op, step)
@@ -335,7 +389,7 @@ def apply_many(
                 f"apply_many takes unbatched states; state {i} is stacked "
                 f"(u {st.u.shape}) — call apply() on it directly"
             )
-    plans = [lower(op, st) for op, st in zip(ops, sts)]
+    plans = [lower(op, st, policy) for op, st in zip(ops, sts)]
 
     out: list[SvdState | None] = [None] * len(sts)
     groups: dict[tuple, list[int]] = {}
@@ -362,7 +416,7 @@ def apply_many(
                 # _bind only reads the (shared) geometry off ``cur``, so the
                 # stacked state binds each member's unbatched vectors fine
                 pairs = [
-                    _bind(cur, op, step, ctx)
+                    _bind(cur, op, step, ctx, policy)
                     for op, ctx in zip(group_ops, ctxs)
                 ]
                 a = jnp.stack([p[0] for p in pairs])
@@ -370,7 +424,7 @@ def apply_many(
                 cur = update(cur, a, b, policy)
             elif step[0] == "rank1_scan":
                 blocks = [
-                    _bind_block(cur, op, step, ctx)
+                    _bind_block(cur, op, step, ctx, policy)
                     for op, ctx in zip(group_ops, ctxs)
                 ]
                 va = jnp.stack([p[0] for p in blocks])
@@ -391,6 +445,29 @@ def apply_many(
     return tuple(out)
 
 
+def _sketch_sites(spec: tuple, m: int, n: int):
+    """Sketch geometries ``(m, n, k, nnz-or-None)`` the schedule will run,
+    threading geometry through appends exactly like ``_build``."""
+    kind = spec[0]
+    if kind == "dense_delta":
+        return [(m, n, spec[1], None)], (m, n)
+    if kind == "sparse":
+        return [(m, n, spec[2], spec[1])], (m, n)
+    if kind == "append_rows":
+        sites = [(spec[1], n, spec[2], None)] if spec[3] == "dense" else []
+        return sites, (m + spec[1], n)
+    if kind == "append_cols":
+        sites = [(m, spec[1], spec[2], None)] if spec[3] == "dense" else []
+        return sites, (m, n + spec[1])
+    if kind == "compose":
+        sites: list = []
+        for child in spec[1]:
+            sub, (m, n) = _sketch_sites(child, m, n)
+            sites.extend(sub)
+        return sites, (m, n)
+    return [], (m, n)  # rank_k / decay: no extraction
+
+
 def warmup_plan(
     policy: UpdatePolicy,
     op: UpdateOp,
@@ -402,12 +479,20 @@ def warmup_plan(
     dtype=jnp.float64,
 ):
     """AOT-warm every engine geometry ``op``'s schedule will dispatch
-    (appends shift the geometry mid-schedule; each distinct one is warmed).
+    (appends shift the geometry mid-schedule; each distinct one is warmed),
+    plus every jitted sketch executable the schedule's extractions run
+    (dense-delta / sparse / dense append blocks, at the policy's sketch
+    knobs) — no compile of any kind on the hot path.
 
     Returns the list of ``(m, n)`` geometries warmed.
     """
     r = rank if rank is not None else m
     spec = op.spec()
+    oversample, power_iters = _sketch_params(policy)
+    for sm, sn, sk, snnz in _sketch_sites(spec, m, n)[0]:
+        warmup_sketch(m=sm, n=sn, k=sk, nnz=snnz, batch=batch,
+                      oversample=oversample, power_iters=power_iters,
+                      dtype=dtype)
     steps, _ = _build(spec, m, n, r, rank is None, ())
     geoms: list[tuple[int, int]] = []
     entries: list[tuple[int, int, int | None]] = []

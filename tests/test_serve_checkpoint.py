@@ -251,7 +251,7 @@ def test_snapshot_v2_roundtrips_structured_events_bitwise(tmp_path):
     ref = build()
     svc = build()
     snap = svc.snapshot()
-    assert snap.version == SNAPSHOT_VERSION == 2
+    assert snap.version == SNAPSHOT_VERSION == 3
     assert "o" in "".join(snap.pending_order)      # structured events present
     svc.save(tmp_path, step=1)
     _, restored = SvdService.restore(tmp_path)
@@ -303,6 +303,75 @@ def test_snapshot_v1_aux_skeleton_compat():
         )
     )
     assert svc.pending("a") == 2 and svc.pending("b") == 0
+
+
+def test_snapshot_v3_sparse_pending_bitwise(tmp_path):
+    """A queued ``Sparse`` op rides the snapshot WHOLE — its COO leaves sit
+    bitwise in ``pending_ops`` — and the post-restore drain matches the
+    uninterrupted service bitwise (the trace-time sketch constants make the
+    flush-time expansion deterministic).  ISSUE 7 acceptance."""
+    from repro.updates import Sparse
+
+    m, n, r, nnz = 8, 10, 3, 7
+    coo_rng = np.random.default_rng(31)
+    rows = coo_rng.integers(0, 2, nnz).astype(np.int32)   # rank(S) <= 2
+    cols = coo_rng.integers(0, n, nnz).astype(np.int32)
+    vals = coo_rng.normal(size=nnz)
+
+    def build():
+        rng = np.random.default_rng(32)
+        svc = SvdService(max_batch=16)
+        svc.register("x", _fresh(m, n, r, np.random.default_rng(30)))
+        svc.enqueue("x", jnp.asarray(rng.normal(size=m)),
+                    jnp.asarray(rng.normal(size=n)))
+        svc.enqueue_op("x", Sparse(rows, cols, vals, rank=2))
+        svc.enqueue("x", jnp.asarray(rng.normal(size=m)),
+                    jnp.asarray(rng.normal(size=n)))
+        return svc
+
+    ref = build()
+    svc = build()
+    snap = svc.snapshot()
+    assert snap.version == SNAPSHOT_VERSION == 3
+    assert "o" in "".join(snap.pending_order)
+    # the COO value vector is carried bitwise as a pending_ops leaf
+    assert any(
+        np.asarray(leaf).shape == (nnz,)
+        and np.array_equal(np.asarray(leaf), vals)
+        for leaf in jax.tree.leaves(snap.pending_ops)
+    )
+    svc.save(tmp_path, step=1)
+    _, restored = SvdService.restore(tmp_path)
+    assert restored.pending("x") == ref.pending("x")
+
+    ref.drain()
+    restored.drain()
+    _exact_states(ref, restored, ["x"])
+    # the Sparse op expanded into rank pairs at the flush head on both sides
+    assert restored.stats.ops_applied == ref.stats.ops_applied == 1
+    assert restored.stats.applied == ref.stats.applied
+
+
+def test_snapshot_v2_policy_spec_back_compat():
+    """A v2-era policy spec (no sketch fields) restores with the
+    ``UpdatePolicy`` defaults — pre-sketch checkpoints keep loading."""
+    spec_v2 = {"method": "direct", "fmm_p": 20, "sign_fix": True,
+               "deflate_rtol": None, "precision": None, "storage_dtype": None,
+               "batch_axis": "data", "truncate_to": None, "had_mesh": False}
+    svc = SvdService.from_snapshot(
+        ServiceSnapshot(
+            states=(SvdState(*_fresh(6, 7, 2, np.random.default_rng(0))),),
+            pending_a=(np.zeros((0, 6)),),
+            pending_b=(np.zeros((0, 7)),),
+            pending_ops=((),),
+            stream_ids=("a",),
+            policy_spec=tuple(spec_v2.items()),
+            stats=(("enqueued", 0), ("applied", 0)),
+            pending_order=("",),
+        )
+    )
+    assert svc.policy.sketch_oversample == 8
+    assert svc.policy.sketch_power_iters == 1
 
 
 _RESTORE_WARM_SCRIPT = textwrap.dedent("""
