@@ -17,8 +17,13 @@ auto-flushing batched rounds) through both modes and reports two numbers:
   pay, so expect parity here; the sync-mode device wait it would expose
   only dominates on accelerator backends.
 
+A third experiment reports the latency SLO view: Poisson open-loop arrivals
+at LOAD x the async sustained rate through ``common.open_loop`` (the same
+harness bench_fleet uses), with per-event enqueue-to-visible p50/p99.
+
 CSV rows (benchmarks/run.py style):
   bench_serve/<mode>/B=<streams>,us,updates_per_s=... max_enqueue_us=...
+  bench_serve/latency/<mode>,p99_us,p50_us=... rate_hz=...
 
 and a machine-readable summary at benchmarks/BENCH_serve.json.
 """
@@ -33,7 +38,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, open_loop, poisson_arrivals
 from repro.api import SvdState, UpdatePolicy
 from repro.serve import SvdService
 
@@ -43,6 +48,9 @@ M, N, RANK = 512, 768, 16
 STREAMS = 16
 ROUNDS = 8             # events per stream
 REPEAT = 5
+
+OPEN_EVENTS = 128      # open-loop latency experiment length
+LOAD = 0.5             # offered rate as a fraction of async sustained rate
 
 OUT = Path(__file__).parent / "BENCH_serve.json"
 
@@ -93,6 +101,17 @@ def _one_pass(max_in_flight: int, traffic) -> tuple[float, float, SvdService]:
     return time.perf_counter() - t0, stall, svc
 
 
+def _latency(max_in_flight: int, rate_hz: float, *, seed: int) -> dict:
+    """Enqueue-to-visible p50/p99 under Poisson open-loop load at rate_hz."""
+    svc = _service(max_in_flight)
+    traffic = _traffic()[:OPEN_EVENTS]
+    arrivals = poisson_arrivals(rate_hz, OPEN_EVENTS, seed=seed)
+    return open_loop(
+        lambda ev: svc.enqueue(*ev), svc.take_visible, svc.drain,
+        traffic, arrivals,
+    )
+
+
 def run() -> dict:
     traffic = _traffic()
     _one_pass(0, traffic)      # warm the shared plan cache (compile round)
@@ -125,6 +144,16 @@ def run() -> dict:
             t * 1e6,
             f"updates_per_s={ups:.0f} max_enqueue_us={stall * 1e6:.0f}",
         )
+
+    # open-loop latency columns (shared harness with bench_fleet)
+    rate = LOAD * results["async"]["updates_per_s"]
+    for mode, mif in (("sync", 0), ("async", 2)):
+        _latency(mif, rate, seed=2)                 # warm the shapes
+        lat = _latency(mif, rate, seed=3)           # measured
+        results[mode]["latency"] = lat
+        emit(f"bench_serve/latency/{mode}", lat["p99_us"],
+             f"p50_us={lat['p50_us']:.0f} rate_hz={rate:.0f} "
+             f"sustained_hz={lat['sustained_rate_hz']:.0f}")
 
     throughput_speedup = results["sync"]["seconds"] / results["async"]["seconds"]
     stall_ratio = (results["sync"]["max_enqueue_stall_us"]

@@ -1,8 +1,12 @@
-"""Shared benchmark helpers: timing + CSV emission."""
+"""Shared benchmark helpers: timing, CSV emission, and the open-loop
+latency harness (Poisson arrivals + enqueue-to-visible percentiles) used by
+bench_serve and bench_fleet."""
 
 from __future__ import annotations
 
 import time
+
+import numpy as np
 
 import jax
 
@@ -39,3 +43,82 @@ def time_host_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 
 def emit(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# open-loop latency harness (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def poisson_arrivals(rate_hz: float, count: int, *, seed: int = 0) -> list[float]:
+    """``count`` cumulative arrival times (s) of a Poisson process at
+    ``rate_hz`` — the open-loop load model: arrivals do NOT wait for the
+    system (a closed loop hides queueing delay by self-throttling)."""
+    rng = np.random.default_rng(seed)
+    return list(np.cumsum(rng.exponential(1.0 / rate_hz, size=count)))
+
+
+def percentile(xs, q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]) — no interpolation, so the
+    reported p99 is a latency that actually happened."""
+    if not len(xs):
+        raise ValueError("no samples")
+    ordered = sorted(xs)
+    k = max(0, min(len(ordered) - 1, int(np.ceil(q / 100.0 * len(ordered))) - 1))
+    return ordered[k]
+
+
+def latency_summary(lat_s) -> dict:
+    """p50/p99/mean/max (us) of enqueue-to-visible samples, JSON-ready."""
+    lat_us = [t * 1e6 for t in lat_s]
+    return {
+        "samples": len(lat_us),
+        "p50_us": percentile(lat_us, 50),
+        "p99_us": percentile(lat_us, 99),
+        "mean_us": float(np.mean(lat_us)),
+        "max_us": max(lat_us),
+    }
+
+
+def open_loop(enqueue, tick, drain, events, arrivals) -> dict:
+    """Drive ``events`` at ``arrivals`` (open loop) and measure
+    enqueue-to-visible latency per event.
+
+    ``enqueue(event) -> token``: admit one event, return its visibility
+    token.  ``tick() -> iterable[token]``: one event-loop turn (pump/poll) —
+    called continuously while waiting for the next arrival, so visibility is
+    stamped with sub-millisecond lag.  ``drain()``: stop-admission barrier;
+    after it, remaining tokens must surface through ``tick``.
+
+    Returns ``latency_summary`` plus the offered/sustained rates.  Late
+    arrivals are NOT dropped: if the system falls behind, the queueing
+    delay lands in the tail percentiles — that is the point of open loop.
+    """
+    sent: dict = {}
+    lat: list[float] = []
+
+    def reap():
+        now = time.perf_counter()
+        for tok in tick():
+            lat.append(now - sent.pop(tok))
+
+    t0 = time.perf_counter()
+    for ev, due in zip(events, arrivals):
+        while True:
+            reap()
+            wait = t0 + due - time.perf_counter()
+            if wait <= 0:
+                break
+            time.sleep(min(wait, 5e-4))
+        sent[enqueue(ev)] = time.perf_counter()
+    drain()
+    deadline = time.perf_counter() + 30.0
+    while sent and time.perf_counter() < deadline:
+        reap()
+    wall = time.perf_counter() - t0
+    if sent:
+        raise RuntimeError(f"{len(sent)} tokens never became visible")
+    out = latency_summary(lat)
+    out["offered_rate_hz"] = len(events) / arrivals[-1]
+    out["sustained_rate_hz"] = len(events) / wall
+    return out

@@ -28,6 +28,7 @@ Docstrings on this surface carry runnable ``>>>`` examples, enforced by
 ``pytest --doctest-modules src/repro/api`` in CI.
 """
 
+from repro.api.cache import compilation_cache_entries, enable_compilation_cache
 from repro.api.policy import METHODS, UpdatePolicy
 from repro.api.state import SvdState, as_state
 from repro.api.update import engine_for, update, update_many, update_rank_k, warmup
@@ -39,6 +40,8 @@ __all__ = [
     "apply",
     "apply_many",
     "as_state",
+    "compilation_cache_entries",
+    "enable_compilation_cache",
     "engine_for",
     "update",
     "update_many",

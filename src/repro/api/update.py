@@ -283,12 +283,18 @@ def warmup(
     rank: int | None = None,
     k: int | None = None,
     dtype=jnp.float32,
+    cache_dir=None,
 ):
     """AOT-compile the executable a (policy, geometry) pair will use, before
     traffic arrives (serving cold-start control).  ``rank=None`` warms the
     full route, else the truncated one; ``batch=None`` warms single-instance;
     ``k`` warms the rank-k scan route.  With ``policy.storage_dtype`` set the
     warmed geometry uses the storage dtype (what real casts will carry).
+
+    ``cache_dir`` additionally persists the compiled binaries in the XLA
+    compilation cache (``api.enable_compilation_cache``): a LATER process
+    warming the same (policy, geometry) replays them from disk instead of
+    recompiling — warmup survives restarts.
 
     >>> import jax.numpy as jnp
     >>> from repro import api
@@ -297,6 +303,10 @@ def warmup(
     >>> info.entries >= 1          # the (policy, geometry) plan is cached
     True
     """
+    if cache_dir is not None:
+        from repro.api.cache import enable_compilation_cache
+
+        enable_compilation_cache(cache_dir)
     if policy.storage_dtype is not None:
         dtype = policy.storage_dtype
     eng = engine_from_key(policy, n if rank is None else rank + 1,

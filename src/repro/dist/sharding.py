@@ -95,7 +95,8 @@ def param_pspecs(tree):
 
     Structure-preserving: ``jax.tree.map(NamedSharding(mesh, .), specs)``
     composes with ``jit(in_shardings=...)``; ``train.elastic.reshard`` uses
-    the same specs for any mesh shape the elastic planner picks.
+    the same specs for any mesh shape the elastic planner
+    (``train.elastic.plan_mesh``) picks on restart.
     """
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     specs = []

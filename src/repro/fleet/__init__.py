@@ -1,0 +1,37 @@
+"""repro.fleet — the mesh-sharded SvdService tier (DESIGN.md §13).
+
+Layering (each file one layer, composed top-down):
+
+    placement.py   deterministic hashed stream->shard assignment (pure data)
+    frontend.py    continuous-batching admission over one service
+    shard.py       one SvdService + frontend = one fleet shard
+    fleet.py       SvdFleet: routing, query-time merge, FleetSnapshot v4
+
+The fleet exposes the service surface (register / enqueue / enqueue_op /
+state / flush / drain / merge_streams) over ``num_shards`` independent
+services; shards compose only at query time through ``dist.merge``.
+"""
+
+from repro.fleet.fleet import FLEET_SNAPSHOT_VERSION, FleetSnapshot, SvdFleet
+from repro.fleet.frontend import ContinuousBatcher
+from repro.fleet.placement import (
+    PlacementSpec,
+    assign,
+    plan_devices,
+    shard_loads,
+    shard_of,
+)
+from repro.fleet.shard import FleetShard
+
+__all__ = [
+    "FLEET_SNAPSHOT_VERSION",
+    "ContinuousBatcher",
+    "FleetShard",
+    "FleetSnapshot",
+    "PlacementSpec",
+    "SvdFleet",
+    "assign",
+    "plan_devices",
+    "shard_loads",
+    "shard_of",
+]

@@ -1,0 +1,89 @@
+"""One fleet shard: a ``SvdService`` partition plus its admission frontend.
+
+A shard is the unit of ownership: every stream hashed to shard ``i``
+(``placement.shard_of``) lives in shard ``i``'s service — its state, its
+FIFO, its flush rounds, its in-flight buffer are all private to the shard.
+Shards therefore flush **independently**: shard ``i`` sealing a round never
+waits on shard ``j``'s device work, and the per-shard bucket rounds keep
+each shard's plan-cache geometry set as small as a standalone service's.
+Cross-shard composition happens only at query time (``fleet.SvdFleet``
+merges settled states through ``dist.merge``).
+"""
+
+from __future__ import annotations
+
+from repro.api import UpdatePolicy
+from repro.fleet.frontend import ContinuousBatcher
+from repro.serve.svd_service import SvdService
+
+__all__ = ["FleetShard"]
+
+
+class FleetShard:
+    """Shard ``index``: one ``SvdService`` + one ``ContinuousBatcher``.
+
+    The shard's service is a COMPLETE standalone service (snapshot,
+    restore, merge, eviction all work per shard); the shard wrapper adds
+    identity, device pinning and the admission frontend.
+    """
+
+    def __init__(
+        self,
+        index: int,
+        *,
+        policy: UpdatePolicy | None = None,
+        max_batch: int = 64,
+        pad_to_bucket: bool = True,
+        max_in_flight: int = 2,
+        continuous: bool = True,
+        max_depth: int = 8,
+        max_backlog: int | None = None,
+        device=None,
+        service: SvdService | None = None,
+    ):
+        self.index = index
+        self.device = device
+        self.service = service if service is not None else SvdService(
+            max_batch=max_batch,
+            pad_to_bucket=pad_to_bucket,
+            max_in_flight=max_in_flight,
+            policy=policy,
+        )
+        self.frontend = ContinuousBatcher(
+            self.service,
+            max_depth=max_depth,
+            max_backlog=max_backlog,
+            device=device,
+            continuous=continuous,
+        )
+
+    # thin delegation — the fleet routes per stream, shards do the work
+
+    def register(self, stream_id: str, state) -> None:
+        self.service.register(stream_id, state)
+
+    def enqueue(self, stream_id: str, a, b) -> int:
+        return self.frontend.admit(stream_id, a, b)
+
+    def enqueue_op(self, stream_id: str, op) -> int:
+        return self.frontend.admit_op(stream_id, op)
+
+    def pending(self) -> int:
+        return self.service.pending()
+
+    def poll(self) -> list[int]:
+        return self.frontend.poll()
+
+    def pump(self) -> int:
+        return self.frontend.pump()
+
+    def flush(self) -> int:
+        return self.service.flush()
+
+    def drain(self) -> int:
+        # through the frontend: it seals maximally deep/wide rounds first,
+        # then runs the service's blocking barrier
+        return self.frontend.drain()
+
+    def snapshot(self):
+        return self.service.snapshot()

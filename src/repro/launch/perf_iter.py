@@ -16,7 +16,10 @@ rank-1 SVD updates — through ``repro.api``'s policy-resolved engine
 (``aot_compiled`` on the shared plan cache; pre-api call shapes are gone
 from this driver): HLO cost extraction + roofline terms + the analytic
 useful-FLOPs ratio (``roofline.svd_update_flops``) per service geometry,
-JSONs in the same ``benchmarks/dryrun`` table.
+JSONs in the same ``benchmarks/dryrun`` table.  The ``FLEET_CELLS`` rows
+roofline the fleet tier's per-shard rounds (``repro.fleet``): the rank-k
+scan executable a backlogged shard seals, where useful FLOPs scale with the
+depth k while the host-side state (re)stacking is paid once per round.
 """
 
 # must precede the first jax-importing module: jax locks the device count on
@@ -88,11 +91,22 @@ SVD_CELLS = [
     (1024, 4096, 32, 8),
 ]
 
+# Fleet per-shard cells: (m, n, rank, batch, depth) — the round a backlogged
+# fleet shard seals (repro.fleet, DESIGN.md §13): bench_fleet's geometry
+# partitioned over 8 shards (64 streams -> B=8 per shard), with the depth-k
+# scan column amortizing state re-stacking over k sequential pairs.
+FLEET_CELLS = [
+    (64, 96, 8, 8, 8),
+    (64, 96, 8, 8, 32),
+    (512, 768, 16, 2, 8),
+]
+
 
 def run_svd_cell(m: int, n: int, r: int, batch: int, *, out_dir: Path,
-                 dtype="float32") -> dict:
+                 k: int | None = None, dtype="float32") -> dict:
     """Roofline one batched truncated-update flush through the api-resolved
-    engine (the shared plan cache — no side lowering)."""
+    engine (the shared plan cache — no side lowering).  ``k`` rooflines the
+    rank-k scan executable a fleet shard's deep rounds dispatch."""
     import jax.numpy as jnp
 
     from repro import api
@@ -100,19 +114,26 @@ def run_svd_cell(m: int, n: int, r: int, batch: int, *, out_dir: Path,
 
     policy = api.UpdatePolicy(method="direct")
     eng = engine_from_key(policy, r + 1)
-    compiled = eng.aot_compiled(batch=batch, m=m, n=n, rank=r,
+    compiled = eng.aot_compiled(batch=batch, m=m, n=n, rank=r, k=k,
                                 dtype=jnp.dtype(dtype))
     cost_list = compiled.cost_analysis()
     cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else cost_list
+    if k and cost:
+        # XLA cost analysis counts a lax.scan body ONCE, not per trip —
+        # scale to the k trips a deep round actually executes
+        cost = {key: v * k if isinstance(v, (int, float)) else v
+                for key, v in cost.items()}
     mem = compiled.memory_analysis()
     hw = HW(chips=1)
     rt = roofline_terms(cost or {}, {"count": 0}, hw)
-    model = svd_update_flops(m, n, r, batch)
+    # k sequential pairs per stream per call: the useful work scales with k
+    model = svd_update_flops(m, n, r, batch) * (k or 1)
+    shape = f"B{batch}_m{m}_n{n}_r{r}" + (f"_k{k}" if k else "")
     record = {
-        "arch": "svd-flush",
-        "shape": f"B{batch}_m{m}_n{n}_r{r}",
+        "arch": "svd-flush" if k is None else "svd-fleet-shard",
+        "shape": shape,
         "mesh": "single",
-        "method": "engine-trunc-batch",
+        "method": "engine-trunc-batch" if k is None else "engine-rank-k-scan",
         "roofline": rt,
         "memory": {
             "peak_bytes": getattr(mem, "temp_size_in_bytes", None),
@@ -123,17 +144,19 @@ def run_svd_cell(m: int, n: int, r: int, batch: int, *, out_dir: Path,
         "model_flops": model,
     }
     out_dir.mkdir(parents=True, exist_ok=True)
-    path = out_dir / f"svd_B{batch}_m{m}_n{n}_r{r}.json"
+    path = out_dir / f"svd_{shape}.json"
     path.write_text(json.dumps(record, indent=1))
     return record
 
 
 def run_svd_cells(out_dir: Path) -> None:
-    for m, n, r, b in SVD_CELLS:
-        rec = run_svd_cell(m, n, r, b, out_dir=out_dir)
+    cells = [(m, n, r, b, None) for m, n, r, b in SVD_CELLS]
+    cells += list(FLEET_CELLS)
+    for m, n, r, b, k in cells:
+        rec = run_svd_cell(m, n, r, b, k=k, out_dir=out_dir)
         rt = rec["roofline"]
         ur = rec["useful_flops_ratio"]
-        print(f"OK svd-flush/{rec['shape']}: "
+        print(f"OK {rec['arch']}/{rec['shape']}: "
               f"t_comp={rt['t_compute_s']*1e3:.3f}ms "
               f"t_mem={rt['t_memory_s']*1e3:.3f}ms "
               f"useful={ur if ur is None else round(ur, 3)}",

@@ -157,6 +157,8 @@ class SvdServiceStats:
     backpressure_waits: int = 0   # rounds that had to wait for an older one
     in_flight_peak: int = 0       # most rounds ever outstanding at once
     ops_applied: int = 0          # structured (non-pair) events applied
+    scan_rounds: int = 0          # depth-batched (rank-k scan) engine calls
+    max_depth: int = 0            # deepest scan column ever dispatched
 
 
 @partial(
@@ -303,6 +305,19 @@ def _bucket(b: int, cap: int) -> int:
     return min(p, max(cap, 1))
 
 
+def _depth_bucket(run: int, cap: int) -> int:
+    """Largest power of two <= min(run, cap) — the scan depth a stream's
+    consecutive-pair backlog dispatches as.  Flooring (not ceiling) keeps
+    depth groups exact: a stream never pads its OWN column with no-op pairs
+    (scan outputs are kept, so k-padding would have to be bitwise-identity;
+    B-padding outputs are discarded, so zero pairs are safe there)."""
+    run = min(run, max(cap, 1))
+    p = 1
+    while p * 2 <= run:
+        p <<= 1
+    return p
+
+
 def _is_ready(x) -> bool:
     fn = getattr(x, "is_ready", None)
     return True if fn is None else fn()
@@ -334,12 +349,39 @@ class SvdService:
         self.max_in_flight = max_in_flight
         self.stats = SvdServiceStats()
         self._streams: OrderedDict[str, SvdState] = OrderedDict()
-        # FIFO of events per stream: ("pair", a, b) | ("op", UpdateOp)
+        # FIFO of events per stream, each carrying a visibility token:
+        # ("pair", a, b, token) | ("op", UpdateOp, token)
         self._pending: dict[str, deque] = {}
         self._eff_shape: dict[str, tuple] = {}   # post-queue (m, n) per stream
-        self._in_flight: deque[list] = deque()   # per round: dispatched outputs
+        # per dispatched round: (device outputs, tokens the round carried)
+        self._in_flight: deque[tuple[list, list]] = deque()
         self._warmed: set[tuple] = set()         # (kind, batch, m, n, r, dtype)
+        self._next_token = 0                     # visibility tokens (runtime-only)
+        self._visible: list[int] = []            # retired tokens, FIFO, undrained
         self._lock = threading.RLock()
+
+    # -- visibility tokens ---------------------------------------------------
+    #
+    # Every enqueued event gets a monotonically increasing token; a token
+    # becomes *visible* when the flush round that applied it has retired
+    # (its device outputs are concrete).  Enqueue-to-visible is the latency
+    # the fleet benchmark reports; the continuous-batching frontend polls
+    # ``take_visible`` after every pump.  Tokens are runtime state — they are
+    # NOT snapshotted (a restored service issues fresh ones).
+
+    def _issue_token(self) -> int:
+        t = self._next_token
+        self._next_token += 1
+        return t
+
+    def take_visible(self) -> list[int]:
+        """Drain and return tokens whose updates are now visible (their
+        round retired — or was applied synchronously).  Reaps ready rounds
+        first, so polling callers see completions without blocking."""
+        with self._lock:
+            self._reap_ready()
+            out, self._visible = self._visible, []
+            return out
 
     def _engine_for(self, rank: int) -> SvdEngine:
         if self.engine is not None:
@@ -378,11 +420,17 @@ class SvdService:
             queue = self._pending.get(stream_id, deque())
             while queue:
                 state = self._apply_event(state, queue[0])
-                queue.popleft()
+                self._token_visible(queue.popleft())
             del self._streams[stream_id]
             self._pending.pop(stream_id, None)
             self._eff_shape.pop(stream_id, None)
             return state
+
+    def _token_visible(self, ev: tuple) -> None:
+        """Mark a consumed event's token visible (``None`` = an expanded
+        Sparse pair whose op token rides the LAST expanded pair)."""
+        if ev[-1] is not None:
+            self._visible.append(ev[-1])
 
     def _apply_one(self, state: SvdState, a, b) -> SvdState:
         eng = self._engine_for(state.rank)
@@ -442,6 +490,29 @@ class SvdService:
         with self._lock:
             return self._streams[stream_id]
 
+    def settle(self, stream_ids) -> list[SvdState]:
+        """Apply each named stream's OWN queued events and return the settled
+        states, in ``stream_ids`` order (other streams' queues untouched).
+
+        This is the query-time primitive: ``merge_streams`` settles before
+        merging, and the fleet tier (``repro.fleet``) settles each shard's
+        members before the cross-shard merge — both see states as of *every*
+        enqueued event, wherever the stream lives.  Runs under the service
+        lock; the per-event applies dispatch async and the returned states
+        may be futures (read = transparent block, like ``state()``).
+        """
+        with self._lock:
+            states = []
+            for sid in stream_ids:
+                state = self._streams[sid]
+                queue = self._pending[sid]
+                while queue:
+                    state = self._apply_event(state, queue[0])
+                    self._token_visible(queue.popleft())
+                self._streams[sid] = state
+                states.append(state)
+            return states
+
     def merge_streams(
         self,
         stream_ids,
@@ -467,16 +538,7 @@ class SvdService:
         other streams is never stalled.  The merge reflects the states as
         of the snapshot.
         """
-        with self._lock:
-            states = []
-            for sid in stream_ids:
-                state = self._streams[sid]
-                queue = self._pending[sid]
-                while queue:
-                    state = self._apply_event(state, queue[0])
-                    queue.popleft()
-                self._streams[sid] = state
-                states.append(state)
+        states = self.settle(stream_ids)
         merged = merge_tree(states, rank=rank, engine=self.engine,
                             policy=self.policy)
         if target is not None:
@@ -498,8 +560,9 @@ class SvdService:
 
     # -- the hot path -------------------------------------------------------
 
-    def enqueue(self, stream_id: str, a: jax.Array, b: jax.Array) -> None:
-        """Queue one rank-1 perturbation ``a b^T`` for a stream.
+    def enqueue(self, stream_id: str, a: jax.Array, b: jax.Array) -> int:
+        """Queue one rank-1 perturbation ``a b^T`` for a stream; returns the
+        event's visibility token (see ``take_visible``).
 
         Auto-flushes when ``max_batch`` streams have a pending head event.
         The flush only *dispatches* device work (async); enqueue never waits
@@ -517,9 +580,11 @@ class SvdService:
                     f"pair shapes {a.shape}/{b.shape} do not match stream "
                     f"{stream_id!r} geometry ({m},)/({n},)"
                 )
-            self._pending[stream_id].append(("pair", a, b))
+            token = self._issue_token()
+            self._pending[stream_id].append(("pair", a, b, token))
             self.stats.enqueued += 1
             self._maybe_autoflush()
+            return token
 
     def enqueue_op(self, stream_id: str, op: "_ops.UpdateOp") -> None:
         """Queue one structured perturbation (a ``repro.updates`` op).
@@ -535,6 +600,8 @@ class SvdService:
         leaves bitwise instead of sketched pairs — and expand into their
         ``rank`` pairs only when they reach the head of a flush round.
         FIFO order with previously queued pairs is preserved either way.
+        Returns the token of the op's LAST lowered event — visible once the
+        whole op has applied.
         """
         with self._lock:
             if stream_id not in self._streams:
@@ -543,10 +610,12 @@ class SvdService:
                 raise TypeError(f"enqueue_op takes a repro.updates op; got {type(op)}")
             m, n = self._effective_shape(stream_id)
             events, out_shape = self._lower_op_events(op, m, n, stream_id)
+            events = [ev + (self._issue_token(),) for ev in events]
             self._pending[stream_id].extend(events)
             self._eff_shape[stream_id] = out_shape
             self.stats.enqueued += len(events)
             self._maybe_autoflush()
+            return events[-1][-1]
 
     def _lower_op_events(self, op, m: int, n: int, sid: str) -> tuple[list, tuple]:
         """Lower an op into FIFO events at the (m, n) geometry; returns
@@ -614,6 +683,7 @@ class SvdService:
         the pop so a raising sketch leaves the event queued (the flush
         failure-atomicity contract)."""
         op = self._pending[sid][0][1]
+        tok = self._pending[sid][0][-1]
         st = self._streams[sid]
         self._record_warm(
             "sketch_sparse", op.nnz, st.m, st.n, op.rank,
@@ -621,8 +691,10 @@ class SvdService:
         )
         u, s, v = _planner.op_low_rank_factors(op, st.m, st.n, self.policy)
         self._pending[sid].popleft()
+        # the op's token rides the LAST expanded pair (visible = whole op done)
         self._pending[sid].extendleft(
-            ("pair", u[:, i] * s[i], v[:, i])
+            ("pair", u[:, i] * s[i], v[:, i],
+             tok if i == op.rank - 1 else None)
             for i in range(op.rank - 1, -1, -1)
         )
         # one structured event became ``rank`` pair events; keep the
@@ -656,12 +728,15 @@ class SvdService:
     # -- in-flight buffer management ----------------------------------------
 
     def _reap_ready(self) -> None:
-        """Retire finished rounds without blocking (oldest-first)."""
-        while self._in_flight and all(_is_ready(x) for x in self._in_flight[0]):
-            self._in_flight.popleft()
+        """Retire finished rounds without blocking (oldest-first); their
+        tokens become visible."""
+        while self._in_flight and all(_is_ready(x) for x in self._in_flight[0][0]):
+            self._visible.extend(self._in_flight.popleft()[1])
 
     def _retire_oldest(self) -> None:
-        jax.block_until_ready(self._in_flight.popleft())
+        outputs, tokens = self._in_flight.popleft()
+        jax.block_until_ready(outputs)
+        self._visible.extend(tokens)
 
     def _barrier(self) -> None:
         """Block until every dispatched round AND every stream state is
@@ -671,10 +746,37 @@ class SvdService:
             self._retire_oldest()
         jax.block_until_ready(list(self._streams.values()))
 
-    def _flush_round(self) -> int:
-        """One round: at most one pending event per stream — pair-headed
-        streams group by geometry into batched engine calls; op-headed
-        streams (appends, decay folds) apply through the planner —
+    def flush_round(self, *, max_depth: int = 1) -> int:
+        """Dispatch ONE flush round (public form — the continuous-batching
+        frontend's seal primitive; ``repro.fleet.frontend``).
+
+        ``max_depth > 1`` enables depth batching: a stream whose queue head
+        is a run of consecutive rank-1 pairs contributes up to ``max_depth``
+        of them as one scan column (power-of-two floored), and the round
+        groups by ``(geometry, depth)`` — depth-k groups dispatch through
+        the engine's ``update_truncated_rank_k_batch`` ``lax.scan`` route,
+        ONE engine call applying ``B x k`` events.  The scan applies a
+        stream's pairs in FIFO order (per-stream ordering by data
+        dependence), and the scan executable is bitwise-identical to the k
+        sequential single updates it replaces (pinned in tests/test_fleet.py).
+        """
+        with self._lock:
+            return self._flush_round(max_depth=max_depth)
+
+    def has_capacity(self) -> bool:
+        """True when a ``flush_round`` would dispatch WITHOUT blocking on an
+        older round (the frontend's pump guard).  Reaps finished rounds."""
+        with self._lock:
+            if self.max_in_flight == 0:
+                return True
+            self._reap_ready()
+            return len(self._in_flight) < self.max_in_flight
+
+    def _flush_round(self, *, max_depth: int = 1) -> int:
+        """One round: pair-headed streams group by (geometry, depth) into
+        batched engine calls (at most one event per stream at depth 1, up to
+        ``max_depth`` consecutive pairs as a scan column otherwise);
+        op-headed streams (appends, decay folds) apply through the planner —
         all dispatched async."""
         live_ids = [sid for sid, q in self._pending.items() if q]
         if not live_ids:
@@ -689,6 +791,7 @@ class SvdService:
         applied = 0        # pair updates dispatched through batched calls
         ops_applied = 0    # structured heads (already counted by _apply_event)
         round_outputs: list = []
+        round_tokens: list = []
 
         # structured heads: per-stream planner application (geometry may
         # change mid-event, so they cannot share a batch)
@@ -707,20 +810,42 @@ class SvdService:
                 # event queued, mirroring the pair path's peek-don't-pop
                 # failure atomicity below
                 self._streams[sid] = self._apply_event(self._streams[sid], head)
-                self._pending[sid].popleft()
+                ev = self._pending[sid].popleft()
+                if ev[-1] is not None:
+                    round_tokens.append(ev[-1])
                 round_outputs.extend(jax.tree.leaves(self._streams[sid]))
                 ops_applied += 1
             else:
                 round_ids.append(sid)
 
-        keys = [truncated_geometry(self._streams[sid]) for sid in round_ids]
+        # depth per stream: how many consecutive pair heads ride this round
+        # as one scan column (1 = the classic one-event-per-stream round)
+        depths = {}
+        for sid in round_ids:
+            if max_depth > 1:
+                run = 0
+                for ev in self._pending[sid]:
+                    if ev[0] != "pair":
+                        break
+                    run += 1
+                    if run >= max_depth:
+                        break
+                depths[sid] = _depth_bucket(run, max_depth)
+            else:
+                depths[sid] = 1
 
-        for (m, n, r, dt), idxs in group_indices(keys).items():
+        keys = [truncated_geometry(self._streams[sid]) + (depths[sid],)
+                for sid in round_ids]
+
+        for (m, n, r, dt, k), idxs in group_indices(keys).items():
             sids = [round_ids[i] for i in idxs]
             # peek, don't pop: if the engine call raises (first-compile OOM,
             # backend error), the pairs stay queued and a retry re-applies
             # them — flush stays failure-atomic per group
-            pairs = [self._pending[sid][0][1:] for sid in sids]
+            pairs = [
+                [(q[j][1], q[j][2]) for j in range(k)]
+                for q in (self._pending[sid] for sid in sids)
+            ]
             states = [self._streams[sid] for sid in sids]
             bsz = len(sids)
             pad = 0
@@ -732,37 +857,62 @@ class SvdService:
             t_stack = stack_trees(
                 [TruncatedSvd(s.u, s.s, s.v) for s in states]
             )
-            a_stack = jnp.stack([jnp.asarray(a, dt) for a, _ in pairs])
-            b_stack = jnp.stack([jnp.asarray(b, dt) for _, b in pairs])
+            if k == 1:
+                a_stack = jnp.stack([jnp.asarray(col[0][0], dt) for col in pairs])
+                b_stack = jnp.stack([jnp.asarray(col[0][1], dt) for col in pairs])
+                pad_a, pad_b = (pad, m), (pad, n)
+            else:
+                a_stack = jnp.stack([
+                    jnp.stack([jnp.asarray(a, dt) for a, _ in col]) for col in pairs
+                ])
+                b_stack = jnp.stack([
+                    jnp.stack([jnp.asarray(b, dt) for _, b in col]) for col in pairs
+                ])
+                pad_a, pad_b = (pad, k, m), (pad, k, n)
             if pad:
-                # no-op rank-1 pairs (a = b = 0); padded outputs are discarded
+                # no-op rank-1 pairs (a = b = 0) along the BATCH axis only;
+                # padded outputs are discarded (scan columns are never padded
+                # — their outputs are kept, see _depth_bucket)
                 t_stack = jax.tree.map(
                     lambda x: jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)]),
                     t_stack,
                 )
-                a_stack = jnp.concatenate([a_stack, jnp.zeros((pad, m), dt)])
-                b_stack = jnp.concatenate([b_stack, jnp.zeros((pad, n), dt)])
+                a_stack = jnp.concatenate([a_stack, jnp.zeros(pad_a, dt)])
+                b_stack = jnp.concatenate([b_stack, jnp.zeros(pad_b, dt)])
 
             eng = self._engine_for(r)
             if self.policy.mesh is None:
-                self._record_warm("trunc_batch", bsz + pad, m, n, r, dt)
-            out = eng.update_truncated_batch(
-                t_stack, a_stack, b_stack,
-                mesh=self.policy.mesh, batch_axis=self.policy.batch_axis,
-            )
+                kind = "trunc_batch" if k == 1 else f"trunc_scan{k}"
+                self._record_warm(kind, bsz + pad, m, n, r, dt)
+            if k == 1:
+                out = eng.update_truncated_batch(
+                    t_stack, a_stack, b_stack,
+                    mesh=self.policy.mesh, batch_axis=self.policy.batch_axis,
+                )
+            else:
+                out = eng.update_truncated_rank_k_batch(
+                    t_stack, a_stack, b_stack,
+                    mesh=self.policy.mesh, batch_axis=self.policy.batch_axis,
+                )
+                self.stats.scan_rounds += 1
+                self.stats.max_depth = max(self.stats.max_depth, k)
             for j, sid in enumerate(sids):
                 t = unstack_tree(out, j)
                 self._streams[sid] = SvdState(u=t.u, s=t.s, v=t.v)
-                self._pending[sid].popleft()
+                for _ in range(k):
+                    ev = self._pending[sid].popleft()
+                    if ev[-1] is not None:
+                        round_tokens.append(ev[-1])
             round_outputs.extend(jax.tree.leaves(out))
-            applied += bsz
+            applied += bsz * k
             self.stats.rounds += 1
             self.stats.max_batch = max(self.stats.max_batch, bsz + pad)
 
         if self.max_in_flight == 0:
             jax.block_until_ready(round_outputs)       # synchronous mode
+            self._visible.extend(round_tokens)
         else:
-            self._in_flight.append(round_outputs)
+            self._in_flight.append((round_outputs, round_tokens))
             self.stats.in_flight_peak = max(
                 self.stats.in_flight_peak, len(self._in_flight)
             )
@@ -881,9 +1031,11 @@ class SvdService:
                 order = "p" * n_pairs          # v1 snapshots: all-pair FIFOs
             queue: deque = deque()
             pi = oi = 0
+            # visibility tokens are runtime-only: restored events get fresh
+            # ones (nobody is waiting on the old process's tokens)
             for marker in order:
                 if marker == "p":
-                    queue.append(("pair", pa[pi], pb[pi]))
+                    queue.append(("pair", pa[pi], pb[pi], svc._issue_token()))
                     pi += 1
                     continue
                 op = sops[oi]
@@ -893,9 +1045,10 @@ class SvdService:
                     # the pair stacks rectangular past a geometry change
                     for i in range(op.k):
                         queue.append(("pair", jnp.asarray(op.u)[:, i],
-                                      jnp.asarray(op.v)[:, i]))
+                                      jnp.asarray(op.v)[:, i],
+                                      svc._issue_token()))
                 else:
-                    queue.append(("op", op))
+                    queue.append(("op", op, svc._issue_token()))
             svc._pending[sid] = queue
             m_eff, n_eff = svc._streams[sid].m, svc._streams[sid].n
             for ev in queue:
@@ -924,10 +1077,14 @@ class SvdService:
                         dtype=jnp.dtype(dtype_name),
                     )
                     continue
+                # depth-batched rounds record "trunc_scan<k>" — the scan
+                # depth rides the kind string (the warm tuple is fixed-width)
+                scan_k = (int(kind[len("trunc_scan"):])
+                          if kind.startswith("trunc_scan") else None)
                 _api_warmup(
                     svc.policy, m=m, n=n,
-                    batch=batch if kind == "trunc_batch" else None,
-                    rank=r, dtype=jnp.dtype(dtype_name),
+                    batch=batch if kind != "trunc" else None,
+                    rank=r, k=scan_k, dtype=jnp.dtype(dtype_name),
                 )
         return svc
 
@@ -940,6 +1097,7 @@ class SvdService:
         mesh=None,
         engine: SvdEngine | None = None,
         policy: UpdatePolicy | None = None,
+        cache_dir=None,
     ) -> tuple[int, "SvdService"]:
         """Load the latest (or ``step``-th) snapshot and rebuild the service.
 
@@ -947,6 +1105,16 @@ class SvdService:
         restored service, fed the same post-snapshot traffic, produces
         bitwise-identical factors to the service that never stopped
         (DESIGN.md §9; kill-and-resume test in test_serve_checkpoint.py).
+
+        ``cache_dir`` (opt-in) enables the persistent XLA compilation cache
+        BEFORE the warmed-geometry set re-warms (``api.
+        enable_compilation_cache``): a restore on a machine that has flushed
+        these geometries before recompiles NOTHING — warmup replays cached
+        binaries (the fresh-process proof is in tests/test_fleet.py).
         """
+        if cache_dir is not None:
+            from repro.api import enable_compilation_cache
+
+            enable_compilation_cache(cache_dir)
         step, snap = ServiceSnapshot.load(ckpt_dir, step)
         return step, cls.from_snapshot(snap, mesh=mesh, engine=engine, policy=policy)

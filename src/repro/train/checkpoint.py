@@ -13,7 +13,10 @@ Guarantees:
   is updated with os.replace (atomic on POSIX) only after the manifest.
 * restore validates the manifest checksum set before loading.
 * checkpoints are mesh-independent (full arrays gathered to host), so a
-  restart may use a different device count — elastic scaling (train.elastic).
+  restart may use a different device count — elastic scaling: training
+  re-meshes via ``train.elastic.plan_mesh``/``reshard``; a serving fleet
+  re-shards via ``SvdFleet.restore(num_shards=...)`` over the same
+  mesh-independent leaves (``repro.fleet``).
 * leaves round-trip **bitwise**: ``np.savez`` preserves dtype and bits, and
   a structure-free restore (``tree_like=None``) hands them back uncast — the
   foundation of the serving layer's restore-exactness contract (DESIGN §9).

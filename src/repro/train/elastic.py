@@ -1,4 +1,4 @@
-"""Elastic scaling: re-mesh on restart.
+"""Elastic scaling: re-mesh (training) and re-shard (serving) on restart.
 
 Checkpoints store full (host-gathered) arrays, so they are mesh-independent.
 On restart, ``plan_mesh`` inspects the devices that are actually alive and
@@ -6,6 +6,14 @@ chooses the largest (data, model) factorization consistent with the model's
 TP divisibility constraints; ``reshard`` places a restored pytree onto the
 new mesh. At 1000+-node scale this is the recover-with-fewer-pods path: a
 dead pod shrinks the data axis, training continues at reduced global batch.
+
+The serving tier has the same failover shape at a different granularity:
+a fleet snapshot (``repro.fleet.FleetSnapshot``) is shard-count-independent
+the way a training checkpoint is mesh-independent, so
+``SvdFleet.restore(..., num_shards="auto")`` asks ``plan_shard_count`` to
+size the restored fleet to the devices that actually came back; the
+per-stream state regroup (``FleetSnapshot.regrouped``) is the serving
+analogue of ``reshard`` — pure data movement, bitwise.
 """
 
 from __future__ import annotations
@@ -15,7 +23,7 @@ from jax.sharding import NamedSharding
 
 from repro.dist import sharding as sh
 
-__all__ = ["plan_mesh", "reshard", "largest_factorization"]
+__all__ = ["plan_mesh", "plan_shard_count", "reshard", "largest_factorization"]
 
 
 def largest_factorization(n: int, max_model: int = 16) -> tuple[int, int]:
@@ -30,6 +38,17 @@ def plan_mesh(max_model: int = 16):
     n = jax.device_count()
     data, model = largest_factorization(n, max_model)
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def plan_shard_count(max_shards: int | None = None, *, devices=None) -> int:
+    """Fleet shard count for the devices actually alive: one service shard
+    per device (each shard's flush rounds pin to its own device,
+    ``fleet.placement.plan_devices``), optionally capped.  The serving twin
+    of ``plan_mesh`` — called by ``SvdFleet.restore(num_shards="auto")``."""
+    n = len(devices) if devices is not None else jax.device_count()
+    if n < 1:
+        raise ValueError("no live devices to plan shards for")
+    return min(n, max_shards) if max_shards is not None else n
 
 
 def reshard(tree, mesh):

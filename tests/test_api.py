@@ -24,6 +24,8 @@ API_SURFACE = [
     "apply",          # structured perturbations (repro.updates, DESIGN §10)
     "apply_many",
     "as_state",
+    "compilation_cache_entries",  # persistent-warmup observability (DESIGN §13)
+    "enable_compilation_cache",   # cross-process AOT warmup (DESIGN §13)
     "engine_for",
     "update",
     "update_many",

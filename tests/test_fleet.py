@@ -1,0 +1,481 @@
+"""``repro.fleet`` acceptance: the mesh-sharded service tier (DESIGN.md §13).
+
+Pins the contracts the subsystem ships on:
+
+* a fleet ``query`` over enqueued traffic is **bitwise** equal to the
+  single-service reference at any shard count — placement cannot change
+  what a query returns (the settle path applies each stream's queue
+  through the same per-stream sequence a standalone service would);
+* continuous-batching ordering: a stream's result does not depend on how
+  admission windows cut its event sequence (like-for-like replays are
+  bitwise; different pump patterns agree to ulp — the XLA
+  batch-composition caveat, see fleet.fleet module doc);
+* ``FleetSnapshot`` v4 kill-and-resume is bitwise ACROSS processes, and
+  elastic restore under a different shard count regroups per-stream
+  leaves bitwise;
+* a restore with a warm persistent compilation cache compiles nothing in
+  a fresh process (the zero-recompile failover contract).
+"""
+
+import dataclasses
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.api import SvdState, UpdatePolicy
+from repro.fleet import (
+    FLEET_SNAPSHOT_VERSION,
+    FleetSnapshot,
+    PlacementSpec,
+    SvdFleet,
+    shard_of,
+)
+from repro.serve import SvdService
+from repro.train import checkpoint as ckpt
+
+REPO = Path(__file__).resolve().parent.parent
+SUB_ENV = {
+    "PYTHONPATH": str(REPO / "src"),
+    "PATH": "/usr/bin:/bin",
+    "JAX_PLATFORMS": "cpu",
+    "HOME": "/tmp",
+}
+
+M, N, R = 8, 10, 3
+STREAMS = 5
+IDS = [f"s{i}" for i in range(STREAMS)]
+POLICY = UpdatePolicy(method="direct")
+
+
+def _states(seed=7):
+    rng = np.random.default_rng(seed)
+    return [
+        SvdState.from_factors(
+            np.linalg.qr(rng.normal(size=(M, R)))[0],
+            np.sort(np.abs(rng.normal(size=R)))[::-1].copy(),
+            np.linalg.qr(rng.normal(size=(N, R)))[0],
+        )
+        for _ in range(STREAMS)
+    ]
+
+
+def _traffic(count, seed=8):
+    rng = np.random.default_rng(seed)
+    return [
+        (f"s{i % STREAMS}",
+         jnp.asarray(rng.normal(size=M)), jnp.asarray(rng.normal(size=N)))
+        for i in range(count)
+    ]
+
+
+def _single(**kw) -> SvdService:
+    kw.setdefault("max_batch", 1 << 30)       # no autoflush: pure settle path
+    svc = SvdService(policy=POLICY, **kw)
+    for sid, st in zip(IDS, _states()):
+        svc.register(sid, st)
+    return svc
+
+
+def _fleet(shards, **kw) -> SvdFleet:
+    kw.setdefault("continuous", False)
+    kw.setdefault("max_batch", 1 << 30)
+    fl = SvdFleet(shards, policy=POLICY, **kw)
+    for sid, st in zip(IDS, _states()):
+        fl.register(sid, st)
+    return fl
+
+
+def _feed(tgt, events):
+    return [tgt.enqueue(sid, a, b) for sid, a, b in events]
+
+
+def _assert_states(a, b, *, exact=True, tol=1e-8):
+    for f in ("u", "s", "v"):
+        x, y = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        if exact:
+            np.testing.assert_allclose(x, y, rtol=0, atol=0)
+        else:
+            np.testing.assert_allclose(x, y, rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# routing + surface
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_routes_streams_and_keeps_service_surface():
+    fl = _fleet(3)
+    assert fl.num_shards == 3
+    for sid, st in zip(IDS, _states()):
+        assert fl.shard_of(sid) == shard_of(fl.placement, sid)
+        _assert_states(fl.state(sid), st)      # registered bitwise, routed
+    toks = _feed(fl, _traffic(11))
+    assert fl.pending() == 11
+    for (sh, _), (sid, _, _) in zip(toks, _traffic(11)):
+        assert sh == fl.shard_of(sid)          # token carries the owner shard
+    got = fl.evict("s0")
+    with pytest.raises(KeyError):
+        fl.state("s0")
+    assert isinstance(got, type(fl.state("s1")))
+
+
+def test_fleet_constructor_rejects_mismatched_placement():
+    with pytest.raises(ValueError):
+        SvdFleet(2, policy=POLICY, placement=PlacementSpec(4))
+
+
+# ---------------------------------------------------------------------------
+# the acceptance contract: query == single-service reference, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_query_bitwise_vs_single_service(shards):
+    """Same streams, same enqueued traffic: the fleet's cross-shard query
+    is bitwise-equal (rtol=0/atol=0, f64) to ``merge_streams`` on one
+    service — at every shard count, so placement is unobservable."""
+    events = _traffic(17)
+    svc = _single()
+    _feed(svc, events)
+    fl = _fleet(shards)
+    _feed(fl, events)
+    _assert_states(fl.query(IDS, rank=R), svc.merge_streams(IDS, rank=R))
+
+
+def test_query_respects_stream_order_not_shard_order():
+    """The merge runs in ``stream_ids`` order, not in shard-grouped order
+    — a permuted query matches the permuted single-service reference."""
+    events = _traffic(13)
+    perm = [IDS[i] for i in (3, 0, 4, 2, 1)]
+    svc = _single()
+    _feed(svc, events)
+    fl = _fleet(3)
+    _feed(fl, events)
+    _assert_states(fl.query(perm, rank=R), svc.merge_streams(perm, rank=R))
+
+
+def test_merge_streams_registers_target_on_its_hashed_shard():
+    fl = _fleet(2)
+    _feed(fl, _traffic(6))
+    merged = fl.merge_streams(IDS[:3], target="merged", rank=R)
+    home = fl.shards[fl.shard_of("merged")]
+    _assert_states(fl.state("merged"), merged)
+    assert "merged" in home.service._streams
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: visibility, depth rounds, ordering
+# ---------------------------------------------------------------------------
+
+
+def test_all_tokens_become_visible_after_drain():
+    fl = _fleet(2, continuous=True, max_batch=64, max_depth=4)
+    toks = _feed(fl, _traffic(20))
+    fl.drain()
+    seen = set(fl.poll())
+    assert seen == set(toks)
+    assert fl.poll() == []                     # poll drains; second call empty
+    assert fl.pending() == 0
+
+
+def test_continuous_drain_seals_deep_scan_rounds():
+    """A backlogged stream drains as rank-k scan columns, not one-event
+    rounds: 8 events on one stream -> a single depth-8 round."""
+    fl = _fleet(1, continuous=True, max_batch=64, max_depth=8)
+    _feed(fl, [( "s0", a, b) for _, a, b in _traffic(8)])
+    fl.drain()
+    st = fl.stats()
+    assert st.scan_rounds >= 1
+    assert st.max_depth == 8
+    assert st.applied == 8
+
+
+def test_continuous_ordering_replay_bitwise():
+    """Like-for-like: the same traffic through the same pump pattern twice
+    is bitwise — the continuous path is deterministic."""
+    def run():
+        fl = _fleet(2, continuous=True, max_batch=64, max_depth=4)
+        for i, (sid, a, b) in enumerate(_traffic(18)):
+            fl.enqueue(sid, a, b)
+            if i % 5 == 4:
+                fl.pump()
+        fl.drain()
+        return [fl.state(sid) for sid in IDS]
+    for a, b in zip(run(), run()):
+        _assert_states(a, b)
+
+
+def test_continuous_ordering_pump_pattern_invariant():
+    """A stream's result does not depend on where admission windows cut
+    its sequence: every pump pattern applies the same per-stream FIFO
+    order, so all patterns agree with the sequential settle reference.
+    Tolerance is ulp-level, not zero: different window cuts compile
+    different batch compositions, and XLA may round reductions in a
+    different order (see fleet.fleet module doc)."""
+    events = _traffic(18)
+    ref = _single()
+    _feed(ref, events)
+    ref_states = ref.settle(IDS)
+
+    for period in (1, 3, 7, None):             # None = drain-only
+        fl = _fleet(2, continuous=True, max_batch=64, max_depth=4)
+        for i, (sid, a, b) in enumerate(events):
+            fl.enqueue(sid, a, b)
+            if period and i % period == period - 1:
+                fl.pump()
+        fl.drain()
+        for sid, want in zip(IDS, ref_states):
+            _assert_states(fl.state(sid), want, exact=False, tol=1e-9)
+
+
+def test_fixed_mode_is_the_plain_service():
+    """continuous=False on one shard degrades to the service's fixed
+    boundaries exactly — identical autoflush compositions, bitwise."""
+    events = _traffic(16)
+    svc = _single(max_batch=4)
+    _feed(svc, events)
+    svc.drain()
+    fl = _fleet(1, continuous=False, max_batch=4)
+    _feed(fl, events)
+    fl.drain()
+    for sid in IDS:
+        _assert_states(fl.state(sid), svc.state(sid))
+
+
+def test_backpressure_bounds_pending():
+    fl = _fleet(1, continuous=True, max_batch=64, max_depth=2,
+                max_backlog=4, max_in_flight=1)
+    peak = 0
+    for sid, a, b in _traffic(16):
+        fl.enqueue(sid, a, b)
+        peak = max(peak, fl.pending())
+    assert peak <= 4
+    fl.drain()
+    assert fl.pending() == 0
+    assert fl.stats().backpressure_waits >= 1
+
+
+# ---------------------------------------------------------------------------
+# FleetSnapshot v4
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_roundtrip_in_process(tmp_path):
+    fl = _fleet(3)
+    _feed(fl, _traffic(14))
+    snap = fl.snapshot()
+    assert snap.version == FLEET_SNAPSHOT_VERSION == 4
+    assert snap.placement == fl.placement
+    assert dict(snap.config)["continuous"] is False
+    fl.save(tmp_path, step=14)
+
+    step, loaded = FleetSnapshot.load(tmp_path)
+    assert step == 14
+    re = SvdFleet.from_snapshot(loaded, policy=POLICY)
+    assert re.num_shards == 3
+    assert re.pending() == 14                  # pending FIFOs survive
+    svc = _single()
+    _feed(svc, _traffic(14))
+    _assert_states(re.query(IDS, rank=R), svc.merge_streams(IDS, rank=R))
+
+
+def test_snapshot_refuses_newer_version_and_foreign_checkpoints(tmp_path):
+    fl = _fleet(2)
+    newer = dataclasses.replace(fl.snapshot(), version=FLEET_SNAPSHOT_VERSION + 1)
+    newer.save(tmp_path / "newer", step=1)
+    with pytest.raises(ValueError, match="newer"):
+        FleetSnapshot.load(tmp_path / "newer")
+    # a non-fleet checkpoint is rejected by format, not by crashing later
+    ckpt.save(tmp_path / "plain", 1, {"x": np.zeros(2)}, aux={"format": "other"})
+    with pytest.raises(ValueError, match="not a FleetSnapshot"):
+        FleetSnapshot.load(tmp_path / "plain")
+
+
+def test_elastic_regroup_is_bitwise(tmp_path):
+    """restore(num_shards=k) re-places every stream's leaves wholesale:
+    the regrouped fleet answers queries bitwise-identically."""
+    fl = _fleet(2)
+    _feed(fl, _traffic(14))
+    fl.save(tmp_path, step=14)
+
+    svc = _single()
+    _feed(svc, _traffic(14))
+    want = svc.merge_streams(IDS, rank=R)
+
+    for k in (1, 3, 4):
+        step, re = SvdFleet.restore(tmp_path, num_shards=k, policy=POLICY)
+        assert (step, re.num_shards) == (14, k)
+        assert re.placement.num_shards == k
+        assert re.pending() == 14
+        for sid in IDS:                        # every stream found its shard
+            assert sid in re.shards[re.shard_of(sid)].service._streams
+        _assert_states(re.query(IDS, rank=R), want)
+
+
+def test_regrouped_same_count_is_identity_and_auto_plans_devices(tmp_path):
+    fl = _fleet(2)
+    snap = fl.snapshot()
+    assert snap.regrouped(2) is snap
+    _feed(fl, _traffic(9))
+    fl.save(tmp_path, step=9)
+    # "auto" sizes the fleet to live devices (1 CPU in the test process)
+    import jax
+
+    step, re = SvdFleet.restore(tmp_path, num_shards="auto", policy=POLICY)
+    assert re.num_shards == jax.device_count()
+    assert re.pending() == 9
+
+
+# ---------------------------------------------------------------------------
+# kill-and-resume across processes (the §13 acceptance test)
+# ---------------------------------------------------------------------------
+
+_KILL_RESUME_SCRIPT = textwrap.dedent(
+    """
+    import hashlib, json, sys
+    import numpy as np
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    from repro.api import SvdState, UpdatePolicy
+    from repro.fleet import SvdFleet
+
+    mode, ckpt_dir = sys.argv[1], sys.argv[2]
+    M, N, R, STREAMS, EVENTS, SPLIT, SHARDS = 8, 10, 3, 5, 24, 15, 3
+
+    def build():
+        fl = SvdFleet(SHARDS, policy=UpdatePolicy(method="direct"),
+                      continuous=False, max_batch=1 << 30)
+        rng = np.random.default_rng(7)
+        for i in range(STREAMS):
+            fl.register(f"s{i}", SvdState.from_factors(
+                np.linalg.qr(rng.normal(size=(M, R)))[0],
+                np.sort(np.abs(rng.normal(size=R)))[::-1].copy(),
+                np.linalg.qr(rng.normal(size=(N, R)))[0]))
+        return fl
+
+    rng = np.random.default_rng(8)
+    events = [(f"s{i % STREAMS}", jnp.asarray(rng.normal(size=M)),
+               jnp.asarray(rng.normal(size=N))) for i in range(EVENTS)]
+
+    def digest(fl):
+        h = hashlib.sha256()
+        q = fl.query([f"s{i}" for i in range(STREAMS)], rank=R)
+        for f in ("u", "s", "v"):
+            arr = np.asarray(getattr(q, f))
+            assert arr.dtype == np.float64, arr.dtype
+            h.update(arr.tobytes())
+        return h.hexdigest()
+
+    if mode == "ref":
+        fl = build()
+        for sid, a, b in events:
+            fl.enqueue(sid, a, b)
+        print(json.dumps({"digest": digest(fl)}))
+    elif mode == "save":
+        fl = build()
+        for sid, a, b in events[:SPLIT]:
+            fl.enqueue(sid, a, b)
+        fl.save(ckpt_dir, step=SPLIT)
+        print(json.dumps({"pending": fl.pending()}))
+    elif mode == "resume":
+        step, fl = SvdFleet.restore(ckpt_dir)
+        pending = fl.pending()
+        for sid, a, b in events[SPLIT:]:
+            fl.enqueue(sid, a, b)
+        print(json.dumps({"digest": digest(fl), "step": step,
+                          "shards": fl.num_shards,
+                          "restored_pending": pending}))
+    """
+)
+
+
+def _run_sub(script, *argv, timeout=420):
+    proc = subprocess.run(
+        [sys.executable, "-c", script, *argv],
+        capture_output=True, text=True, timeout=timeout, env=SUB_ENV,
+    )
+    assert proc.returncode == 0, proc.stderr
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_kill_and_resume_bitwise_across_processes(tmp_path):
+    """Save mid-stream in one process, resume in another, finish the
+    traffic: the resumed fleet's query digest equals an uninterrupted
+    third process's — bitwise, including every pending-FIFO leaf."""
+    ref = _run_sub(_KILL_RESUME_SCRIPT, "ref", str(tmp_path))
+    saved = _run_sub(_KILL_RESUME_SCRIPT, "save", str(tmp_path))
+    assert saved["pending"] == 15
+    got = _run_sub(_KILL_RESUME_SCRIPT, "resume", str(tmp_path))
+    assert got["restored_pending"] == 15
+    assert (got["step"], got["shards"]) == (15, 3)
+    assert got["digest"] == ref["digest"]
+
+
+# ---------------------------------------------------------------------------
+# persistent compilation cache: zero-recompile failover
+# ---------------------------------------------------------------------------
+
+_CACHE_SCRIPT = textwrap.dedent(
+    """
+    import json, sys
+    import numpy as np
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    from repro.api import (SvdState, UpdatePolicy, compilation_cache_entries,
+                           enable_compilation_cache)
+    from repro.fleet import SvdFleet
+
+    mode, root = sys.argv[1], sys.argv[2]
+    cache, ckpt = root + "/cache", root + "/ckpt"
+    M, N, R, STREAMS, EVENTS = 8, 10, 3, 4, 12
+
+    def feed(fl):
+        rng = np.random.default_rng(9)
+        for i in range(EVENTS):
+            fl.enqueue(f"s{i % STREAMS}", jnp.asarray(rng.normal(size=M)),
+                       jnp.asarray(rng.normal(size=N)))
+
+    if mode == "seed":
+        enable_compilation_cache(cache)
+        fl = SvdFleet(2, policy=UpdatePolicy(method="direct"),
+                      continuous=True, max_batch=64, max_depth=4)
+        rng = np.random.default_rng(7)
+        for i in range(STREAMS):
+            fl.register(f"s{i}", SvdState.from_factors(
+                np.linalg.qr(rng.normal(size=(M, R)))[0],
+                np.sort(np.abs(rng.normal(size=R)))[::-1].copy(),
+                np.linalg.qr(rng.normal(size=(N, R)))[0]))
+        feed(fl)
+        fl.drain()
+        fl.save(ckpt, step=1)
+        print(json.dumps({"entries": compilation_cache_entries(cache)}))
+    elif mode == "resume":
+        step, fl = SvdFleet.restore(ckpt, cache_dir=cache)
+        after_restore = compilation_cache_entries(cache)
+        feed(fl)
+        fl.drain()
+        print(json.dumps({"after_restore": after_restore,
+                          "after_traffic": compilation_cache_entries(cache)}))
+    """
+)
+
+
+def test_restore_with_warm_cache_compiles_nothing_in_fresh_process(tmp_path):
+    """The failover contract: process A seeds the persistent cache (its
+    flush rounds record the warmed geometry set); process B restores with
+    ``cache_dir`` and replays identical traffic — the cache gains ZERO new
+    entries, i.e. the fresh process compiled nothing."""
+    seeded = _run_sub(_CACHE_SCRIPT, "seed", str(tmp_path))
+    assert seeded["entries"] > 0
+    got = _run_sub(_CACHE_SCRIPT, "resume", str(tmp_path))
+    assert got["after_restore"] == seeded["entries"]
+    assert got["after_traffic"] == seeded["entries"]

@@ -1,0 +1,162 @@
+"""Placement contract of the fleet tier (DESIGN.md §13): deterministic
+across processes (keyed blake2b, not the salted builtin ``hash``),
+balanced at population scale, and re-placeable as pure data.
+
+The pinned digests below are the actual blake2b values — if they ever
+change, every existing ``FleetSnapshot`` on disk would route streams to
+shards that do not hold their state, so a failure here is a data-loss
+bug, not a test to update.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.fleet import PlacementSpec, assign, plan_devices, shard_loads, shard_of
+
+REPO = Path(__file__).resolve().parent.parent
+SUB_ENV = {
+    "PYTHONPATH": str(REPO / "src"),
+    "PATH": "/usr/bin:/bin",
+    "JAX_PLATFORMS": "cpu",
+    "HOME": "/tmp",
+}
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+
+def test_shard_of_pinned_values():
+    """Exact digests, pinned forever (see module doc)."""
+    expected = {
+        "user-0": (1, 1, 1),
+        "user-1": (0, 0, 0),
+        "user-2": (0, 2, 2),
+        "stream/alpha": (0, 0, 4),
+        "": (1, 1, 5),
+    }
+    for sid, shards in expected.items():
+        got = tuple(shard_of(PlacementSpec(n), sid) for n in (2, 4, 8))
+        assert got == shards, sid
+    # the salt is part of the placement function, not decoration
+    assert shard_of(PlacementSpec(8, salt="other-salt"), "user-0") == 3
+
+
+def test_assign_matches_shard_of_in_fresh_process():
+    """A different process (different PYTHONHASHSEED) routes every id to
+    the same shard — the property a restored fleet's correctness rests on."""
+    ids = [f"stream-{i}" for i in range(50)] + ["user-0", "a/b/c", ""]
+    here = assign(PlacementSpec(8), ids)
+    script = textwrap.dedent(
+        """
+        import json, sys
+        from repro.fleet import PlacementSpec, assign
+        ids = json.loads(sys.argv[1])
+        print(json.dumps(assign(PlacementSpec(8), ids)))
+        """
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", script, json.dumps(ids)],
+        capture_output=True, text=True, timeout=420, env=SUB_ENV,
+    )
+    assert proc.returncode == 0, proc.stderr
+    there = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert there == here
+
+
+def test_assign_consistent_with_shard_loads():
+    ids = [f"s{i}" for i in range(200)]
+    spec = PlacementSpec(4)
+    a = assign(spec, ids)
+    loads = shard_loads(spec, ids)
+    assert len(loads) == 4 and sum(loads) == len(ids)
+    for sh in range(4):
+        assert loads[sh] == sum(1 for v in a.values() if v == sh)
+
+
+# ---------------------------------------------------------------------------
+# balance
+# ---------------------------------------------------------------------------
+
+
+def test_balance_10k_ids_over_8_shards():
+    """Hash uniformity is the only balancer: at 10k ids the worst shard
+    stays within 20% of the mean (binomial std dev ~sqrt(10000/8) ~ 35,
+    so 20% = ~7 sigma — a failure means the hash broke, not bad luck)."""
+    ids = [f"user-{i}" for i in range(10_000)]
+    loads = shard_loads(PlacementSpec(8), ids)
+    mean = sum(loads) / len(loads)
+    assert min(loads) > 0
+    assert max(loads) / mean <= 1.2
+
+
+# ---------------------------------------------------------------------------
+# the spec as data
+# ---------------------------------------------------------------------------
+
+
+def test_spec_replaced_and_json_roundtrip():
+    spec = PlacementSpec(2, salt="custom")
+    grown = spec.replaced(8)
+    assert (grown.num_shards, grown.salt) == (8, "custom")
+    assert spec.num_shards == 2        # frozen: replaced returns a new spec
+    back = PlacementSpec.from_json(json.loads(json.dumps(grown.to_json())))
+    assert back == grown
+    for sid in ("user-0", "user-1", "x"):
+        assert shard_of(back, sid) == shard_of(grown, sid)
+
+
+def test_spec_rejects_nonpositive_shards():
+    with pytest.raises(ValueError):
+        PlacementSpec(0)
+    with pytest.raises(ValueError):
+        PlacementSpec(1).replaced(-2)
+
+
+# ---------------------------------------------------------------------------
+# device planning
+# ---------------------------------------------------------------------------
+
+
+def test_plan_devices_round_robin():
+    devs = ["d0", "d1", "d2"]
+    assert plan_devices(5, devices=devs) == ("d0", "d1", "d2", "d0", "d1")
+    assert plan_devices(2, devices=devs) == ("d0", "d1")
+    with pytest.raises(ValueError):
+        plan_devices(2, devices=[])
+
+
+def test_plan_devices_defaults_to_live_devices():
+    import jax
+
+    plan = plan_devices(4)
+    assert len(plan) == 4
+    assert set(plan) <= set(jax.devices())
+
+
+# ---------------------------------------------------------------------------
+# properties (skipped when hypothesis is absent — conftest shim)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.text(max_size=64), st.integers(min_value=1, max_value=64))
+def test_shard_of_in_range_and_stable(sid, n):
+    spec = PlacementSpec(n)
+    sh = shard_of(spec, sid)
+    assert 0 <= sh < n
+    assert shard_of(spec, sid) == sh
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.text(max_size=64))
+def test_single_shard_absorbs_everything(sid):
+    assert shard_of(PlacementSpec(1), sid) == 0
