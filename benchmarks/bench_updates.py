@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit, time_fn
 from repro import api
 from repro.api import SvdState, UpdatePolicy
-from repro.updates import Decay, RankK, sketch_svd, sparse_sketch_svd
+from repro.updates import Decay, RankK, Window, sketch_svd, sparse_sketch_svd
 
 M, N, RANK = 32, 48, 8    # the bench_engine.py truncated geometry
 CELLS = [(16, 8), (16, 4), (8, 8)]     # (B streams, k) — first is acceptance
@@ -96,6 +96,7 @@ def run() -> dict:
 
     results["sketch"] = _bench_sketch(rng)
     results["sparse"] = _bench_sparse(rng)
+    results["window"] = _bench_window(rng)
 
     accept = results["cells"][0]
     results["acceptance"] = {
@@ -169,6 +170,41 @@ def _bench_sparse(rng) -> dict:
          f"speedup={speedup:.2f} densify_us={us_densify:.0f}")
     return {"m": m, "n": n, "k": k, "nnz": nnz, "sparse_us": us_sparse,
             "densify_us": us_densify, "speedup": speedup}
+
+
+WINDOW_M, WINDOW_N, WINDOW_RANK = 1024, 768, 8
+WINDOW_CUT = 64
+
+
+def _bench_window(rng) -> dict:
+    """Sliding-stream eviction (ISSUE 9): ``Window`` keeps the newest
+    ``m - cut`` rows of a rank-r sketch via ``cut`` state-bound rank-1
+    downdates (one ``lax.scan`` when cut >= planner._SCAN_MIN) against the
+    rebuild-from-dense alternative — materialize the decayed tail and run a
+    fresh LAPACK SVD, the only option before downdates were ops."""
+    m, n, r, cut = WINDOW_M, WINDOW_N, WINDOW_RANK, WINDOW_CUT
+    keep = m - cut
+    low = rng.normal(size=(m, r)) @ rng.normal(size=(r, n))
+    state = SvdState.from_dense(jnp.asarray(low), rank=r)
+    op = Window(keep, lam=0.97)
+
+    @jax.jit
+    def rebuild(u, s, v):
+        tail = 0.97 * (u[-keep:] * s) @ v.T
+        du, ds, dvt = jnp.linalg.svd(tail, full_matrices=False)
+        return du[:, :r], ds[:r], dvt[:r].T
+
+    us_rebuild = time_fn(
+        lambda: jax.block_until_ready(rebuild(state.u, state.s, state.v))
+    )
+    us_plan = time_fn(
+        lambda: jax.block_until_ready(api.apply(state, op, POLICY).s)
+    )
+    speedup = us_rebuild / us_plan
+    emit(f"bench_updates/window/m={m}/cut={cut}", us_plan,
+         f"speedup={speedup:.2f} rebuild_us={us_rebuild:.0f}")
+    return {"m": m, "n": n, "rank": r, "cut": cut, "planned_us": us_plan,
+            "rebuild_us": us_rebuild, "speedup": speedup}
 
 
 if __name__ == "__main__":

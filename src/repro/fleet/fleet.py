@@ -51,10 +51,13 @@ from repro.train import checkpoint as _checkpoint
 
 __all__ = ["FLEET_SNAPSHOT_VERSION", "FleetSnapshot", "SvdFleet"]
 
-# The snapshot version line is shared with serve: v1-v3 are single-service
-# ``ServiceSnapshot`` formats (DESIGN.md §9/§12); v4 is the fleet-level
-# format whose per-shard payloads are v3 service snapshots.
-FLEET_SNAPSHOT_VERSION = 4
+# The snapshot version line is shared with serve: v1-v3 and v5 are
+# single-service ``ServiceSnapshot`` formats (DESIGN.md §9/§12/§14); v4 was
+# the first fleet-level format (v3 service payloads); v6 is the fleet format
+# whose per-shard payloads are v5 service snapshots (downdate ops in the
+# FIFOs).  v4 fleet snapshots still load — the payload loader accepts any
+# service version <= 5.
+FLEET_SNAPSHOT_VERSION = 6
 _SNAPSHOT_FORMAT = "repro.fleet.FleetSnapshot"
 
 # fleet-level config a snapshot records (admission shape; devices are

@@ -27,8 +27,12 @@ and flushes *one batched engine call* per round:
   events stay whole too (snapshots carry their COO leaves bitwise) but
   expand into their rank-1 pairs at the head of a flush round — the
   deterministic sketch makes pre/post-snapshot expansion bitwise identical
-  — so sparse events batch into rounds like every other pair.
-  Snapshots (v3) carry ops bitwise (``pending_ops``/``pending_order``).
+  — so sparse events batch into rounds like every other pair.  Downdates
+  (``RemoveRows``/``RemoveCols``/``Window``) stay whole like appends —
+  geometry-shrinking, validated against the stream's effective shape at
+  enqueue, planned onto the rank-1 engine at flush (GDPR-style "forget
+  these rows now" across per-user streams).
+  Snapshots (v3+) carry ops bitwise (``pending_ops``/``pending_order``).
 * Cold-start control: every flush records its ``(kind, geometry)`` in the
   warmed set; snapshots persist it and ``restore`` eagerly ``api.warmup``s
   each entry, so the first post-failover flush never compiles under
@@ -103,7 +107,10 @@ __all__ = [
     "SvdServiceStats",
 ]
 
-SNAPSHOT_VERSION = 3
+# v4 is NOT a service format: the fleet tier's FleetSnapshot (which embeds
+# per-shard ServiceSnapshots) took 4 on the shared version line — see
+# ``repro.fleet.fleet.FLEET_SNAPSHOT_VERSION`` and DESIGN.md §14's table.
+SNAPSHOT_VERSION = 5
 _SNAPSHOT_FORMAT = "repro.serve.ServiceSnapshot"
 
 # UpdatePolicy fields a snapshot records verbatim. ``mesh`` is deliberately
@@ -203,7 +210,14 @@ class ServiceSnapshot:
     structural change, so v1/v2 snapshots load as v3 unchanged (the sketch
     knobs fall back to their ``UpdatePolicy`` defaults); the bump exists so
     pre-sparse builds refuse v3 snapshots cleanly instead of failing inside
-    ``skeleton_from_spec``.
+    ``skeleton_from_spec``.  v3 -> v5 added downdate op events
+    (``RemoveRows``/``RemoveCols``/``Window``) riding ``pending_ops`` —
+    Remove ops are pure metadata (zero leaves; indices live in the aux
+    spec), ``Window`` carries its ``lam`` leaf — again no structural change,
+    so v1–v3 snapshots load unchanged; pre-downdate builds refuse v5
+    cleanly.  v4 was never a service format (the fleet tier's
+    ``FleetSnapshot`` took it on the shared version line), so the service
+    skips from 3 to 5.
     """
 
     states: tuple          # tuple[SvdState, ...] — diagnostics-free, per stream
@@ -469,6 +483,10 @@ class SvdService:
                 m += step[1]
             elif step[0] == "pad_cols":
                 n += step[1]
+            elif step[0] == "drop_rows":
+                m -= len(step[1])
+            elif step[0] == "drop_cols":
+                n -= len(step[1])
             elif step[0] in ("rank1", "rank1_scan"):
                 # scan steps dispatch the same truncated geometry (the k-loop
                 # is inside the executable), so one warm record covers both
@@ -593,8 +611,9 @@ class SvdService:
         ``RankK`` becomes k pairs (a "rank-k flush bucket": k flush rounds,
         each batched with the other streams' heads), ``DenseDelta`` sketches
         into ``rank`` pairs, ``Compose`` decomposes child-by-child.
-        Geometry-changing ops (appends) and ``Decay`` stay whole as op
-        events: appends re-plan the stream's geometry at flush; decay folds
+        Geometry-changing ops (appends and the ``RemoveRows`` /
+        ``RemoveCols`` / ``Window`` downdates) and ``Decay`` stay whole as
+        op events: they re-plan the stream's geometry at flush; decay folds
         into the singular values without an engine dispatch.  ``Sparse``
         deltas also stay whole — snapshots then carry their O(nnz) COO
         leaves bitwise instead of sketched pairs — and expand into their
@@ -674,6 +693,29 @@ class SvdService:
                     f"geometry ({m}, {n})"
                 )
             return [("op", op)], op.out_shape(m, n)
+        if isinstance(op, (_ops.RemoveRows, _ops.RemoveCols, _ops.Window)):
+            # downdates stay whole like appends (geometry-changing; zero or
+            # one data leaf, so snapshots carry them bitwise for free) —
+            # reject bad indices HERE, not at flush, where a poisoned event
+            # would stay queued forever under the failure-atomicity contract
+            if isinstance(op, _ops.RemoveRows) and op.idx[-1] >= m:
+                raise ValueError(
+                    f"RemoveRows{op.idx} out of range for stream {sid!r} "
+                    f"geometry ({m}, {n})"
+                )
+            if isinstance(op, _ops.RemoveCols) and op.idx[-1] >= n:
+                raise ValueError(
+                    f"RemoveCols{op.idx} out of range for stream {sid!r} "
+                    f"geometry ({m}, {n})"
+                )
+            out = op.out_shape(m, n)
+            rank = self._streams[sid].rank
+            if rank > min(out):
+                raise ValueError(
+                    f"{type(op).__name__} shrinks stream {sid!r} to {out}, "
+                    f"below its rank {rank} — truncate first"
+                )
+            return [("op", op)], out
         return [("op", op)], op.out_shape(m, n)   # Decay and future scalars
 
     def _expand_sparse_head(self, sid: str) -> None:

@@ -1,8 +1,9 @@
 """``repro.updates`` — structured perturbations lowered onto the rank-1
 engine (DESIGN.md §10).
 
-Declarative ops (``RankK``, ``AppendRows``/``AppendCols``, ``DenseDelta``,
-``Sparse``, ``Decay``, ``Compose``) with exact dense reference semantics,
+Declarative ops (``RankK``, ``AppendRows``/``AppendCols``,
+``RemoveRows``/``RemoveCols``, ``Window``, ``DenseDelta``, ``Sparse``,
+``Decay``, ``Compose``) with exact dense reference semantics,
 and a planner that compiles any of them into a minimal schedule of
 plan-cached ``repro.api`` rank-1 dispatches.  All low-rank extraction runs
 through the randomized range-finder in ``repro.updates.sketch`` (no dense
@@ -27,8 +28,11 @@ from repro.updates.ops import (
     Decay,
     DenseDelta,
     RankK,
+    RemoveCols,
+    RemoveRows,
     Sparse,
     UpdateOp,
+    Window,
     skeleton_from_spec,
     spec_from_json,
     spec_to_json,
@@ -57,8 +61,11 @@ __all__ = [
     "Decay",
     "DenseDelta",
     "RankK",
+    "RemoveCols",
+    "RemoveRows",
     "Sparse",
     "UpdateOp",
+    "Window",
     "apply",
     "apply_many",
     "factored_svd",

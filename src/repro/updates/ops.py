@@ -22,6 +22,14 @@ Ops:
   ``kernels.sparse_proj``), never densifying m x n.
 * ``Decay(lam)`` — ``lam * A``; folds into the singular values for free
   (zero engine dispatches).
+* ``RemoveRows(idx)`` / ``RemoveCols(idx)`` — *downdates*: delete rows /
+  columns by static index.  Each deletion is the dual rank-1 perturbation
+  (Peña & Sauer, arXiv:1809.03285): zero the slice via ``A - (A e_j) e_j^T``
+  on the existing rank-1 engine, then drop the zeroed row of the factor —
+  a free geometry shrink, no LAPACK SVD anywhere.
+* ``Window(size)`` — sliding-window convenience: keep the last ``size``
+  rows (optionally decayed by ``lam``); lowers to
+  ``Compose(Decay, RemoveRows(oldest...))``.
 * ``Compose(ops)`` — apply a tuple of ops left-to-right.
 
 Every op also carries:
@@ -49,6 +57,7 @@ array([[1.5, 1.5, 1.5],
 from __future__ import annotations
 
 import dataclasses
+import operator
 from functools import partial
 
 import jax
@@ -61,12 +70,38 @@ __all__ = [
     "Decay",
     "DenseDelta",
     "RankK",
+    "RemoveCols",
+    "RemoveRows",
     "Sparse",
     "UpdateOp",
+    "Window",
     "skeleton_from_spec",
     "spec_from_json",
     "spec_to_json",
 ]
+
+
+def _normalize_idx(idx, what: str) -> tuple:
+    """Sorted tuple of unique non-negative ints (static meta — keys the
+    schedule cache and serializes into snapshot aux)."""
+    try:
+        idx = (operator.index(idx),)
+    except TypeError:
+        pass
+    try:
+        out = tuple(int(i) for i in idx)
+    except TypeError:
+        raise TypeError(f"{what} takes an int or a sequence of ints; "
+                        f"got {idx!r}") from None
+    if not out:
+        raise ValueError(f"{what} needs at least one index")
+    if any(i < 0 for i in out):
+        raise ValueError(f"{what} indices must be non-negative; got {out}")
+    if len(set(out)) != len(out):
+        # duplicates would double-subtract under the rank-1 lowering
+        # (zeroing an already-zeroed slice negates instead of removing)
+        raise ValueError(f"{what} indices must be unique; got {out}")
+    return tuple(sorted(out))
 
 
 class UpdateOp:
@@ -352,6 +387,131 @@ class Decay(UpdateOp):
         return ("decay",)
 
 
+@partial(jax.tree_util.register_dataclass, data_fields=[], meta_fields=["idx"])
+@dataclasses.dataclass(frozen=True)
+class RemoveRows(UpdateOp):
+    """Delete rows ``idx`` (static, unique, sorted): the downdate dual of
+    ``AppendRows``.  Lowering zeroes each row on the rank-1 engine
+    (``A - e_i (A^T e_i)^T`` — the pair is precomputable from the *original*
+    factors because zeroing row ``i`` leaves every other row untouched),
+    then drops the zeroed rows of ``u`` for free.  Carries no array data:
+    the whole op is static metadata.
+
+    >>> import numpy as np
+    >>> op = RemoveRows((2, 0))
+    >>> op.idx, op.spec(), op.out_shape(4, 3)
+    ((0, 2), ('remove_rows', (0, 2)), (2, 3))
+    >>> np.asarray(op.apply_dense(np.arange(12.0).reshape(4, 3)))
+    array([[ 3.,  4.,  5.],
+           [ 9., 10., 11.]])
+    """
+
+    idx: tuple
+
+    def __post_init__(self):
+        object.__setattr__(self, "idx", _normalize_idx(self.idx, "RemoveRows"))
+
+    @property
+    def p(self) -> int:
+        """Number of removed rows."""
+        return len(self.idx)
+
+    def apply_dense(self, a_mat):
+        a_mat = jnp.asarray(a_mat)
+        if self.idx[-1] >= a_mat.shape[-2]:
+            raise ValueError(
+                f"RemoveRows{self.idx} out of range for {a_mat.shape[-2]} rows"
+            )
+        return jnp.delete(a_mat, jnp.array(self.idx), axis=-2)
+
+    def out_shape(self, m: int, n: int) -> tuple[int, int]:
+        return (m - self.p, n)
+
+    def spec(self) -> tuple:
+        return ("remove_rows", self.idx)
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=[], meta_fields=["idx"])
+@dataclasses.dataclass(frozen=True)
+class RemoveCols(UpdateOp):
+    """Delete columns ``idx``: the downdate dual of ``AppendCols`` (the
+    ``SVD.remove_column`` algebra, batched and LAPACK-free — each deletion is
+    ``A - (A e_j) e_j^T`` on the rank-1 engine, then a free shrink of ``v``).
+
+    >>> import numpy as np
+    >>> op = RemoveCols(1)
+    >>> op.idx, op.spec(), op.out_shape(2, 3)
+    ((1,), ('remove_cols', (1,)), (2, 2))
+    >>> np.asarray(op.apply_dense(np.arange(6.0).reshape(2, 3)))
+    array([[0., 2.],
+           [3., 5.]])
+    """
+
+    idx: tuple
+
+    def __post_init__(self):
+        object.__setattr__(self, "idx", _normalize_idx(self.idx, "RemoveCols"))
+
+    @property
+    def p(self) -> int:
+        """Number of removed columns."""
+        return len(self.idx)
+
+    def apply_dense(self, a_mat):
+        a_mat = jnp.asarray(a_mat)
+        if self.idx[-1] >= a_mat.shape[-1]:
+            raise ValueError(
+                f"RemoveCols{self.idx} out of range for {a_mat.shape[-1]} cols"
+            )
+        return jnp.delete(a_mat, jnp.array(self.idx), axis=-1)
+
+    def out_shape(self, m: int, n: int) -> tuple[int, int]:
+        return (m, n - self.p)
+
+    def spec(self) -> tuple:
+        return ("remove_cols", self.idx)
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=["lam"],
+         meta_fields=["size"])
+@dataclasses.dataclass(frozen=True)
+class Window(UpdateOp):
+    """Sliding-window convenience: keep the LAST ``size`` rows (rows append
+    at the bottom, so the oldest stream entries leave first), with an
+    optional forgetting factor ``lam`` on the survivors.  Lowers to
+    ``Compose(Decay(lam), RemoveRows(range(m - size)))`` — a decay fold plus
+    one planned downdate per evicted row; a no-op shrink when the state
+    already fits (``m <= size``).
+
+    >>> import numpy as np
+    >>> op = Window(2)
+    >>> op.spec(), op.out_shape(5, 3), op.out_shape(1, 3)
+    (('window', 2), (2, 3), (1, 3))
+    >>> np.asarray(Window(2, lam=0.5).apply_dense(np.arange(8.0).reshape(4, 2)))
+    array([[2. , 2.5],
+           [3. , 3.5]])
+    """
+
+    size: int
+    lam: jax.Array | float = 1.0
+
+    def __post_init__(self):
+        if not isinstance(self.size, int) or self.size < 1:
+            raise ValueError(f"window size must be an int >= 1; got {self.size}")
+
+    def apply_dense(self, a_mat):
+        a_mat = jnp.asarray(a_mat)
+        m = a_mat.shape[-2]
+        kept = a_mat[..., max(0, m - self.size):, :]
+        return jnp.asarray(self.lam) * kept
+
+    def out_shape(self, m: int, n: int) -> tuple[int, int]:
+        return (min(m, self.size), n)
+
+    def spec(self) -> tuple:
+        return ("window", self.size)
+
+
 @partial(jax.tree_util.register_dataclass, data_fields=["ops"], meta_fields=[])
 @dataclasses.dataclass(frozen=True)
 class Compose(UpdateOp):
@@ -427,6 +587,12 @@ def skeleton_from_spec(spec: tuple) -> UpdateOp:
         return Sparse(rows=0.0, cols=0.0, vals=0.0, rank=spec[2])
     if kind == "decay":
         return Decay(lam=0.0)
+    if kind == "remove_rows":
+        return RemoveRows(spec[1])
+    if kind == "remove_cols":
+        return RemoveCols(spec[1])
+    if kind == "window":
+        return Window(size=spec[1], lam=0.0)
     if kind == "compose":
         return Compose(tuple(skeleton_from_spec(c) for c in spec[1]))
     raise ValueError(f"unknown op spec {spec!r}")

@@ -251,7 +251,7 @@ def test_snapshot_v2_roundtrips_structured_events_bitwise(tmp_path):
     ref = build()
     svc = build()
     snap = svc.snapshot()
-    assert snap.version == SNAPSHOT_VERSION == 3
+    assert snap.version == SNAPSHOT_VERSION
     assert "o" in "".join(snap.pending_order)      # structured events present
     svc.save(tmp_path, step=1)
     _, restored = SvdService.restore(tmp_path)
@@ -332,7 +332,7 @@ def test_snapshot_v3_sparse_pending_bitwise(tmp_path):
     ref = build()
     svc = build()
     snap = svc.snapshot()
-    assert snap.version == SNAPSHOT_VERSION == 3
+    assert snap.version == SNAPSHOT_VERSION
     assert "o" in "".join(snap.pending_order)
     # the COO value vector is carried bitwise as a pending_ops leaf
     assert any(
@@ -586,6 +586,179 @@ def test_kill_and_resume_bitwise(tmp_path, sharded):
         assert out_full["devices"] == out_res["devices"] == 8
 
     a, b = np.load(full_npz), np.load(resumed_npz)
+    assert sorted(a.files) == sorted(b.files)
+    for k in a.files:
+        np.testing.assert_allclose(a[k], b[k], rtol=0, atol=0)
+        assert a[k].dtype == np.float64
+
+
+# ---------------------------------------------------------------------------
+# snapshot v5: pending downdates (RemoveRows / RemoveCols / Window)
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_v5_downdate_pending_bitwise(tmp_path):
+    """Queued Remove/Window ops ride the snapshot whole — Remove ops are
+    pure metadata (zero array leaves; indices live in the aux spec), Window
+    carries only its ``lam`` leaf — and the post-restore drain matches the
+    uninterrupted service bitwise.  ISSUE 9 acceptance."""
+    from repro.updates import RemoveCols, RemoveRows, Window
+
+    m, n, r = 8, 10, 3
+
+    def build():
+        rng = np.random.default_rng(41)
+        svc = SvdService(max_batch=16)
+        svc.register("x", _fresh(m, n, r, np.random.default_rng(40)))
+        svc.enqueue("x", jnp.asarray(rng.normal(size=m)),
+                    jnp.asarray(rng.normal(size=n)))
+        svc.enqueue_op("x", RemoveRows((0, 5)))
+        svc.enqueue_op("x", RemoveCols(2))
+        svc.enqueue_op("x", Window(5, lam=0.9))
+        # a post-shrink pair: the snapshot wraps it as a k=1 RankK leaf
+        svc.enqueue("x", jnp.asarray(rng.normal(size=5)),
+                    jnp.asarray(rng.normal(size=n - 1)))
+        return svc
+
+    ref = build()
+    svc = build()
+    assert svc._effective_shape("x") == (5, n - 1)
+    snap = svc.snapshot()
+    assert snap.version == SNAPSHOT_VERSION == 5
+    assert "".join(snap.pending_order) == "pooo" + "o"
+    # downdate indices live in the aux spec (metadata), not in array leaves
+    specs = json.dumps(snap.aux())
+    assert "remove_rows" in specs and "window" in specs
+    svc.save(tmp_path, step=1)
+    _, restored = SvdService.restore(tmp_path)
+    assert restored.pending("x") == ref.pending("x")
+    assert restored._effective_shape("x") == (5, n - 1)
+
+    ref.drain()
+    restored.drain()
+    assert restored.state("x").shape == (5, n - 1)
+    _exact_states(ref, restored, ["x"])
+    assert restored.stats.ops_applied == ref.stats.ops_applied == 3
+
+
+def test_snapshot_v3_loads_as_v5():
+    """Pre-downdate (v3) snapshots still load: the downdate bump added no
+    structural change, so a v3-stamped snapshot restores unchanged."""
+    from repro.updates import Decay
+
+    svc = SvdService(max_batch=4)
+    svc.register("x", _fresh(6, 7, 2))
+    svc.enqueue("x", jnp.zeros(6), jnp.zeros(7))
+    svc.enqueue_op("x", Decay(0.9))
+    old = dataclasses.replace(svc.snapshot(), version=3)
+    restored = SvdService.from_snapshot(old)
+    assert restored.pending("x") == 2
+    restored.drain()
+    np.testing.assert_allclose(
+        np.asarray(restored.state("x").s),
+        0.9 * np.asarray(svc.state("x").s), rtol=0, atol=0)
+
+
+def test_snapshot_v3_aux_refuses_v5_and_loads_older(tmp_path):
+    """Version discipline on disk: a v3-stamped file loads (<= 5), a
+    v6-stamped ServiceSnapshot is refused — the fleet owns v6."""
+    svc = SvdService(max_batch=4)
+    svc.register("x", _fresh(6, 7, 2))
+    old = dataclasses.replace(svc.snapshot(), version=3)
+    old.save(tmp_path / "v3", step=1)
+    _, loaded = ServiceSnapshot.load(tmp_path / "v3")
+    assert loaded.states[0].shape == (6, 7)
+    fleet_stamped = dataclasses.replace(svc.snapshot(), version=6)
+    fleet_stamped.save(tmp_path / "v6", step=1)
+    with pytest.raises(ValueError, match="newer"):
+        ServiceSnapshot.load(tmp_path / "v6")
+
+
+_DOWNDATE_KILL_RESUME_SCRIPT = textwrap.dedent("""
+    import json, sys
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np, jax.numpy as jnp
+    from repro.core.svd_update import TruncatedSvd
+    from repro.serve import SvdService
+    from repro.updates import RemoveRows, Window
+
+    mode, ckpt_dir, out_npz = sys.argv[1:4]
+
+    rng = np.random.default_rng(9)
+    M, N, R, S = 8, 10, 3, 3
+    streams = [TruncatedSvd(
+        jnp.asarray(np.linalg.qr(rng.normal(size=(M, R)))[0]),
+        jnp.asarray(np.sort(np.abs(rng.normal(size=R)))[::-1].copy()),
+        jnp.asarray(np.linalg.qr(rng.normal(size=(N, R)))[0]),
+    ) for _ in range(S)]
+    pre = [rng.normal(size=(S, M)), rng.normal(size=(S, N))]
+    post = [rng.normal(size=(S, 5)), rng.normal(size=(S, N))]
+
+    def feed_pre(svc):
+        for i in range(S):
+            svc.enqueue(f"s{i}", jnp.asarray(pre[0][i]), jnp.asarray(pre[1][i]))
+            svc.enqueue_op(f"s{i}", RemoveRows((1, 6)))
+            svc.enqueue_op(f"s{i}", Window(5, lam=0.95))
+
+    def feed_post(svc):
+        for i in range(S):
+            svc.enqueue(f"s{i}", jnp.asarray(post[0][i]), jnp.asarray(post[1][i]))
+
+    if mode == "resume":
+        step, svc = SvdService.restore(ckpt_dir)
+        assert svc.pending() == 3 * S          # deletions still queued
+        feed_post(svc)
+        svc.drain()
+    else:
+        # max_batch > S: enqueue never autoflushes, so the save-mode snapshot
+        # really does carry every downdate still PENDING in the FIFOs
+        svc = SvdService(max_batch=64, max_in_flight=2)
+        for i, t in enumerate(streams):
+            svc.register(f"s{i}", t)
+        feed_pre(svc)
+        if mode == "save":
+            svc.save(ckpt_dir, step=1)         # downdates pending, unflushed
+            print(json.dumps({"pending": svc.pending()}))
+            sys.exit(0)
+        feed_post(svc)
+        svc.drain()
+
+    np.savez(out_npz, **{f"s{i}_{f}": np.asarray(getattr(svc.state(f"s{i}"), f))
+                         for i in range(S) for f in ("u", "s", "v")})
+    print(json.dumps({"ok": True, "shape": list(svc.state("s0").shape)}))
+""")
+
+
+def test_downdate_kill_and_resume_bitwise_across_processes(tmp_path):
+    """Snapshot taken with Remove/Window ops still PENDING, restored in a
+    fresh process: the resumed run (which flushes the deletions and then
+    post-shrink traffic) is bitwise identical to an uninterrupted one."""
+    env = {
+        "PYTHONPATH": str(REPO / "src"),
+        "PATH": "/usr/bin:/bin",
+        "JAX_PLATFORMS": "cpu",
+        "HOME": "/tmp",
+    }
+
+    def run(mode, out):
+        proc = subprocess.run(
+            [sys.executable, "-c", _DOWNDATE_KILL_RESUME_SCRIPT,
+             mode, str(tmp_path / "ckpt"), str(out)],
+            capture_output=True, text=True, timeout=420, env=env,
+        )
+        assert proc.returncode == 0, f"{mode} stderr:\n{proc.stderr[-4000:]}"
+        return json.loads(proc.stdout.strip().splitlines()[-1])
+
+    out_full = run("full", tmp_path / "full.npz")
+    assert out_full["shape"] == [5, 10]        # deletions took effect
+    save_info = run("save", tmp_path / "full.npz")
+    assert save_info["pending"] == 9           # 3 events x 3 streams queued
+    out_res = run("resume", tmp_path / "resumed.npz")
+    assert out_res["shape"] == [5, 10]
+
+    a = np.load(tmp_path / "full.npz")
+    b = np.load(tmp_path / "resumed.npz")
     assert sorted(a.files) == sorted(b.files)
     for k in a.files:
         np.testing.assert_allclose(a[k], b[k], rtol=0, atol=0)

@@ -619,7 +619,8 @@ def test_no_dense_svd_call_on_lowering_paths():
     """ISSUE 7 acceptance: zero ``jnp.linalg.svd`` call sites on the
     DenseDelta/Sparse/serve lowering path (compression's agree_tracker and
     ``SvdState.from_dense`` are exempt by charter)."""
-    for rel in ("src/repro/updates/planner.py",
+    for rel in ("src/repro/updates/ops.py",
+                "src/repro/updates/planner.py",
                 "src/repro/updates/sketch.py",
                 "src/repro/serve/svd_service.py",
                 "src/repro/kernels/sparse_proj.py"):
