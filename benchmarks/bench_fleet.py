@@ -47,7 +47,8 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from benchmarks.common import emit, open_loop
+from benchmarks.common import bench_metadata, emit, open_loop
+from repro import obs
 from repro.api import SvdState, UpdatePolicy
 from repro.fleet import SvdFleet
 from repro.serve import SvdService
@@ -239,9 +240,26 @@ def bench_latency(single_rate_hz: float) -> dict:
 
 
 def run() -> dict:
+    # metrics on for every arm (uniform cost, so arm ratios are untouched):
+    # per-shard serve_* gauges, fleet_* rollups and the emit() bench_us rows
+    # all land in one registry the summary can count.
+    obs.enable()
     throughput = bench_throughput()
     latency = bench_latency(throughput["single"]["events_per_s"])
+    reg = obs.registry()
+    shard_series = sorted({
+        dict(m.labels)["shard"] for m in reg.series()
+        if "shard" in dict(m.labels)
+    })
+    obs_block = {
+        "series": len(reg.series()),
+        "shards_reporting": shard_series,
+        "fleet_applied": reg.aggregate("fleet_applied"),
+    }
+    obs.disable()
     summary = {
+        "meta": bench_metadata(),
+        "obs": obs_block,
         "m": M, "n": N, "rank": RANK,
         "streams": STREAMS, "rounds": ROUNDS, "max_depth": MAX_DEPTH,
         "open_events": OPEN_EVENTS, "load_fraction": LOAD,

@@ -31,8 +31,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
-from repro import api
+from benchmarks.common import bench_metadata, emit, time_fn
+from repro import api, obs
 from repro.api import SvdState, UpdatePolicy
 from repro.updates import Decay, RankK, Window, sketch_svd, sparse_sketch_svd
 
@@ -68,7 +68,11 @@ def _naive(states, ops, k):
 
 def run() -> dict:
     rng = np.random.default_rng(0)
-    results: dict = {"m": M, "n": N, "rank": RANK, "cells": []}
+    # metrics on for the whole run: emit() rows double as bench_us gauges
+    # and the planner's schedule-cache counters land in the summary.
+    obs.enable()
+    results: dict = {"meta": bench_metadata(),
+                     "m": M, "n": N, "rank": RANK, "cells": []}
 
     for b, k in CELLS:
         states, ops = _problem(rng, b, k)
@@ -114,6 +118,15 @@ def run() -> dict:
         "measured_speedup": results["sparse"]["speedup"],
         "pass": results["sparse"]["speedup"] >= 5.0,
     }
+    reg = obs.registry()
+    results["obs"] = {
+        "planner_schedule_cache_hits":
+            getattr(reg.get("planner_schedule_cache_hits"), "value", 0),
+        "planner_schedule_cache_misses":
+            getattr(reg.get("planner_schedule_cache_misses"), "value", 0),
+        "bench_rows": sum(1 for m in reg.series() if m.name == "bench_us"),
+    }
+    obs.disable()
     OUT.write_text(json.dumps(results, indent=1))
     return results
 

@@ -1,14 +1,32 @@
-"""Shared benchmark helpers: timing, CSV emission, and the open-loop
-latency harness (Poisson arrivals + enqueue-to-visible percentiles) used by
-bench_serve and bench_fleet."""
+"""Shared benchmark helpers: timing, CSV emission, the environment stamp
+every BENCH_*.json carries, and the open-loop latency harness (Poisson
+arrivals + enqueue-to-visible percentiles) used by bench_serve and
+bench_fleet."""
 
 from __future__ import annotations
 
+import datetime
 import time
 
 import numpy as np
 
 import jax
+
+from repro import obs as _obs
+
+
+def bench_metadata() -> dict:
+    """The environment block stamped into every BENCH_*.json (DESIGN.md
+    §15): enough to tell two artifacts apart without rerunning them."""
+    dev = jax.devices()[0]
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": dev.device_kind,
+        "device_count": jax.device_count(),
+        "timestamp_utc": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+    }
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 7) -> float:
@@ -42,7 +60,12 @@ def time_host_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 
 
 def emit(name: str, us: float, derived: str = "") -> None:
+    """One CSV result row; with ``repro.obs`` enabled the row is also
+    recorded as a ``bench_us{bench=name}`` gauge so benchmark results and
+    runtime telemetry share one export surface."""
     print(f"{name},{us:.1f},{derived}", flush=True)
+    if _obs.enabled():
+        _obs.registry().gauge("bench_us", bench=name).set(us)
 
 
 # ---------------------------------------------------------------------------

@@ -64,6 +64,14 @@ class UpdatePolicy:
     Truncation rule:
       truncate_to  keep only the top-r triplets of every result (None = keep all)
 
+    Observability (``repro.obs``, DESIGN.md §15):
+      health_every  sample the numerical-health probes every N flush rounds
+                    in the serve/fleet tiers (None = never).  Purely a
+                    monitoring cadence — probes run OUTSIDE the update's
+                    traced path, so this knob is deliberately NOT part of
+                    ``engine_key``: it can never cause a recompile or
+                    change a result.
+
     Policies are plain frozen dataclasses — build once, ``replace`` to vary:
 
     >>> from repro.api import UpdatePolicy
@@ -89,6 +97,7 @@ class UpdatePolicy:
     mesh: Any = None
     batch_axis: str = "data"
     truncate_to: int | None = None
+    health_every: int | None = None
 
     def __post_init__(self):
         if self.method not in METHODS:
@@ -102,6 +111,10 @@ class UpdatePolicy:
         if self.sketch_power_iters < 0:
             raise ValueError(
                 f"sketch_power_iters must be >= 0; got {self.sketch_power_iters}"
+            )
+        if self.health_every is not None and self.health_every < 1:
+            raise ValueError(
+                f"health_every must be >= 1 or None; got {self.health_every}"
             )
         if self.storage_dtype is not None:
             # canonicalize to np.dtype: hashable, comparable, serializable

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec
 
+from repro import obs as _obs
 from repro.core.svd_update import (
     SvdUpdateResult,
     TruncatedSvd,
@@ -175,14 +176,19 @@ class SvdEngine:
     def _entry(self, key: tuple, build: Callable[[], Callable]) -> _CacheEntry:
         with self._lock:
             ent = self._cache.get(key)
-            if ent is None:
+            hit = ent is not None
+            if hit:
+                self._hits += 1
+            else:
                 self._misses += 1
                 ent = _CacheEntry(fn=build())
                 self._cache[key] = ent
-            else:
-                self._hits += 1
             ent.calls += 1
-            return ent
+        if _obs.enabled():
+            _obs.registry().counter(
+                "engine_plan_cache_hits" if hit else "engine_plan_cache_misses"
+            ).inc()
+        return ent
 
     def _constrain(self, *arrays: jax.Array) -> tuple:
         if self.sharding is None:
@@ -566,7 +572,9 @@ class SvdEngine:
             key = _geometry(kind, *args)
             ent = self._entry(key, build)
             if ent.compiled is None:
-                ent.compiled = ent.fn.lower(*args).compile()
+                with _obs.span("aot_warmup", kind=kind, batch=batch or 0,
+                               m=m, n=n, k=k or 0):
+                    ent.compiled = ent.fn.lower(*args).compile()
         else:
             pair = (sds(*vshape(m)), sds(*vshape(n)))
             if batch is None:
@@ -582,7 +590,9 @@ class SvdEngine:
             key = _geometry(kind, *leaves, *pair)
             ent = self._entry(key, build)
             if ent.compiled is None:
-                ent.compiled = ent.fn.lower(TruncatedSvd(*leaves), *pair).compile()
+                with _obs.span("aot_warmup", kind=kind, batch=batch or 0,
+                               m=m, n=n, rank=rank, k=k or 0):
+                    ent.compiled = ent.fn.lower(TruncatedSvd(*leaves), *pair).compile()
         return ent
 
 

@@ -45,13 +45,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import obs as _obs
 from repro.api import UpdatePolicy
 from repro.api.policy import policy_from_legacy
 from repro.api.state import SvdState, like_container as _like
 from repro.api.update import engine_from_key
 from repro.core.engine import SvdEngine, stack_trees, unstack_tree
 from repro.core.svd_update import TruncatedSvd
-from repro.dist.collectives import all_gather_tsvd
+from repro.dist.collectives import all_gather_tsvd, factor_wire_bytes
 from repro.updates.ops import AppendRows
 from repro.updates.planner import apply as _planned_apply
 
@@ -250,28 +251,49 @@ def merge_tree(
         if len(geoms) == 1:
             shards, real_rows = _pad_to_pow2(shards)
 
+    level = 0
     while len(shards) > 1:
         pairs = [(shards[i], shards[i + 1]) for i in range(0, len(shards) - 1, 2)]
         tail = [shards[-1]] if len(shards) % 2 else []
         geoms = {(p[0].u.shape, p[1].u.shape) for p in pairs}
         merged: list = []
-        if len(geoms) == 1:
-            a_stack = stack_trees([TruncatedSvd(p[0].u, p[0].s, p[0].v) for p in pairs])
-            b_stack = stack_trees([TruncatedSvd(p[1].u, p[1].s, p[1].v) for p in pairs])
-            cores = _merge_cores_batched(a_stack, b_stack, engine)
-            merged = [
-                _combine_bases(p[0], p[1], unstack_tree(cores, j), rank)
-                for j, p in enumerate(pairs)
-            ]
-        elif explicit_engine is not None:
-            # caller-managed engine: the planner resolves engines from the
-            # policy only, so keep the small-core pairwise path
-            merged = [merge_pair(x, y, rank=rank, engine=engine) for x, y in pairs]
-        else:
-            # genuinely unequal shard heights: each pair is an AppendRows
-            # lowering through the structured-update planner
-            merged = [merge_append(x, y, rank=rank, policy=pol) for x, y in pairs]
+        # wire accounting for the trace: what this level's factor exchange
+        # would cost over the wire (first pair's geometry as representative)
+        wires = factor_wire_bytes(
+            int(pairs[0][0].u.shape[0]) + int(pairs[0][1].u.shape[0]),
+            int(pairs[0][0].v.shape[0]),
+            rank,
+            n_workers=len(pairs) * 2,
+            itemsize=pairs[0][0].u.dtype.itemsize,
+        )
+        with _obs.span("merge_level", level=level, pairs=len(pairs),
+                       batched=len(geoms) == 1, **wires):
+            if len(geoms) == 1:
+                a_stack = stack_trees([TruncatedSvd(p[0].u, p[0].s, p[0].v) for p in pairs])
+                b_stack = stack_trees([TruncatedSvd(p[1].u, p[1].s, p[1].v) for p in pairs])
+                cores = _merge_cores_batched(a_stack, b_stack, engine)
+                merged = [
+                    _combine_bases(p[0], p[1], unstack_tree(cores, j), rank)
+                    for j, p in enumerate(pairs)
+                ]
+            elif explicit_engine is not None:
+                # caller-managed engine: the planner resolves engines from the
+                # policy only, so keep the small-core pairwise path
+                merged = [merge_pair(x, y, rank=rank, engine=engine) for x, y in pairs]
+            else:
+                # genuinely unequal shard heights: each pair is an AppendRows
+                # lowering through the structured-update planner
+                merged = [merge_append(x, y, rank=rank, policy=pol) for x, y in pairs]
+        if _obs.enabled():
+            reg = _obs.registry()
+            reg.counter("merge_levels").inc()
+            reg.counter("merge_pairs").inc(len(pairs))
+            reg.counter("merge_wire_bytes",
+                        kind="factor_allgather").inc(int(wires["factor_allgather"]))
+            reg.counter("merge_wire_bytes",
+                        kind="dense_allreduce").inc(int(wires["dense_allreduce"]))
         shards = merged + tail
+        level += 1
 
     out = shards[0]
     if real_rows is not None and out.u.shape[0] != real_rows:

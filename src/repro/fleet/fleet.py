@@ -25,8 +25,8 @@ round reductions in different orders, so cross-topology comparisons of
 flush-applied states are exact only to ulp-level tolerance — the
 same-composition replay guarantees (snapshot restore) remain bitwise.
 
-``FleetSnapshot`` (snapshot **v4**) captures the whole tier — one
-``ServiceSnapshot`` (v3 payload) per shard plus the placement spec — and
+``FleetSnapshot`` (snapshot **v8**) captures the whole tier — one
+``ServiceSnapshot`` (v7 payload) per shard plus the placement spec — and
 restores bitwise, kill-and-resume, across processes.  Because placement is
 pure data, restore accepts a DIFFERENT shard count: ``regrouped`` re-places
 every stream's leaves (state + pending FIFO, moved wholesale and bitwise)
@@ -41,6 +41,7 @@ from functools import partial
 
 import jax
 
+from repro import obs as _obs
 from repro.api import UpdatePolicy
 from repro.api.state import SvdState
 from repro.dist.merge import merge_tree
@@ -51,13 +52,14 @@ from repro.train import checkpoint as _checkpoint
 
 __all__ = ["FLEET_SNAPSHOT_VERSION", "FleetSnapshot", "SvdFleet"]
 
-# The snapshot version line is shared with serve: v1-v3 and v5 are
-# single-service ``ServiceSnapshot`` formats (DESIGN.md §9/§12/§14); v4 was
-# the first fleet-level format (v3 service payloads); v6 is the fleet format
-# whose per-shard payloads are v5 service snapshots (downdate ops in the
-# FIFOs).  v4 fleet snapshots still load — the payload loader accepts any
-# service version <= 5.
-FLEET_SNAPSHOT_VERSION = 6
+# The snapshot version line is shared with serve: v1-v3, v5 and v7 are
+# single-service ``ServiceSnapshot`` formats (DESIGN.md §9/§12/§14/§15); v4
+# was the first fleet-level format (v3 service payloads); v6 carried v5
+# service payloads (downdate ops in the FIFOs); v8 carries v7 payloads
+# (obs-metrics rows riding each shard's snapshot metadata, DESIGN.md §15).
+# v4/v6 fleet snapshots still load — the payload loader accepts any service
+# version <= 7, and missing obs rows restore as empty.
+FLEET_SNAPSHOT_VERSION = 8
 _SNAPSHOT_FORMAT = "repro.fleet.FleetSnapshot"
 
 # fleet-level config a snapshot records (admission shape; devices are
@@ -180,7 +182,7 @@ class SvdFleet:
         fleet.register("user-1", api.SvdState.from_dense(m1, rank=8))
         fleet.enqueue("user-1", a, b)       # routed, admitted, maybe sealed
         merged = fleet.query(["user-1", "user-2"])   # cross-shard Iwen-Ong
-        fleet.save("/ckpts/fleet", step=1)  # FleetSnapshot v4
+        fleet.save("/ckpts/fleet", step=1)  # FleetSnapshot v8
 
     ``continuous=True`` (default) runs each shard behind its admission
     window (``fleet.frontend``); ``False`` degrades every shard to the
@@ -287,7 +289,12 @@ class SvdFleet:
         return sum(s.drain() for s in self.shards)
 
     def stats(self) -> SvdServiceStats:
-        """Fleet-aggregate counters (sum over shards; ``max_*`` fields max)."""
+        """Fleet-aggregate counters (sum over shards; ``max_*`` fields max).
+
+        With ``repro.obs`` enabled the aggregate is also published as
+        ``fleet_<field>`` gauges — the rollup view over the per-shard
+        ``serve_<field>{shard=i}`` series each shard publishes on flush.
+        """
         agg = SvdServiceStats()
         for s in self.shards:
             st = s.service.stats
@@ -298,6 +305,10 @@ class SvdFleet:
                 else:
                     setattr(agg, f.name,
                             getattr(agg, f.name) + getattr(st, f.name))
+        if _obs.enabled():
+            reg = _obs.registry()
+            for f in dataclasses.fields(SvdServiceStats):
+                reg.gauge(f"fleet_{f.name}").set(getattr(agg, f.name))
         return agg
 
     # -- query-time cross-shard composition ---------------------------------

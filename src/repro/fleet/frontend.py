@@ -43,6 +43,7 @@ SLO — ``benchmarks/bench_fleet.py`` reports its p50/p99.
 
 from __future__ import annotations
 
+from repro import obs as _obs
 from repro.serve.svd_service import SvdService
 
 __all__ = ["ContinuousBatcher"]
@@ -115,15 +116,18 @@ class ContinuousBatcher:
     def _backpressure(self) -> None:
         if self.max_backlog is None or not self.continuous:
             return
-        while self.service.pending() >= self.max_backlog:
-            # blocked: the window is as deep as allowed — wait for the
-            # oldest round, then seal, freeing FIFO space
-            with self.service._lock:
-                if self.service._in_flight:
-                    self.service._retire_oldest()
-                    self.service.stats.backpressure_waits += 1
-            if not self.pump():
-                break    # nothing dispatchable: bound is all ops/pairs queued
+        if self.service.pending() < self.max_backlog:
+            return
+        with _obs.span("backpressure", **self.service._obs_labels):
+            while self.service.pending() >= self.max_backlog:
+                # blocked: the window is as deep as allowed — wait for the
+                # oldest round, then seal, freeing FIFO space
+                with self.service._lock:
+                    if self.service._in_flight:
+                        self.service._retire_oldest()
+                        self.service.stats.backpressure_waits += 1
+                if not self.pump():
+                    break   # nothing dispatchable: bound is all queued ops
 
     # -- sealing ------------------------------------------------------------
 
@@ -134,22 +138,24 @@ class ContinuousBatcher:
         continuous-batching admission the module doc describes).  This is
         the event-loop tick — callers with their own loop (the fleet, the
         benchmark driver) call it between arrivals."""
-        if not self.continuous:
+        if not self.continuous or not self.service.pending():
             return 0
         dispatched = 0
-        while self.service.pending() and self.service.has_capacity():
-            if self.device is not None:
-                import jax
+        with _obs.span("pump", **self.service._obs_labels) as sp:
+            while self.service.pending() and self.service.has_capacity():
+                if self.device is not None:
+                    import jax
 
-                with jax.default_device(self.device):
+                    with jax.default_device(self.device):
+                        n = self.service.flush_round(max_depth=self.max_depth)
+                else:
                     n = self.service.flush_round(max_depth=self.max_depth)
-            else:
-                n = self.service.flush_round(max_depth=self.max_depth)
-            if n == 0:
-                break
-            dispatched += n
-            if once:
-                break
+                if n == 0:
+                    break
+                dispatched += n
+                if once:
+                    break
+            sp.set(dispatched=dispatched)
         return dispatched
 
     def poll(self) -> list[int]:

@@ -49,6 +49,10 @@ class FleetShard:
             max_in_flight=max_in_flight,
             policy=policy,
         )
+        # per-shard series in the obs registry: every serve_* gauge and
+        # health_* probe this shard publishes carries shard=<index>, and
+        # registry().aggregate(...) rolls them into fleet totals
+        self.service._obs_labels = {"shard": str(index)}
         self.frontend = ContinuousBatcher(
             self.service,
             max_depth=max_depth,

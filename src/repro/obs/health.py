@@ -1,0 +1,215 @@
+"""Numerical-health probes + watchdog (DESIGN.md §15).
+
+The paper's O(n² log(1/ε)) update is only as trustworthy as its ε.  These
+probes compute, from factors the serving path already holds (no dense
+reconstruction, no reference SVD):
+
+* ``ortho_drift``        max(‖UᵀU−I‖_max, ‖VᵀV−I‖_max) — the phase-chain's
+                         orthogonality loss, the leading indicator of a
+                         degrading sketch.
+* ``deflation_fraction`` fraction of secular coordinates whose coupling
+                         z_i = (Uᵀa)_i (Vᵀb)_i falls under the deflation
+                         tolerance — how much of each update the solver
+                         short-circuits (high values mean the stream is
+                         nearly in-span; near-zero means every coordinate
+                         pays the full secular solve).
+* ``secular_residual``   max_i |(U₁ᵀ(U₀S₀V₀ᵀ + abᵀ)V₁)_ii − s₁_i| / s₁_max —
+                         the updated triplet's own eigen-residual, computed
+                         factored in O((m+n)r²).
+* ``bf16_headroom``      BF16_ERROR_BUDGET["sigma_rel"] minus the measured
+                         drift floor (storage-dtype quantization of the
+                         current spectrum, or ortho drift if larger).
+                         Positive = inside budget; ≤ 0 trips the watchdog.
+
+Every probe is a separate jitted function over the SAME arrays the service
+just flushed — probes never run inside the update's own traced path, so
+enabling them cannot change update jaxprs or results.  ``HealthMonitor``
+samples every N flushes (the ``UpdatePolicy.health_every`` knob), publishes
+gauges into the metrics registry, and raises ``HealthWarning`` (plus a
+``health_warnings_total`` counter) when a threshold trips.
+"""
+
+from __future__ import annotations
+
+import threading
+import warnings
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.obs import metrics as _metrics
+
+__all__ = [
+    "DEFAULT_THRESHOLDS",
+    "HealthReport",
+    "HealthMonitor",
+    "HealthWarning",
+    "ortho_drift",
+    "probe_state",
+    "probe_update",
+]
+
+
+class HealthWarning(RuntimeWarning):
+    """A numerical-health gauge crossed its configured threshold."""
+
+
+class HealthReport(NamedTuple):
+    """One sample of the health gauges (host floats, registry-ready)."""
+
+    ortho_drift: float
+    deflation_fraction: float
+    secular_residual: float
+    bf16_headroom: float
+
+
+# Gauges are "worse when larger" except bf16_headroom ("worse when smaller").
+# Defaults are deliberately loose — they flag broken states (a drifted
+# sketch, a budget blow-through), not working-precision noise.  f32 serving
+# sits around 1e-6 drift; f64 around 1e-14.
+DEFAULT_THRESHOLDS = {
+    "ortho_drift": 1e-3,
+    "secular_residual": 1e-3,
+    "bf16_headroom": 0.0,        # lower bound: warn at/below zero headroom
+}
+_LOWER_IS_BAD = frozenset({"bf16_headroom"})
+
+# sigma_rel budget for bf16 storage (kernels.fused_update pins the table;
+# imported lazily so repro.obs does not pull the Pallas stack at import).
+_BF16_SIGMA_BUDGET = 5e-2
+
+
+@jax.jit
+def _ortho_drift_impl(u, v):
+    uf = u.astype(jnp.float32) if u.dtype.itemsize <= 2 else u
+    vf = v.astype(jnp.float32) if v.dtype.itemsize <= 2 else v
+    r_u = jnp.eye(uf.shape[1], dtype=uf.dtype) - uf.T @ uf
+    r_v = jnp.eye(vf.shape[1], dtype=vf.dtype) - vf.T @ vf
+    return jnp.maximum(jnp.max(jnp.abs(r_u)), jnp.max(jnp.abs(r_v)))
+
+
+def ortho_drift(u, v) -> jax.Array:
+    """max(‖UᵀU−I‖_max, ‖VᵀV−I‖_max) for one state's factors (jitted)."""
+    return _ortho_drift_impl(u, v)
+
+
+@jax.jit
+def _probe_update_impl(u0, s0, v0, a, b, u1, s1, v1, rtol):
+    cd = jnp.float32 if u0.dtype.itemsize <= 2 else u0.dtype
+    u0f, v0f, s0f = u0.astype(cd), v0.astype(cd), s0.astype(cd)
+    u1f, v1f, s1f = u1.astype(cd), v1.astype(cd), s1.astype(cd)
+    af, bf = a.astype(cd), b.astype(cd)
+
+    drift = _ortho_drift_impl(u1, v1)
+
+    # deflation coupling on the pre-update basis: z_i = (U0^T a)_i (V0^T b)_i
+    z = (u0f.T @ af) * (v0f.T @ bf)
+    zmax = jnp.max(jnp.abs(z))
+    tiny = jnp.asarray(jnp.finfo(cd).tiny, cd)
+    hits = jnp.abs(z) <= rtol * (zmax + tiny)
+    defl = jnp.mean(hits.astype(cd))
+
+    # factored eigen-residual of the updated triplet:
+    #   C = U1^T (U0 diag(s0) V0^T + a b^T) V1   (O((m+n) r^2), never dense)
+    core = ((u1f.T @ u0f) * s0f[None, :]) @ (v0f.T @ v1f) \
+        + jnp.outer(u1f.T @ af, bf @ v1f)
+    smax = jnp.max(s1f) + tiny
+    resid = jnp.max(jnp.abs(jnp.diagonal(core) - s1f)) / smax
+
+    # bf16 headroom: budget minus the measured drift floor — storage-dtype
+    # quantization of the current spectrum, or ortho drift if larger.
+    quant = jnp.max(jnp.abs(s1f - s1.astype(u1.dtype).astype(cd))) / smax
+    headroom = _BF16_SIGMA_BUDGET - jnp.maximum(quant, drift.astype(cd))
+
+    return drift, defl, resid, headroom
+
+
+def probe_update(u0, s0, v0, a, b, u1, s1, v1, *,
+                 deflate_rtol: float | None = None) -> HealthReport:
+    """Full health sample around one applied update.
+
+    ``(u0, s0, v0)`` is the state the rank-1 pair ``(a, b)`` was applied to,
+    ``(u1, s1, v1)`` the result.  One jitted call (cached per geometry);
+    returns host floats.
+    """
+    if deflate_rtol is None:
+        cd = jnp.float32 if jnp.dtype(u0.dtype).itemsize <= 2 else u0.dtype
+        deflate_rtol = 64.0 * float(jnp.finfo(cd).eps)
+    drift, defl, resid, headroom = _probe_update_impl(
+        u0, s0, v0, a, b, u1, s1, v1, jnp.asarray(deflate_rtol))
+    return HealthReport(float(drift), float(defl), float(resid),
+                        float(headroom))
+
+
+def probe_state(u, s, v) -> HealthReport:
+    """Health sample from a bare state (no update pair in hand): ortho
+    drift + quantization headroom; deflation/secular gauges report 0."""
+    drift = float(_ortho_drift_impl(u, v))
+    cd = jnp.float32 if jnp.dtype(u.dtype).itemsize <= 2 else jnp.dtype(u.dtype)
+    sf = s.astype(cd)
+    smax = float(jnp.max(sf)) or 1.0
+    quant = float(jnp.max(jnp.abs(sf - s.astype(u.dtype).astype(cd)))) / smax
+    return HealthReport(drift, 0.0, 0.0,
+                        _BF16_SIGMA_BUDGET - max(quant, drift))
+
+
+class HealthMonitor:
+    """Samples health probes every N flushes and publishes gauges.
+
+    ``every=N`` sets the cadence (``maybe_sample`` fires on every Nth
+    tick); ``thresholds`` maps gauge name → limit (above = bad, except
+    ``bf16_headroom`` where below = bad).  A trip raises ``HealthWarning``
+    via ``warnings.warn`` and bumps ``health_warnings_total{probe=...}``.
+    """
+
+    def __init__(self, *, every: int = 1, thresholds: dict | None = None,
+                 registry: "_metrics.MetricsRegistry | None" = None,
+                 **labels):
+        if every < 1:
+            raise ValueError(f"health_every must be >= 1; got {every}")
+        self.every = every
+        self.thresholds = dict(DEFAULT_THRESHOLDS if thresholds is None
+                               else thresholds)
+        self.labels = labels
+        self._registry = registry
+        self._ticks = 0
+        self._lock = threading.Lock()
+        self.last: HealthReport | None = None
+
+    @property
+    def registry(self) -> "_metrics.MetricsRegistry":
+        return self._registry if self._registry is not None else _metrics.registry()
+
+    def due(self) -> bool:
+        """Advance the flush tick; True when this tick should sample."""
+        with self._lock:
+            self._ticks += 1
+            return self._ticks % self.every == 0
+
+    def record(self, report: HealthReport) -> HealthReport:
+        """Publish one report as gauges and run the watchdog."""
+        reg = self.registry
+        for name, value in report._asdict().items():
+            reg.gauge(f"health_{name}", **self.labels).set(value)
+            limit = self.thresholds.get(name)
+            if limit is None:
+                continue
+            bad = value <= limit if name in _LOWER_IS_BAD else value >= limit
+            if bad:
+                reg.counter("health_warnings_total", probe=name,
+                            **self.labels).inc()
+                warnings.warn(
+                    f"health watchdog: {name}={value:.3e} crossed "
+                    f"threshold {limit:.3e}", HealthWarning, stacklevel=3)
+        self.last = report
+        return report
+
+    def sample_update(self, u0, s0, v0, a, b, u1, s1, v1, *,
+                      deflate_rtol: float | None = None) -> HealthReport:
+        return self.record(probe_update(u0, s0, v0, a, b, u1, s1, v1,
+                                        deflate_rtol=deflate_rtol))
+
+    def sample_state(self, u, s, v) -> HealthReport:
+        return self.record(probe_state(u, s, v))

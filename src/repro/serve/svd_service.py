@@ -84,6 +84,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as _obs
 from repro.api import SvdState, UpdatePolicy, as_state
 from repro.api.update import engine_from_key, warmup as _api_warmup
 from repro.core.engine import (
@@ -107,10 +108,11 @@ __all__ = [
     "SvdServiceStats",
 ]
 
-# v4 is NOT a service format: the fleet tier's FleetSnapshot (which embeds
-# per-shard ServiceSnapshots) took 4 on the shared version line — see
-# ``repro.fleet.fleet.FLEET_SNAPSHOT_VERSION`` and DESIGN.md §14's table.
-SNAPSHOT_VERSION = 5
+# v4 and v6 are NOT service formats: the fleet tier's FleetSnapshot (which
+# embeds per-shard ServiceSnapshots) took them on the shared version line —
+# see ``repro.fleet.fleet.FLEET_SNAPSHOT_VERSION`` and DESIGN.md §14's table.
+# v7 (current) added the ``obs_metrics`` registry capture (DESIGN.md §15).
+SNAPSHOT_VERSION = 7
 _SNAPSHOT_FORMAT = "repro.serve.ServiceSnapshot"
 
 # UpdatePolicy fields a snapshot records verbatim. ``mesh`` is deliberately
@@ -127,6 +129,7 @@ _POLICY_SPEC_FIELDS = (
     "sketch_power_iters",
     "batch_axis",
     "truncate_to",
+    "health_every",
 )
 
 # policy fields added after SNAPSHOT_VERSION was minted: old snapshots lack
@@ -135,7 +138,17 @@ _POLICY_SPEC_DEFAULTS = {
     "storage_dtype": None,
     "sketch_oversample": 8,
     "sketch_power_iters": 1,
+    "health_every": None,
 }
+
+
+def _obs_rows(rows) -> tuple:
+    """Re-hash registry snapshot rows after a JSON round trip (the aux spec
+    turns tuples into lists; pytree metadata must be hashable)."""
+    return tuple(
+        (name, tuple((str(k), str(v)) for k, v in labels), kind, state)
+        for name, labels, kind, state in rows
+    )
 
 
 def _policy_spec(policy: UpdatePolicy) -> dict:
@@ -181,6 +194,7 @@ class SvdServiceStats:
         "stats",
         "pending_order",
         "warmed",
+        "obs_metrics",
     ],
 )
 @dataclasses.dataclass(frozen=True)
@@ -217,7 +231,11 @@ class ServiceSnapshot:
     so v1–v3 snapshots load unchanged; pre-downdate builds refuse v5
     cleanly.  v4 was never a service format (the fleet tier's
     ``FleetSnapshot`` took it on the shared version line), so the service
-    skips from 3 to 5.
+    skips from 3 to 5.  v5 -> v7 added ``obs_metrics`` — a
+    ``repro.obs.MetricsRegistry.snapshot()`` capture (hashable metadata,
+    zero array leaves, empty when obs is disabled) so telemetry counters
+    survive failover exactly like the stats counters do; v1–v5 snapshots
+    load with the empty default, and v6 was the fleet tier's again.
     """
 
     states: tuple          # tuple[SvdState, ...] — diagnostics-free, per stream
@@ -233,6 +251,7 @@ class ServiceSnapshot:
     stats: tuple = ()         # SvdServiceStats counters as (name, value) pairs
     pending_order: tuple = () # per stream: "p"/"o" markers in FIFO order
     warmed: tuple = ()        # (kind, batch, m, n, rank, dtype_str) tuples
+    obs_metrics: tuple = ()   # MetricsRegistry.snapshot() rows (v7+; hashable)
 
     def aux(self) -> dict:
         """The JSON spec persisted next to the arrays (checkpoint ``aux=``)."""
@@ -251,6 +270,7 @@ class ServiceSnapshot:
                 for stream_ops in self.pending_ops
             ],
             "warmed": [list(w) for w in self.warmed],
+            "obs_metrics": [list(r) for r in self.obs_metrics],
         }
 
     @classmethod
@@ -281,6 +301,7 @@ class ServiceSnapshot:
             stats=tuple((k, v) for k, v in aux["stats"].items()),
             pending_order=tuple(aux.get("pending_order", ())),
             warmed=tuple(tuple(w) for w in aux.get("warmed", ())),
+            obs_metrics=_obs_rows(aux.get("obs_metrics", ())),
         )
 
     def save(self, ckpt_dir, step: int, *, keep: int = 3):
@@ -373,6 +394,11 @@ class SvdService:
         self._next_token = 0                     # visibility tokens (runtime-only)
         self._visible: list[int] = []            # retired tokens, FIFO, undrained
         self._lock = threading.RLock()
+        # observability (repro.obs, DESIGN.md §15): the fleet tier grafts
+        # per-shard labels on; the health monitor follows policy.health_every
+        self._obs_labels: dict = {}
+        self._health: "_obs.HealthMonitor | None" = None
+        self._stat_gauges: tuple | None = None   # cached (field, gauge) handles
 
     # -- visibility tokens ---------------------------------------------------
     #
@@ -777,8 +803,30 @@ class SvdService:
 
     def _retire_oldest(self) -> None:
         outputs, tokens = self._in_flight.popleft()
-        jax.block_until_ready(outputs)
+        with _obs.span("reap", outputs=len(outputs)):
+            jax.block_until_ready(outputs)
         self._visible.extend(tokens)
+
+    # -- observability (repro.obs) ------------------------------------------
+
+    def _publish_stats(self) -> None:
+        """Mirror the stats counter bag into the metrics registry (gauges —
+        idempotent re-publication after every flush; the fleet tier labels
+        each shard's series and ``registry().aggregate`` rolls them up)."""
+        reg = _obs.registry()
+        cache_key = (reg, reg.generation)
+        if self._stat_gauges is None or self._stat_gauges[0] != cache_key:
+            self._stat_gauges = (cache_key, [
+                (f.name, reg.gauge(f"serve_{f.name}", **self._obs_labels))
+                for f in dataclasses.fields(SvdServiceStats)])
+        for name, gauge in self._stat_gauges[1]:
+            gauge.set(getattr(self.stats, name))
+
+    def _health_monitor(self) -> "_obs.HealthMonitor":
+        if self._health is None:
+            self._health = _obs.HealthMonitor(
+                every=self.policy.health_every or 1, **self._obs_labels)
+        return self._health
 
     def _barrier(self) -> None:
         """Block until every dispatched round AND every stream state is
@@ -819,11 +867,21 @@ class SvdService:
         batched engine calls (at most one event per stream at depth 1, up to
         ``max_depth`` consecutive pairs as a scan column otherwise);
         op-headed streams (appends, decay folds) apply through the planner —
-        all dispatched async."""
+        all dispatched async.  Each round is one ``flush_round`` trace span;
+        with obs enabled the stats bag mirrors into the registry afterwards
+        and the health monitor samples on its ``policy.health_every`` cadence.
+        """
         live_ids = [sid for sid, q in self._pending.items() if q]
         if not live_ids:
             return 0
+        with _obs.span("flush_round", streams=len(live_ids),
+                       max_depth=max_depth):
+            applied = self._flush_round_impl(live_ids, max_depth)
+        if _obs.enabled():
+            self._publish_stats()
+        return applied
 
+    def _flush_round_impl(self, live_ids: list, max_depth: int) -> int:
         # Backpressure: bound how far the host can run ahead of the device.
         self._reap_ready()
         while self.max_in_flight > 0 and len(self._in_flight) >= self.max_in_flight:
@@ -876,6 +934,14 @@ class SvdService:
             else:
                 depths[sid] = 1
 
+        # health sampling: decide once per round; the first depth-1 group's
+        # (pre-state, pair, post-state) triple feeds one probe after dispatch
+        sample_due = (
+            _obs.enabled() and self.policy.health_every is not None
+            and self._health_monitor().due()
+        )
+        probe_args = None
+
         keys = [truncated_geometry(self._streams[sid]) + (depths[sid],)
                 for sid in round_ids]
 
@@ -926,18 +992,24 @@ class SvdService:
             if self.policy.mesh is None:
                 kind = "trunc_batch" if k == 1 else f"trunc_scan{k}"
                 self._record_warm(kind, bsz + pad, m, n, r, dt)
-            if k == 1:
-                out = eng.update_truncated_batch(
-                    t_stack, a_stack, b_stack,
-                    mesh=self.policy.mesh, batch_axis=self.policy.batch_axis,
-                )
-            else:
-                out = eng.update_truncated_rank_k_batch(
-                    t_stack, a_stack, b_stack,
-                    mesh=self.policy.mesh, batch_axis=self.policy.batch_axis,
-                )
-                self.stats.scan_rounds += 1
-                self.stats.max_depth = max(self.stats.max_depth, k)
+            with _obs.span("dispatch", m=m, n=n, rank=r, batch=bsz + pad,
+                           depth=k):
+                if k == 1:
+                    out = eng.update_truncated_batch(
+                        t_stack, a_stack, b_stack,
+                        mesh=self.policy.mesh, batch_axis=self.policy.batch_axis,
+                    )
+                else:
+                    out = eng.update_truncated_rank_k_batch(
+                        t_stack, a_stack, b_stack,
+                        mesh=self.policy.mesh, batch_axis=self.policy.batch_axis,
+                    )
+                    self.stats.scan_rounds += 1
+                    self.stats.max_depth = max(self.stats.max_depth, k)
+            if sample_due and probe_args is None and k == 1:
+                st1 = unstack_tree(out, 0)
+                probe_args = (states[0].u, states[0].s, states[0].v,
+                              a_stack[0], b_stack[0], st1.u, st1.s, st1.v)
             for j, sid in enumerate(sids):
                 t = unstack_tree(out, j)
                 self._streams[sid] = SvdState(u=t.u, s=t.s, v=t.v)
@@ -960,6 +1032,11 @@ class SvdService:
             )
         self.stats.flushes += 1
         self.stats.applied += applied
+        if probe_args is not None:
+            # separate jitted probe over the just-flushed factors — outside
+            # the update's traced path; forces the sampled state concrete
+            self._health_monitor().sample_update(
+                *probe_args, deflate_rtol=self.policy.deflate_rtol)
         return applied + ops_applied
 
     # -- checkpointing ------------------------------------------------------
@@ -1022,6 +1099,10 @@ class SvdService:
                 stats=tuple(dataclasses.asdict(self.stats).items()),
                 pending_order=tuple(orders),
                 warmed=tuple(sorted(self._warmed)),
+                # telemetry rides the snapshot like the stats bag does —
+                # captured only when obs is on (empty tuple otherwise)
+                obs_metrics=(_obs.registry().snapshot()
+                             if _obs.enabled() else ()),
             )
 
     def save(self, ckpt_dir, step: int, *, keep: int = 3):
@@ -1098,6 +1179,8 @@ class SvdService:
                     m_eff, n_eff = ev[1].out_shape(m_eff, n_eff)
             svc._eff_shape[sid] = (m_eff, n_eff)
         svc.stats = SvdServiceStats(**dict(snap.stats))
+        if snap.obs_metrics:
+            _obs.registry().restore(snap.obs_metrics)
         svc._warmed = {tuple(w) for w in snap.warmed}
         # cold-start control (ROADMAP item): eagerly AOT-warm every
         # (kind, geometry) the snapshotted service had compiled, so the first

@@ -51,6 +51,7 @@ from typing import NamedTuple, Sequence
 import jax.numpy as jnp
 from jax import lax
 
+from repro import obs as _obs
 from repro.api.policy import UpdatePolicy
 from repro.api.state import SvdState, as_state
 from repro.api.update import update, update_rank_k, warmup
@@ -256,9 +257,17 @@ def lower(op: UpdateOp, state, policy: UpdatePolicy | None = None) -> tuple:
         plan = _cache.get(key)
         if plan is not None:
             _hits += 1
-            return plan
-        _misses += 1
-    steps, _ = _build(key[0], st.m, st.n, st.rank, st.is_full, ())
+        else:
+            _misses += 1
+    if plan is not None:
+        if _obs.enabled():
+            _obs.registry().counter("planner_schedule_cache_hits").inc()
+        return plan
+    if _obs.enabled():
+        _obs.registry().counter("planner_schedule_cache_misses").inc()
+    with _obs.span("schedule_compile", op=key[0][0], m=st.m, n=st.n,
+                   rank=st.rank):
+        steps, _ = _build(key[0], st.m, st.n, st.rank, st.is_full, ())
     plan = tuple(steps)
     with _lock:
         _cache[key] = plan

@@ -271,7 +271,7 @@ def test_snapshot_roundtrip_in_process(tmp_path):
     fl = _fleet(3)
     _feed(fl, _traffic(14))
     snap = fl.snapshot()
-    assert snap.version == FLEET_SNAPSHOT_VERSION == 6
+    assert snap.version == FLEET_SNAPSHOT_VERSION == 8
     assert snap.placement == fl.placement
     assert dict(snap.config)["continuous"] is False
     fl.save(tmp_path, step=14)

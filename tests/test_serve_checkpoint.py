@@ -624,7 +624,7 @@ def test_snapshot_v5_downdate_pending_bitwise(tmp_path):
     svc = build()
     assert svc._effective_shape("x") == (5, n - 1)
     snap = svc.snapshot()
-    assert snap.version == SNAPSHOT_VERSION == 5
+    assert snap.version == SNAPSHOT_VERSION == 7
     assert "".join(snap.pending_order) == "pooo" + "o"
     # downdate indices live in the aux spec (metadata), not in array leaves
     specs = json.dumps(snap.aux())
@@ -660,18 +660,18 @@ def test_snapshot_v3_loads_as_v5():
 
 
 def test_snapshot_v3_aux_refuses_v5_and_loads_older(tmp_path):
-    """Version discipline on disk: a v3-stamped file loads (<= 5), a
-    v6-stamped ServiceSnapshot is refused — the fleet owns v6."""
+    """Version discipline on disk: a v3-stamped file loads (<= 7), a
+    v8-stamped ServiceSnapshot is refused — the fleet owns v8."""
     svc = SvdService(max_batch=4)
     svc.register("x", _fresh(6, 7, 2))
     old = dataclasses.replace(svc.snapshot(), version=3)
     old.save(tmp_path / "v3", step=1)
     _, loaded = ServiceSnapshot.load(tmp_path / "v3")
     assert loaded.states[0].shape == (6, 7)
-    fleet_stamped = dataclasses.replace(svc.snapshot(), version=6)
-    fleet_stamped.save(tmp_path / "v6", step=1)
+    fleet_stamped = dataclasses.replace(svc.snapshot(), version=8)
+    fleet_stamped.save(tmp_path / "v8", step=1)
     with pytest.raises(ValueError, match="newer"):
-        ServiceSnapshot.load(tmp_path / "v6")
+        ServiceSnapshot.load(tmp_path / "v8")
 
 
 _DOWNDATE_KILL_RESUME_SCRIPT = textwrap.dedent("""
